@@ -1,0 +1,150 @@
+"""Shared helpers for the BuffetFS paper benchmarks.
+
+All three systems (BuffetFS, Lustre-Normal, Lustre-DoM) run over identical
+BServer storage and the same InProcTransport with the calibrated latency
+model (200us RTT / 20us service / ~5.5GiB/s), so differences measure the
+PROTOCOL — the paper's variable.  Each test group regenerates its file set
+(paper §4: "we regenerate the files set for each test").
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from contextlib import contextmanager
+from typing import Callable, Iterator, List, Tuple
+
+from repro.core import (BAgent, BLib, BuffetCluster, LustreDoMClient,
+                        LustreNormalClient)
+from repro.core.perms import O_CREAT, O_RDONLY, O_TRUNC, O_WRONLY
+from repro.core.transport import LatencyModel
+
+# calibrated to the paper's testbed scale: Lustre 2.10 over IB with
+# HDD-RAID6 storage serves a small-file metadata/data op in O(1ms)
+# (paper Fig. 3 latencies are milliseconds).  ms-scale injection also keeps
+# host-Python overhead (~0.1ms/op on this container) second-order.
+DEFAULT_LATENCY = LatencyModel(rtt_us=1500.0, per_mib_us=2000.0,
+                               service_us=800.0)
+
+
+@contextmanager
+def fresh_cluster(n_servers: int = 4, latency: LatencyModel = DEFAULT_LATENCY
+                  ) -> Iterator[BuffetCluster]:
+    root = tempfile.mkdtemp(prefix="buffet_bench_")
+    cluster = BuffetCluster(root_dir=root, n_servers=n_servers,
+                            latency=latency)
+    try:
+        yield cluster
+    finally:
+        cluster.shutdown()
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def mkfiles(cluster: BuffetCluster, n_files: int, size: int,
+            n_dirs: int = 1, prefix: str = "/bench",
+            system: str = "buffetfs") -> List[str]:
+    """Create the benchmark file set through a zero-latency admin path.
+
+    For the Lustre baselines the ENTIRE namespace must live on the MDS
+    (host 0), so the file set is created through the baseline's own client
+    (MDS-rooted mkdir/create); BuffetFS uses its decentralized placement.
+    """
+    lat = cluster.transport.latency
+    cluster.transport.latency = LatencyModel(0, 0, 0)
+    payload = b"x" * size
+    paths = []
+    if system == "buffetfs":
+        agent = BAgent(cluster)
+        lib = BLib(agent)
+        for d in range(n_dirs):
+            dname = f"{prefix}/d{d:03d}"
+            lib.makedirs(dname)
+            for i in range(n_files // n_dirs):
+                p = f"{dname}/f{i:05d}"
+                lib.write_file(p, payload)
+                paths.append(p)
+        agent.drain()
+        agent.shutdown()
+    else:
+        import errno as _errno
+        from repro.core.inode import Inode
+        from repro.core.wire import Message, MsgType
+        c = LustreNormalClient(cluster)
+        try:
+            c.mkdir(prefix)
+        except OSError as e:
+            if e.errno != _errno.EEXIST:
+                raise
+        # data placement: DoM keeps small-file data ON the MDS (host 0);
+        # Lustre-Normal stripes data objects to the OSSes (hosts 1..n-1)
+        oss_hosts = ([0] if system == "lustre-dom" or cluster.n_servers == 1
+                     else list(range(1, cluster.n_servers)))
+        osc = 0
+        root_fid = Inode.unpack(cluster.root_ino).file_id
+        for d in range(n_dirs):
+            dname = f"{prefix}/d{d:03d}"
+            try:
+                c.mkdir(dname)
+            except OSError as e:
+                if e.errno != _errno.EEXIST:
+                    raise
+            parent_fid, _ = c._resolve_parent(dname + "/x")
+            for i in range(n_files // n_dirs):
+                p = f"{dname}/f{i:05d}"
+                host = oss_hosts[osc % len(oss_hosts)]
+                osc += 1
+                r1 = c._rpc(host, Message(MsgType.MKNOD_OBJ, {
+                    "is_dir": False, "mode": 0o644, "uid": 0, "gid": 0}))
+                c._rpc(0, Message(MsgType.LINK_DENTRY, {
+                    "parent": parent_fid, "name": p.rsplit("/", 1)[1],
+                    "ino": r1.header["ino"], "perm": r1.header["perm"]}))
+                fid = Inode.unpack(r1.header["ino"]).file_id
+                c._rpc(host, Message(MsgType.WRITE,
+                                     {"file_id": fid, "offset": 0}, payload))
+                paths.append(p)
+        c.drain()
+        c.shutdown()
+    cluster.transport.latency = lat
+    return paths
+
+
+def make_client(kind: str, cluster: BuffetCluster):
+    if kind == "buffetfs":
+        agent = BAgent(cluster)
+        return agent, agent
+    if kind == "lustre-normal":
+        c = LustreNormalClient(cluster)
+        return c, c
+    if kind == "lustre-dom":
+        c = LustreDoMClient(cluster)
+        return c, c
+    raise KeyError(kind)
+
+
+def access_file(client, path: str, *, read: bool = True,
+                payload: bytes = b"") -> None:
+    """The paper's measured unit: open() + read()/write() + close()."""
+    if read:
+        fd = client.open(path, O_RDONLY)
+        client.read(fd)
+    else:
+        fd = client.open(path, O_WRONLY | O_CREAT | O_TRUNC)
+        client.write(fd, payload)
+    client.close(fd)
+
+
+def timeit_us(fn: Callable[[], None], warmup: int = 2, iters: int = 10
+              ) -> Tuple[float, float]:
+    """Median per-call latency in us (median suppresses scheduler-wakeup
+    outliers from the async-close worker thread on a single core)."""
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    mid = samples[len(samples) // 2]
+    return mid * 1e6, float(iters)

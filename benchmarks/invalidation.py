@@ -1,0 +1,52 @@
+"""Paper §3.4: cost of permission modification vs number of caching clients.
+
+BuffetFS trades open() RPCs for invalidation fan-out on chmod: the server
+must contact every caching client and WAIT for acks before applying the
+change.  This benchmark quantifies that price (the paper argues permission
+changes "usually don't occur frequently")."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import fresh_cluster, make_client, mkfiles, timeit_us
+from repro.core import BAgent, BLib, Credentials
+from repro.core.perms import O_RDONLY
+
+
+def run(client_counts=(0, 1, 4, 16)) -> List[Dict]:
+    rows = []
+    for n_clients in client_counts:
+        with fresh_cluster() as cluster:
+            paths = mkfiles(cluster, n_files=2, size=1024)
+            owner = BAgent(cluster, cred=Credentials(uid=0))
+            ol = BLib(owner)
+            watchers = []
+            for _ in range(n_clients):
+                a = BAgent(cluster)
+                fd = a.open(paths[0], O_RDONLY)   # caches the directory
+                a.read(fd)
+                a.close(fd)
+                watchers.append(a)
+
+            mode = [0o640]
+
+            def flip():
+                mode[0] = 0o600 if mode[0] == 0o640 else 0o640
+                ol.chmod(paths[0], mode[0])
+
+            us, _ = timeit_us(flip, warmup=1, iters=10)
+            rows.append({"bench": "invalidation", "caching_clients": n_clients,
+                         "chmod_us": round(us, 1)})
+            for a in watchers:
+                a.shutdown()
+            owner.shutdown()
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(f"invalidation,clients={r['caching_clients']},{r['chmod_us']}us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""RPC-count table (paper §1/§3): critical-path and async RPCs per
+open-read-close and open-write-close sequence, per system, cold vs warm
+directory cache.  This is the paper's mechanism stated as a table:
+Lustre >= 3 round trips (close async) -> BuffetFS exactly 1 on the
+critical path."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from .common import access_file, fresh_cluster, make_client, mkfiles
+from repro.core.transport import LatencyModel
+
+SYSTEMS = ("buffetfs", "lustre-normal", "lustre-dom")
+
+
+def run() -> List[Dict]:
+    rows = []
+    for system in SYSTEMS:
+        for op in ("read", "write"):
+            with fresh_cluster(latency=LatencyModel(0, 0, 0)) as cluster:
+                paths = mkfiles(cluster, n_files=4, size=4096, system=system)
+                client, owner = make_client(system, cluster)
+                # cold: first access (includes directory fetches)
+                owner.stats.reset()
+                access_file(client, paths[0], read=(op == "read"),
+                            payload=b"y" * 4096)
+                _drain(client)
+                cold = owner.stats.snapshot()
+                # warm: directory cache hot
+                owner.stats.reset()
+                access_file(client, paths[1], read=(op == "read"),
+                            payload=b"y" * 4096)
+                _drain(client)
+                warm = owner.stats.snapshot()
+                rows.append({
+                    "bench": "rpc_table", "system": system, "op": op,
+                    "cold_critical": cold["critical_path"],
+                    "cold_async": cold["async_offpath"],
+                    "warm_critical": warm["critical_path"],
+                    "warm_async": warm["async_offpath"],
+                })
+                if hasattr(client, "shutdown"):
+                    client.shutdown()
+    return rows
+
+
+def _drain(client) -> None:
+    if hasattr(client, "drain"):
+        client.drain()
+    time.sleep(0.01)
+
+
+def main() -> None:
+    for r in run():
+        print(f"rpc,{r['system']},{r['op']},cold={r['cold_critical']}"
+              f"+{r['cold_async']}async,warm={r['warm_critical']}"
+              f"+{r['warm_async']}async")
+
+
+if __name__ == "__main__":
+    main()

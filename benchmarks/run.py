@@ -1,0 +1,74 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the roofline table when
+dry-run artifacts exist).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller sweeps")
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_latency, fig4_concurrency, invalidation,
+                            rpc_table)
+
+    print("name,us_per_call,derived")
+    rows = []
+
+    # Figure 3: single-file access latency
+    for r in fig3_latency.run(sizes=(4096,) if args.quick else fig3_latency.SIZES,
+                              iters=10 if args.quick else 20):
+        rows.append(r)
+        print(f"fig3_{r['system']}_{r['size']}B,{r['us_per_access']},"
+              f"crit_rpcs={r['critical_rpcs_per_access']}", flush=True)
+
+    # Figure 4: concurrent access
+    for r in fig4_concurrency.run(workers=(1, 4) if args.quick else (1, 2, 4, 8),
+                                  files_per_worker=50 if args.quick else 100,
+                                  n_files=500 if args.quick else 2000):
+        rows.append(r)
+        print(f"fig4_{r['system']}_w{r['workers']},{r['us_per_access']},"
+              f"total_s={r['total_s']}", flush=True)
+
+    # RPC table (the mechanism itself)
+    for r in rpc_table.run():
+        rows.append(r)
+        print(f"rpc_{r['system']}_{r['op']},{r['warm_critical']},"
+              f"cold={r['cold_critical']}+{r['cold_async']}async", flush=True)
+
+    # §3.4 invalidation cost
+    for r in invalidation.run(client_counts=(0, 4) if args.quick
+                              else (0, 1, 4, 16)):
+        rows.append(r)
+        print(f"invalidation_c{r['caching_clients']},{r['chmod_us']},",
+              flush=True)
+
+    out = os.path.join(os.path.dirname(__file__), "results", "paper_bench.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    # Roofline (requires dry-run artifacts)
+    try:
+        from benchmarks import roofline
+        rrows = roofline.run()
+        if rrows:
+            print()
+            print(roofline.fmt_table(rrows))
+    except (FileNotFoundError, json.JSONDecodeError):
+        print("roofline,skipped,no dryrun.json (run repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

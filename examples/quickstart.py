@@ -1,0 +1,86 @@
+"""Quickstart: BuffetFS in 60 seconds.
+
+Spins up a 4-server decentralized BuffetFS cluster, shows the paper's
+mechanism (zero-RPC open() once directories are cached, deferred open
+recording, async close), compares RPC counts against the Lustre baselines,
+and runs a few training steps fed by a BuffetFS-served corpus.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (BAgent, BLib, BuffetCluster, LustreNormalClient,
+                        O_RDONLY)
+
+
+def main() -> None:
+    root = tempfile.mkdtemp(prefix="buffetfs_quickstart_")
+    cluster = BuffetCluster(root_dir=root, n_servers=4)
+    agent = BAgent(cluster)
+    lib = BLib(agent)
+
+    # --- 1. the namespace is decentralized: dirs hash to servers ----------
+    lib.makedirs("/data/shard_a")
+    lib.makedirs("/data/shard_b")
+    for i in range(16):
+        lib.write_file(f"/data/shard_a/sample_{i}.bin", os.urandom(256))
+    print("[1] wrote 16 small files across", cluster.n_servers, "servers")
+
+    # --- 2. the paper's headline: open() with ZERO rpcs -------------------
+    agent.warm("/data/shard_a")
+    agent.drain()
+    agent.stats.reset()
+    fd = agent.open("/data/shard_a/sample_7.bin", O_RDONLY)
+    print("[2] open() issued", agent.stats.total, "RPCs "
+          "(permission checked client-side from the cached 10-byte records)")
+    data = agent.read(fd)
+    agent.close(fd)  # returns immediately; CLOSE rpc is async
+    agent.drain()
+    snap = agent.stats.snapshot()
+    print(f"    full open/read/close: {snap['critical_path']} critical RPC, "
+          f"{snap['async_offpath']} async ({snap['by_type']})")
+
+    # --- 3. versus Lustre-Normal (its namespace lives on the MDS) ---------
+    from repro.core.perms import O_CREAT, O_WRONLY
+    lc = LustreNormalClient(cluster)
+    lc.mkdir("/lustre")
+    wfd = lc.open("/lustre/sample.bin", O_WRONLY | O_CREAT)
+    lc.write(wfd, os.urandom(256))
+    lc.close(wfd)
+    lc.drain()
+    lc.stats.reset()
+    lfd = lc.open("/lustre/sample.bin", O_RDONLY)
+    lc.read(lfd)
+    lc.close(lfd)
+    lc.drain()
+    lsnap = lc.stats.snapshot()
+    print(f"[3] lustre-normal same access: {lsnap['critical_path']} critical "
+          f"RPCs ({lsnap['by_type']})")
+    lc.shutdown()
+
+    # --- 4. a few training steps over a BuffetFS-served pipeline ----------
+    from repro.launch.train import Trainer, TrainerConfig
+    tc = TrainerConfig(arch="stablelm-3b", steps=6, global_batch=4,
+                       seq_len=32, ckpt_every=3, log_every=3,
+                       data_dir=root, n_servers=4)
+    t0 = time.time()
+    tr = Trainer(tc, cluster=cluster)
+    out = tr.run()
+    print(f"[4] trained 6 steps in {time.time()-t0:.1f}s, "
+          f"loss={out['final_loss']:.3f}, "
+          f"{out['critical_rpcs']} critical / {out['async_rpcs']} async RPCs")
+    tr.pipeline.stop()
+    agent.shutdown()
+    cluster.shutdown()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

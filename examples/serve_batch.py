@@ -1,0 +1,37 @@
+"""Batched serving example: prefill a batch of prompts, stream greedy decode
+through the same serve_step the multi-pod dry-run lowers.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch chatglm3-6b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.launch.serve import Server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    srv = Server(args.arch, reduced=True, max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, srv.cfg.vocab_size,
+                           size=(args.batch, args.prompt_len)).astype(np.int32)
+    out = srv.generate(prompts, args.tokens)
+    print(f"[serve] {args.arch} (reduced): prefill {out['prefill_s']*1e3:.0f}ms, "
+          f"{out['decode_tok_per_s']:.1f} tok/s decode")
+    print("[serve] first 8 generated ids per sequence:")
+    print(out["tokens"][:, :8])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps,
+fed entirely through BuffetFS (small-file corpus, prefetch + hedged reads)
+with async atomic checkpointing and crash-safe resume.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+    PYTHONPATH=src python examples/train_e2e.py --steps 300 --resume  # after kill
+"""
+import argparse
+import os
+import sys
+from dataclasses import replace
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import Trainer, TrainerConfig
+
+
+def model_100m():
+    """~98M params: stablelm family scaled (d=640, L=10, ff=2560, tied 50k vocab)."""
+    base = get_config("stablelm-3b")
+    return replace(base, n_layers=10, d_model=640, n_heads=10, n_kv_heads=10,
+                   d_head=64, d_ff=2560, vocab_size=50304,
+                   tie_embeddings=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--data-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    from repro.analysis.model_math import param_counts
+    n = param_counts(cfg)["total"]
+    print(f"[e2e] model: {n/1e6:.1f}M params")
+
+    tc = TrainerConfig(arch="stablelm-3b", reduced=False, steps=args.steps,
+                       global_batch=args.batch, seq_len=args.seq, lr=6e-4,
+                       ckpt_every=50, log_every=10, run_name="e2e100m",
+                       data_dir=args.data_dir, hedge_delay_s=0.5)
+
+    # synthetic but LEARNABLE corpus: Zipfian bigram chains
+    rng = np.random.default_rng(0)
+    trans = rng.zipf(1.5, size=(256,)).astype(np.int64) % cfg.vocab_size
+    corpus = []
+    for _ in range(512):
+        s = np.empty(args.seq + 1, np.uint32)
+        s[0] = rng.integers(0, 256)
+        for t in range(1, args.seq + 1):
+            s[t] = (trans[s[t - 1] % 256] + rng.integers(0, 3)) % cfg.vocab_size
+        corpus.append(s)
+
+    tr = Trainer(tc, corpus=corpus)
+    tr.cfg = cfg  # use the ~100M config built above
+    import jax
+    from repro.runtime.steps import make_train_step_fn
+    from repro.optim import AdamWConfig
+    tr.opt_cfg = AdamWConfig(lr=6e-4, total_steps=args.steps,
+                             warmup_steps=max(1, args.steps // 20))
+    tr.step_fn = jax.jit(make_train_step_fn(tr.cfg, tr.opt_cfg),
+                         donate_argnums=(0,))
+    out = tr.run()
+    print(f"[e2e] finished: {out}")
+    tr.shutdown()
+
+
+if __name__ == "__main__":
+    main()

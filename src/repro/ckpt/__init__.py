@@ -1,0 +1,4 @@
+"""repro.ckpt — fault-tolerant checkpointing over BuffetFS."""
+from .manager import CheckpointManager, Manifest
+
+__all__ = ["CheckpointManager", "Manifest"]

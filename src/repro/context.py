@@ -1,0 +1,68 @@
+"""Activation-sharding context.
+
+GSPMD propagates parameter shardings well, but scan bodies need explicit
+anchors for activation layouts.  The launcher installs a dict of specs for
+the current cell; the model applies them at layout-transition points:
+
+  "bsd"   [B, S, D]      residual stream (batch x sequence-parallel)
+  "heads" [B, S, H, dh]  attention interior: heads sharded over "model",
+                         sequence FULL — the Megatron seq<->head transition
+                         turns per-chunk gathers/reduces into one all-to-all
+                         each way
+  "kv"    [B, S, Hkv, dh] same for K/V (only when Hkv divides the model axis)
+
+No context installed -> no-ops, so tests and single-device runs are
+unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Iterator, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_SPECS: contextvars.ContextVar[Optional[Dict[str, Optional[P]]]] = \
+    contextvars.ContextVar("repro_activation_specs", default=None)
+
+
+@contextlib.contextmanager
+def activation_specs(specs: Optional[Dict[str, Optional[P]]]) -> Iterator[None]:
+    tok = _SPECS.set(specs)
+    try:
+        yield
+    finally:
+        _SPECS.reset(tok)
+
+
+# back-compat single-spec entry point
+@contextlib.contextmanager
+def activation_spec(spec: Optional[P]) -> Iterator[None]:
+    with activation_specs({"bsd": spec} if spec is not None else None):
+        yield
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    specs = _SPECS.get()
+    if specs is None:
+        return x
+    spec = specs.get(kind)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # no mesh context / rank mismatch: leave unconstrained
+
+
+def constrain_bsd(x: jax.Array) -> jax.Array:
+    return constrain(x, "bsd")
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    return constrain(x, "heads")
+
+
+def constrain_kv(x: jax.Array) -> jax.Array:
+    return constrain(x, "kv")

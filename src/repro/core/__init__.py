@@ -1,0 +1,28 @@
+"""repro.core — BuffetFS: the paper's contribution.
+
+User-level distributed file system that eliminates the open() RPC by
+leveraging permission checks to clients (cached directory tree with 10-byte
+per-entry permission records), deferring open-state recording onto the first
+data RPC, and executing close() asynchronously — plus the Lustre-Normal and
+Lustre-DoM baseline protocol simulations the paper evaluates against.
+"""
+from .bagent import BAgent, TreeNode
+from .baselines import LustreDoMClient, LustreNormalClient
+from .blib import BLib, BuffetFile
+from .bserver import BServer
+from .cluster import BuffetCluster, ClusterConfig
+from .inode import Inode
+from .perms import (Credentials, FSError, O_CREAT, O_RDONLY, O_RDWR, O_TRUNC,
+                    O_WRONLY, PermRecord, R_OK, W_OK, X_OK, access_ok)
+from .transport import InProcTransport, LatencyModel, TCPTransport, ZERO_LATENCY
+from .wire import Message, MsgType, RpcStats
+
+__all__ = [
+    "BAgent", "TreeNode", "LustreDoMClient", "LustreNormalClient", "BLib",
+    "BuffetFile", "BServer", "BuffetCluster", "ClusterConfig", "Inode",
+    "Credentials", "FSError", "PermRecord", "access_ok",
+    "O_CREAT", "O_RDONLY", "O_RDWR", "O_TRUNC", "O_WRONLY",
+    "R_OK", "W_OK", "X_OK",
+    "InProcTransport", "LatencyModel", "TCPTransport", "ZERO_LATENCY",
+    "Message", "MsgType", "RpcStats",
+]

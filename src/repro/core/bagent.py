@@ -1,0 +1,438 @@
+"""BAgent — the BuffetFS client agent (paper §3.1, §3.3).
+
+One BAgent per client process.  It maintains:
+
+* an **incomplete directory tree** whose nodes carry the 10-byte permission
+  records of *all children* of every fetched directory — so `open()` runs its
+  permission checks entirely locally, with zero RPCs when the parent chain is
+  cached, and at most one LOOKUP_DIR per previously-unseen directory;
+* a **fd table** with per-process context (pid, uid/gid credentials);
+* the **incomplete-open** deferral: the server-side half of `open()` (updating
+  the opened-file list) rides on the first READ/WRITE for that fd (§3.3 b-2);
+* **async close()**: the CLOSE RPC leaves on a background thread (§3.3);
+* the **invalidation callback** endpoint used by servers before they apply
+  permission changes (§3.4), giving strong consistency;
+* **ESTALE recovery**: if a server restarted, its incarnation version no
+  longer matches; the agent re-learns the version via the cluster config and
+  retries (§3.2 version segment).
+"""
+from __future__ import annotations
+
+import errno
+import itertools
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .cluster import BuffetCluster, ClusterConfig
+from .inode import Inode
+from .perms import (Credentials, FSError, O_CREAT, PermRecord, R_OK, W_OK,
+                    X_OK, access_ok, err, flags_to_access, O_TRUNC)
+from .transport import Transport
+from .wire import Message, MsgType, RpcStats, ok
+
+_agent_counter = itertools.count()
+
+
+class TreeNode:
+    """Node of the client-cached partial directory tree."""
+
+    __slots__ = ("name", "ino", "perm", "children", "valid", "parent")
+
+    def __init__(self, name: str, ino: int, perm: PermRecord,
+                 parent: Optional["TreeNode"] = None) -> None:
+        self.name = name
+        self.ino = ino
+        self.perm = perm
+        self.parent = parent
+        # None => directory data not fetched (or not a directory)
+        self.children: Optional[Dict[str, TreeNode]] = None
+        self.valid = True  # False => server invalidated; must REVALIDATE
+
+    def path(self) -> str:
+        parts = []
+        node: Optional[TreeNode] = self
+        while node is not None and node.parent is not None:
+            parts.append(node.name)
+            node = node.parent
+        return "/" + "/".join(reversed(parts))
+
+
+@dataclass
+class FileHandle:
+    fd: int
+    ino: int
+    flags: int
+    path: str
+    offset: int = 0
+    incomplete_open: bool = True   # deferred open step-2 not yet done
+    pending_trunc: bool = False
+
+
+class BAgent:
+    """The per-client BuffetFS agent."""
+
+    def __init__(self, cluster: BuffetCluster, *, cred: Credentials = Credentials(),
+                 pid: int = 1, client_id: Optional[str] = None,
+                 hedge_delay_s: Optional[float] = None) -> None:
+        self.cluster = cluster
+        self.transport: Transport = cluster.transport
+        self.config: ClusterConfig = cluster.config
+        self.cred = cred
+        self.pid = pid
+        self.client_id = client_id or f"bagent-{next(_agent_counter)}"
+        self.cb_addr = f"cb:{self.client_id}"
+        self.stats = RpcStats()
+        self.hedge_delay_s = hedge_delay_s
+
+        root_ino = Inode.unpack(cluster.root_ino)
+        self.root = TreeNode("", cluster.root_ino,
+                             PermRecord(0o040755, 0, 0), parent=None)
+        self._tree_lock = threading.RLock()
+        self._fd_lock = threading.Lock()
+        self._fds: Dict[int, FileHandle] = {}
+        self._next_fd = 3
+
+        # async close worker (paper: close() returns immediately, RPC async)
+        self._close_q: "queue.Queue[Optional[Message]]" = queue.Queue()
+        self._closer = threading.Thread(target=self._close_worker, daemon=True)
+        self._closer.start()
+
+        # invalidation callback endpoint (server -> client RPCs, §3.4)
+        from .transport import TCPTransport
+        if isinstance(self.transport, TCPTransport):
+            self.cb_addr = "127.0.0.1:0"  # real listener, ephemeral port
+        real = self.transport.serve(self.cb_addr, self._handle_callback)
+        if real:
+            self.cb_addr = real
+
+    # ------------------------------------------------------------------
+    # RPC plumbing with ESTALE/version recovery
+    # ------------------------------------------------------------------
+    def _rpc(self, host_id: int, msg: Message, *, critical: bool = True) -> Message:
+        msg.header["ver"] = self.config.version(host_id)
+        resp = self.transport.request(self.config.addr(host_id), msg,
+                                      critical=critical, stats=self.stats)
+        if resp.type is MsgType.ERROR and resp.header.get("errno") == errno.ESTALE:
+            # server restarted: re-learn incarnation from config/ping, retry once
+            self.cluster.refresh_host(host_id)
+            msg.header["ver"] = self.config.version(host_id)
+            resp = self.transport.request(self.config.addr(host_id), msg,
+                                          critical=critical, stats=self.stats)
+        if resp.type is MsgType.ERROR:
+            raise err(resp.header.get("errno", errno.EIO), resp.header.get("msg", ""))
+        return resp
+
+    # ------------------------------------------------------------------
+    # invalidation callback (§3.4): mark-before-ack => strong consistency
+    # ------------------------------------------------------------------
+    def _handle_callback(self, msg: Message) -> Message:
+        if msg.type is MsgType.INVALIDATE:
+            dir_ino = msg.header["dir_ino"]
+            with self._tree_lock:
+                node = self._find_by_ino(self.root, dir_ino)
+                if node is not None:
+                    node.valid = False
+            return ok()
+        return ok()
+
+    def _find_by_ino(self, node: TreeNode, ino: int) -> Optional[TreeNode]:
+        # version-insensitive match (restart bumps versions, fileIDs persist)
+        a, b = Inode.unpack(node.ino), Inode.unpack(ino)
+        if (a.host_id, a.file_id) == (b.host_id, b.file_id):
+            return node
+        if node.children:
+            for c in node.children.values():
+                r = self._find_by_ino(c, ino)
+                if r is not None:
+                    return r
+        return None
+
+    # ------------------------------------------------------------------
+    # directory-tree management
+    # ------------------------------------------------------------------
+    def _fetch_dir(self, node: TreeNode) -> None:
+        """LOOKUP_DIR: pull a directory's dentries + child perms, register as
+        watcher.  This is the only metadata RPC BuffetFS ever needs."""
+        ino = Inode.unpack(node.ino)
+        resp = self._rpc(ino.host_id, Message(MsgType.LOOKUP_DIR, {
+            "file_id": ino.file_id, "client_id": self.client_id,
+            "cb_addr": self.cb_addr}))
+        with self._tree_lock:
+            node.perm = PermRecord.unpack(bytes.fromhex(resp.header["perm"]))
+            old = node.children or {}
+            fresh: Dict[str, TreeNode] = {}
+            for e in resp.header["entries"]:
+                perm = PermRecord.unpack(bytes.fromhex(e["perm"]))
+                child = old.get(e["name"])
+                if child is None:
+                    child = TreeNode(e["name"], e["ino"], perm, parent=node)
+                else:
+                    child.ino, child.perm = e["ino"], perm
+                    child.valid = True
+                fresh[e["name"]] = child
+            node.children = fresh
+            node.valid = True
+
+    def _ensure_children(self, node: TreeNode) -> Dict[str, "TreeNode"]:
+        if not node.perm.is_dir:
+            raise err(errno.ENOTDIR, node.path())
+        if node.children is None or not node.valid:
+            self._fetch_dir(node)
+        assert node.children is not None
+        return node.children
+
+    def _walk(self, path: str, *, want_parent: bool = False
+              ) -> Tuple[TreeNode, Optional[str]]:
+        """Traverse the cached tree, checking X permission on every directory
+        component CLIENT-SIDE (the paper's core mechanism).  Returns the node
+        (or its parent + final name if `want_parent`)."""
+        if not path.startswith("/"):
+            raise err(errno.EINVAL, f"path must be absolute: {path}")
+        parts = [p for p in path.split("/") if p]
+        node = self.root
+        # root perm comes with the first LOOKUP_DIR; check X on each dir
+        stop = len(parts) - 1 if want_parent else len(parts)
+        for i in range(stop):
+            if not access_ok(node.perm, self.cred, X_OK):
+                raise err(errno.EACCES, f"search permission denied: {node.path()}")
+            children = self._ensure_children(node)
+            child = children.get(parts[i])
+            if child is None:
+                raise err(errno.ENOENT, "/" + "/".join(parts[: i + 1]))
+            node = child
+        if want_parent:
+            if not access_ok(node.perm, self.cred, X_OK):
+                raise err(errno.EACCES, f"search permission denied: {node.path()}")
+            self._ensure_children(node)
+            return node, (parts[-1] if parts else None)
+        return node, None
+
+    # ------------------------------------------------------------------
+    # POSIX-ish operations
+    # ------------------------------------------------------------------
+    def open(self, path: str, flags: int = 0, mode: int = 0o644) -> int:
+        """open() with ZERO server RPCs when the parent chain is cached.
+
+        Step 1 (permission check) happens here, locally, against the cached
+        10-byte records.  Step 2 (open-state recording) is deferred to the
+        first READ/WRITE (`incomplete_open`).
+        """
+        parent, name = self._walk(path, want_parent=True)
+        if name is None:
+            raise err(errno.EISDIR, path)
+        children = parent.children or {}
+        node = children.get(name)
+        if node is None:
+            if not (flags & O_CREAT):
+                raise err(errno.ENOENT, path)
+            if not access_ok(parent.perm, self.cred, W_OK):
+                raise err(errno.EACCES, f"cannot create in {parent.path()}")
+            node = self._create(parent, name, mode)
+        else:
+            want = flags_to_access(flags)
+            if not access_ok(node.perm, self.cred, want):
+                raise err(errno.EACCES, path)
+            if node.perm.is_dir and (want & W_OK):
+                raise err(errno.EISDIR, path)
+        with self._fd_lock:
+            fd = self._next_fd
+            self._next_fd += 1
+            self._fds[fd] = FileHandle(fd=fd, ino=node.ino, flags=flags, path=path,
+                                       pending_trunc=bool(flags & O_TRUNC))
+        return fd
+
+    def _create(self, parent: TreeNode, name: str, mode: int) -> TreeNode:
+        pino = Inode.unpack(parent.ino)
+        resp = self._rpc(pino.host_id, Message(MsgType.CREATE, {
+            "parent": pino.file_id, "name": name, "mode": mode,
+            "uid": self.cred.uid, "gid": self.cred.gid,
+            "client_id": self.client_id}))
+        perm = PermRecord.unpack(bytes.fromhex(resp.header["perm"]))
+        with self._tree_lock:
+            node = TreeNode(name, resp.header["ino"], perm, parent=parent)
+            if parent.children is not None:
+                parent.children[name] = node
+        return node
+
+    def _io_header(self, fh: FileHandle) -> Dict:
+        h: Dict = {}
+        if fh.incomplete_open:
+            h["incomplete_open"] = {"client_id": self.client_id,
+                                    "pid": self.pid, "fd": fh.fd,
+                                    "flags": fh.flags}
+            fh.incomplete_open = False
+        return h
+
+    def read(self, fd: int, n: int = -1) -> bytes:
+        fh = self._fh(fd)
+        ino = Inode.unpack(fh.ino)
+        length = n if n >= 0 else (1 << 31)
+        h = {"file_id": ino.file_id, "offset": fh.offset, "length": length,
+             **self._io_header(fh)}
+        resp = self._rpc(ino.host_id, Message(MsgType.READ, h))
+        fh.offset += len(resp.payload)
+        return resp.payload
+
+    def pread(self, fd: int, n: int, offset: int) -> bytes:
+        fh = self._fh(fd)
+        ino = Inode.unpack(fh.ino)
+        h = {"file_id": ino.file_id, "offset": offset, "length": n,
+             **self._io_header(fh)}
+        resp = self._rpc(ino.host_id, Message(MsgType.READ, h))
+        return resp.payload
+
+    def write(self, fd: int, data: bytes) -> int:
+        fh = self._fh(fd)
+        ino = Inode.unpack(fh.ino)
+        h = {"file_id": ino.file_id, "offset": fh.offset, **self._io_header(fh)}
+        if fh.pending_trunc:
+            h["truncate"] = True
+            fh.pending_trunc = False
+        resp = self._rpc(ino.host_id, Message(MsgType.WRITE, h, data))
+        fh.offset += resp.header["written"]
+        return resp.header["written"]
+
+    def close(self, fd: int) -> None:
+        """Returns immediately; the CLOSE RPC is issued asynchronously (§3.3)."""
+        with self._fd_lock:
+            fh = self._fds.pop(fd, None)
+        if fh is None:
+            raise err(errno.EBADF, str(fd))
+        if fh.incomplete_open:
+            return  # never touched the server: nothing to wrap up
+        ino = Inode.unpack(fh.ino)
+        self._close_q.put(Message(MsgType.CLOSE, {
+            "host": ino.host_id, "file_id": ino.file_id,
+            "client_id": self.client_id, "pid": self.pid, "fd": fd}))
+
+    def _close_worker(self) -> None:
+        while True:
+            msg = self._close_q.get()
+            if msg is None:
+                self._close_q.task_done()
+                return
+            host = msg.header.pop("host")
+            try:
+                self._rpc(host, msg, critical=False)
+            except Exception:
+                pass  # best-effort wrap-up; server GC would reap on lease expiry
+            finally:
+                self._close_q.task_done()
+
+    def drain(self) -> None:
+        """Block until every queued async close RPC has completed."""
+        self._close_q.join()
+
+    # --- metadata ops ----------------------------------------------------
+    def stat(self, path: str) -> Dict:
+        node, _ = self._walk(path)
+        ino = Inode.unpack(node.ino)
+        resp = self._rpc(ino.host_id, Message(MsgType.STAT, {"file_id": ino.file_id}))
+        return resp.header
+
+    def stat_cached(self, path: str) -> Dict:
+        """Permission/type info straight from the cached tree — zero RPCs."""
+        node, _ = self._walk(path)
+        return {"ino": node.ino, "mode": node.perm.mode,
+                "uid": node.perm.uid, "gid": node.perm.gid,
+                "is_dir": node.perm.is_dir}
+
+    def readdir(self, path: str) -> List[str]:
+        node, _ = self._walk(path)
+        if not access_ok(node.perm, self.cred, R_OK):
+            raise err(errno.EACCES, path)
+        return sorted(self._ensure_children(node))
+
+    def mkdir(self, path: str, mode: int = 0o755) -> None:
+        parent, name = self._walk(path, want_parent=True)
+        if not access_ok(parent.perm, self.cred, W_OK):
+            raise err(errno.EACCES, parent.path())
+        pino = Inode.unpack(parent.ino)
+        target_host = self.cluster.place_dir(path)
+        if target_host == pino.host_id:
+            resp = self._rpc(pino.host_id, Message(MsgType.MKDIR, {
+                "parent": pino.file_id, "name": name, "mode": mode,
+                "uid": self.cred.uid, "gid": self.cred.gid,
+                "client_id": self.client_id}))
+            ino, perm_hex = resp.header["ino"], resp.header["perm"]
+        else:
+            # decentralized two-phase: allocate dir object on its data host,
+            # then link the dentry (with the 10-byte perm) into the parent
+            r1 = self._rpc(target_host, Message(MsgType.MKNOD_OBJ, {
+                "is_dir": True, "mode": mode,
+                "uid": self.cred.uid, "gid": self.cred.gid}))
+            ino, perm_hex = r1.header["ino"], r1.header["perm"]
+            self._rpc(pino.host_id, Message(MsgType.LINK_DENTRY, {
+                "parent": pino.file_id, "name": name, "ino": ino,
+                "perm": perm_hex, "client_id": self.client_id}))
+        with self._tree_lock:
+            node = TreeNode(name, ino, PermRecord.unpack(bytes.fromhex(perm_hex)),
+                            parent=parent)
+            # children stays None: the first use LOOKUP_DIRs, which registers
+            # this client in the server's watcher list (else invalidations
+            # from other clients' creates would never reach us)
+            if parent.children is not None:
+                parent.children[name] = node
+
+    def unlink(self, path: str) -> None:
+        parent, name = self._walk(path, want_parent=True)
+        if not access_ok(parent.perm, self.cred, W_OK):
+            raise err(errno.EACCES, parent.path())
+        pino = Inode.unpack(parent.ino)
+        self._rpc(pino.host_id, Message(MsgType.UNLINK, {
+            "parent": pino.file_id, "name": name, "client_id": self.client_id}))
+        with self._tree_lock:
+            if parent.children:
+                parent.children.pop(name, None)
+
+    def chmod(self, path: str, mode: int) -> None:
+        parent, name = self._walk(path, want_parent=True)
+        pino = Inode.unpack(parent.ino)
+        node = (parent.children or {}).get(name)
+        if node is not None and self.cred.uid not in (0, node.perm.uid):
+            raise err(errno.EPERM, path)
+        self._rpc(pino.host_id, Message(MsgType.CHMOD, {
+            "parent": pino.file_id, "name": name, "mode": mode}))
+
+    def chown(self, path: str, uid: int, gid: int) -> None:
+        parent, name = self._walk(path, want_parent=True)
+        if self.cred.uid != 0:
+            raise err(errno.EPERM, path)
+        pino = Inode.unpack(parent.ino)
+        self._rpc(pino.host_id, Message(MsgType.CHOWN, {
+            "parent": pino.file_id, "name": name, "uid": uid, "gid": gid}))
+
+    def rename(self, path: str, new_name: str) -> None:
+        parent, name = self._walk(path, want_parent=True)
+        if not access_ok(parent.perm, self.cred, W_OK):
+            raise err(errno.EACCES, parent.path())
+        pino = Inode.unpack(parent.ino)
+        self._rpc(pino.host_id, Message(MsgType.RENAME, {
+            "parent": pino.file_id, "old": name, "new": new_name,
+            "client_id": self.client_id}))
+        with self._tree_lock:
+            if parent.children and name in parent.children:
+                n = parent.children.pop(name)
+                n.name = new_name
+                parent.children[new_name] = n
+
+    # --- helpers -----------------------------------------------------------
+    def _fh(self, fd: int) -> FileHandle:
+        with self._fd_lock:
+            fh = self._fds.get(fd)
+        if fh is None:
+            raise err(errno.EBADF, str(fd))
+        return fh
+
+    def warm(self, path: str) -> None:
+        """Pre-walk a directory chain to populate the cached tree."""
+        node, _ = self._walk(path)
+        if node.perm.is_dir:
+            self._ensure_children(node)
+
+    def shutdown(self) -> None:
+        self.drain()
+        self._close_q.put(None)
+        self.transport.shutdown(self.cb_addr)

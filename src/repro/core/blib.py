@@ -1,0 +1,125 @@
+"""BLib — the user-facing BuffetFS library (paper §3.1).
+
+In the paper BLib is an LD_PRELOAD-style dynamic library intercepting POSIX
+I/O and redirecting it to the node's BAgent.  Here it is an explicit Python
+facade with POSIX file semantics over a `BAgent`; framework code (data
+pipeline, checkpointing) talks to this API only, so the storage backend is
+swappable (BuffetFS / Lustre-Normal sim / Lustre-DoM sim) — exactly the three
+groups of the paper's evaluation.
+"""
+from __future__ import annotations
+
+import errno
+from typing import Iterator, List, Optional
+
+from .bagent import BAgent
+from .perms import O_CREAT, O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY, err
+
+
+class BuffetFile:
+    """File-object wrapper over a BAgent fd."""
+
+    def __init__(self, lib: "BLib", fd: int, path: str) -> None:
+        self._lib = lib
+        self.fd = fd
+        self.path = path
+        self._closed = False
+
+    def read(self, n: int = -1) -> bytes:
+        return self._lib.agent.read(self.fd, n)
+
+    def pread(self, n: int, offset: int) -> bytes:
+        return self._lib.agent.pread(self.fd, n, offset)
+
+    def write(self, data: bytes) -> int:
+        return self._lib.agent.write(self.fd, data)
+
+    def close(self) -> None:
+        if not self._closed:
+            self._lib.agent.close(self.fd)
+            self._closed = True
+
+    def __enter__(self) -> "BuffetFile":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+_MODE_FLAGS = {
+    "rb": O_RDONLY, "r": O_RDONLY,
+    "wb": O_WRONLY | O_CREAT | O_TRUNC, "w": O_WRONLY | O_CREAT | O_TRUNC,
+    "r+b": O_RDWR, "ab": O_WRONLY | O_CREAT,
+}
+
+
+class BLib:
+    """POSIX-like convenience API over a BAgent."""
+
+    def __init__(self, agent: BAgent) -> None:
+        self.agent = agent
+
+    # --- file objects ----------------------------------------------------
+    def open(self, path: str, mode: str = "rb", perm: int = 0o644) -> BuffetFile:
+        flags = _MODE_FLAGS.get(mode)
+        if flags is None:
+            raise err(errno.EINVAL, f"mode {mode!r}")
+        fd = self.agent.open(path, flags, perm)
+        return BuffetFile(self, fd, path)
+
+    # --- whole-file helpers (the framework's hot path) --------------------
+    def read_file(self, path: str) -> bytes:
+        with self.open(path, "rb") as f:
+            return f.read()
+
+    def write_file(self, path: str, data: bytes, perm: int = 0o644) -> int:
+        with self.open(path, "wb", perm) as f:
+            return f.write(data)
+
+    # --- namespace ---------------------------------------------------------
+    def mkdir(self, path: str, mode: int = 0o755) -> None:
+        self.agent.mkdir(path, mode)
+
+    def makedirs(self, path: str, mode: int = 0o755) -> None:
+        parts = [p for p in path.split("/") if p]
+        cur = ""
+        for p in parts:
+            cur += "/" + p
+            try:
+                self.agent.mkdir(cur, mode)
+            except OSError as e:
+                if e.errno != errno.EEXIST:
+                    raise
+
+    def listdir(self, path: str) -> List[str]:
+        return self.agent.readdir(path)
+
+    def exists(self, path: str) -> bool:
+        try:
+            self.agent.stat_cached(path)
+            return True
+        except OSError:
+            return False
+
+    def stat(self, path: str) -> dict:
+        return self.agent.stat(path)
+
+    def unlink(self, path: str) -> None:
+        self.agent.unlink(path)
+
+    def chmod(self, path: str, mode: int) -> None:
+        self.agent.chmod(path, mode)
+
+    def chown(self, path: str, uid: int, gid: int) -> None:
+        self.agent.chown(path, uid, gid)
+
+    def rename(self, path: str, new_name: str) -> None:
+        self.agent.rename(path, new_name)
+
+    def walk_files(self, path: str) -> Iterator[str]:
+        for name in self.listdir(path):
+            child = path.rstrip("/") + "/" + name
+            if self.agent.stat_cached(child)["is_dir"]:
+                yield from self.walk_files(child)
+            else:
+                yield child

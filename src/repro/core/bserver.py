@@ -1,0 +1,534 @@
+"""BServer — the BuffetFS storage server (paper §3.1, §3.2, §3.4).
+
+A BServer owns a shard of the decentralized namespace: the directories whose
+dentries (name, inode, 10-byte permission record) it stores, and the file
+objects whose data lives in its ext4-backed object store.  There is no
+metadata server anywhere — any BServer answers LOOKUP_DIR for directories it
+owns, and clients assemble the global namespace from `(hostID, version)`
+routing (see `repro.core.cluster`).
+
+Responsibilities faithful to the paper:
+  * directory data = dentries + child permission records  (§3.2)
+  * opened-file list, updated by the *deferred* step-2 of open() that arrives
+    piggybacked on the first READ/WRITE (`incomplete_open`)  (§3.3)
+  * per-directory client registry + blocking invalidation fan-out before any
+    permission change is applied  (§3.4 strong consistency)
+  * per-file server-side locks for concurrent modification ("BuffetFS
+    arranges file locks inside the BServer", §4)
+  * version number bumped on restart/restore  (§3.2)
+
+It also implements the baseline verbs (OPEN_RECORD, READ_INLINE) used by the
+Lustre-Normal / Lustre-DoM protocol simulations so all three systems in the
+paper's evaluation run against identical storage.
+"""
+from __future__ import annotations
+
+import errno
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .inode import Inode, ROOT_FILE_ID
+from .perms import PermRecord, S_IFDIR, S_IFREG
+from .transport import Transport
+from .wire import Message, MsgType, error, ok
+
+
+@dataclass
+class FileMeta:
+    perm: PermRecord
+    size: int = 0
+    is_dir: bool = False
+    nlink: int = 1
+    atime: float = 0.0
+    mtime: float = 0.0
+    ctime: float = 0.0
+    xattrs: Dict[str, str] = field(default_factory=dict)  # front-end metadata mirror
+
+
+@dataclass
+class DirEntry:
+    name: str
+    ino: int          # packed Inode (may point to another host)
+    perm: PermRecord  # the ten extra bytes (paper §3.2)
+
+
+class BServer:
+    """One BuffetFS storage server backed by a local directory (ext4 stand-in)."""
+
+    def __init__(self, host_id: int, backing_dir: str, transport: Transport,
+                 addr: str, *, version: int = 0, fsync_policy: str = "none",
+                 dom_limit: int = 64 * 1024) -> None:
+        self.host_id = host_id
+        self.version = version
+        self.backing_dir = backing_dir
+        self.transport = transport
+        self.addr = addr
+        self.fsync_policy = fsync_policy
+        self.dom_limit = dom_limit  # Lustre-DoM small-file threshold
+
+        self._objs = os.path.join(backing_dir, "objs")
+        os.makedirs(self._objs, exist_ok=True)
+        self._meta_path = os.path.join(backing_dir, "meta.json")
+
+        self._lock = threading.RLock()
+        self._file_locks: Dict[int, threading.Lock] = {}
+        self._next_file_id = ROOT_FILE_ID + 1
+        self._meta: Dict[int, FileMeta] = {}
+        self._dirs: Dict[int, Dict[str, DirEntry]] = {}
+        # opened-file list: file_id -> {(client_id, pid, fd)}
+        self._opened: Dict[int, Set[Tuple[str, int, int]]] = {}
+        # per-directory caching clients: dir_file_id -> {client_id: callback_addr}
+        self._watchers: Dict[int, Dict[str, str]] = {}
+        self._stopped = False
+
+        if os.path.exists(self._meta_path):
+            self._load_meta()
+        real = self.transport.serve(self.addr, self.handle)
+        if real:  # TCP: ephemeral port resolved at bind time
+            self.addr = real
+
+    # ------------------------------------------------------------------
+    # lifecycle / persistence
+    # ------------------------------------------------------------------
+    def make_root(self, uid: int = 0, gid: int = 0, mode: int = 0o755) -> Inode:
+        """Initialise the root directory on this server (host 0 by convention)."""
+        with self._lock:
+            if ROOT_FILE_ID not in self._meta:
+                self._meta[ROOT_FILE_ID] = FileMeta(
+                    perm=PermRecord(S_IFDIR | mode, uid, gid), is_dir=True,
+                    ctime=time.time())
+                self._dirs[ROOT_FILE_ID] = {}
+                self._persist()
+        return Inode(self.host_id, self.version, ROOT_FILE_ID)
+
+    def _persist(self) -> None:
+        if self.fsync_policy == "none":
+            return
+        self._persist_now()
+
+    def _persist_now(self) -> None:
+        blob = {
+            "next_file_id": self._next_file_id,
+            "meta": {
+                str(fid): {
+                    "mode": m.perm.mode, "uid": m.perm.uid, "gid": m.perm.gid,
+                    "size": m.size, "is_dir": m.is_dir, "nlink": m.nlink,
+                    "atime": m.atime, "mtime": m.mtime, "ctime": m.ctime,
+                    "xattrs": m.xattrs,
+                } for fid, m in self._meta.items()
+            },
+            "dirs": {
+                str(fid): {
+                    name: {"ino": e.ino, "perm": e.perm.pack().hex()}
+                    for name, e in entries.items()
+                } for fid, entries in self._dirs.items()
+            },
+        }
+        tmp = self._meta_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(blob, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._meta_path)
+
+    def _load_meta(self) -> None:
+        with open(self._meta_path) as f:
+            blob = json.load(f)
+        self._next_file_id = blob["next_file_id"]
+        self._meta = {
+            int(fid): FileMeta(
+                perm=PermRecord(d["mode"], d["uid"], d["gid"]), size=d["size"],
+                is_dir=d["is_dir"], nlink=d["nlink"], atime=d["atime"],
+                mtime=d["mtime"], ctime=d["ctime"], xattrs=d.get("xattrs", {}))
+            for fid, d in blob["meta"].items()
+        }
+        self._dirs = {
+            int(fid): {
+                name: DirEntry(name, e["ino"], PermRecord.unpack(bytes.fromhex(e["perm"])))
+                for name, e in entries.items()
+            } for fid, entries in blob["dirs"].items()
+        }
+
+    def shutdown(self) -> None:
+        with self._lock:
+            self._stopped = True
+            self._persist_now()
+        self.transport.shutdown(self.addr)
+
+    def restart(self, *, crash: bool = False) -> None:
+        """Simulate a server reboot/restore (paper §3.2 version segment).
+
+        On restart the incarnation `version` increments so every inode minted
+        by the previous incarnation is detectably stale; volatile state (the
+        opened-file list and watcher registry) is lost, exactly as a real
+        reboot would lose it.
+        """
+        with self._lock:
+            if not crash:
+                self._persist_now()
+            self.version += 1
+            self._opened.clear()
+            self._watchers.clear()
+            if os.path.exists(self._meta_path):
+                self._load_meta()
+            self._stopped = False
+        self.transport.serve(self.addr, self.handle)
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _obj_path(self, file_id: int) -> str:
+        return os.path.join(self._objs, f"{file_id:016x}")
+
+    def _inode(self, file_id: int) -> int:
+        return Inode(self.host_id, self.version, file_id).pack()
+
+    def _file_lock(self, file_id: int) -> threading.Lock:
+        with self._lock:
+            lk = self._file_locks.get(file_id)
+            if lk is None:
+                lk = self._file_locks[file_id] = threading.Lock()
+            return lk
+
+    def _check_version(self, header: Dict) -> Optional[Message]:
+        v = header.get("ver")
+        if v is not None and v != self.version:
+            return error(errno.ESTALE, f"server incarnation {self.version} != {v}")
+        return None
+
+    def _alloc(self, meta: FileMeta) -> int:
+        fid = self._next_file_id
+        self._next_file_id += 1
+        self._meta[fid] = meta
+        return fid
+
+    # ------------------------------------------------------------------
+    # invalidation fan-out (§3.4)
+    # ------------------------------------------------------------------
+    def _invalidate_watchers(self, dir_file_id: int, names: Optional[List[str]] = None,
+                             exclude_client: Optional[str] = None) -> None:
+        """Block until every caching client acks invalidation, THEN the caller
+        applies the mutation — this ordering is the paper's strong-consistency
+        guarantee."""
+        with self._lock:
+            watchers = dict(self._watchers.get(dir_file_id, {}))
+        for client_id, cb_addr in watchers.items():
+            if client_id == exclude_client:
+                continue
+            resp = self.transport.request(
+                cb_addr,
+                Message(MsgType.INVALIDATE,
+                        {"dir_ino": self._inode(dir_file_id), "names": names}),
+                critical=True)
+            if resp.type is not MsgType.OK:
+                # unreachable client: drop it from the registry (it will
+                # re-register and re-fetch on next access)
+                with self._lock:
+                    self._watchers.get(dir_file_id, {}).pop(client_id, None)
+
+    # ------------------------------------------------------------------
+    # request dispatch
+    # ------------------------------------------------------------------
+    def handle(self, msg: Message) -> Message:
+        if self._stopped:
+            return error(errno.ECONNREFUSED, "server stopped")
+        h = msg.header
+        stale = self._check_version(h)
+        if stale is not None and msg.type not in (MsgType.PING,):
+            return stale
+        try:
+            fn = getattr(self, f"_op_{msg.type.name.lower()}", None)
+            if fn is None:
+                return error(errno.ENOSYS, f"unsupported op {msg.type.name}")
+            return fn(h, msg.payload)
+        except KeyError:
+            return error(errno.ENOENT, "no such object")
+        except OSError as e:
+            return error(e.errno or errno.EIO, str(e))
+
+    # --- namespace ops -------------------------------------------------
+    def _op_lookup_dir(self, h: Dict, _p: bytes) -> Message:
+        """Return a directory's full data: dentries WITH the 10-byte perm
+        records, and register the requesting client for invalidation."""
+        fid = h["file_id"]
+        with self._lock:
+            meta = self._meta[fid]
+            if not meta.is_dir:
+                return error(errno.ENOTDIR, "not a directory")
+            entries = [
+                {"name": e.name, "ino": e.ino, "perm": e.perm.pack().hex()}
+                for e in self._dirs[fid].values()
+            ]
+            if "client_id" in h and h.get("cb_addr"):
+                self._watchers.setdefault(fid, {})[h["client_id"]] = h["cb_addr"]
+            dperm = meta.perm.pack().hex()
+        return ok({"entries": entries, "perm": dperm, "ino": self._inode(fid)})
+
+    def _op_stat(self, h: Dict, _p: bytes) -> Message:
+        fid = h["file_id"]
+        with self._lock:
+            m = self._meta[fid]
+            return ok({"ino": self._inode(fid), "size": m.size,
+                       "mode": m.perm.mode, "uid": m.perm.uid, "gid": m.perm.gid,
+                       "nlink": m.nlink, "atime": m.atime, "mtime": m.mtime,
+                       "ctime": m.ctime, "is_dir": m.is_dir})
+
+    def _op_create(self, h: Dict, _p: bytes) -> Message:
+        parent, name = h["parent"], h["name"]
+        perm = PermRecord(S_IFREG | (h["mode"] & 0o777), h["uid"], h["gid"])
+        with self._lock:
+            pdir = self._dirs[parent]
+            if name in pdir:
+                if h.get("excl"):
+                    return error(errno.EEXIST, name)
+                e = pdir[name]
+                return ok({"ino": e.ino, "perm": e.perm.pack().hex(), "existed": True})
+            fid = self._alloc(FileMeta(perm=perm, ctime=time.time(),
+                                       mtime=time.time()))
+            ino = self._inode(fid)
+            pdir[name] = DirEntry(name, ino, perm)
+            # front-end metadata mirrored into xattrs of the actual file (§3.2)
+            self._meta[fid].xattrs["buffet.ino"] = str(ino)
+            open(self._obj_path(fid), "wb").close()
+            self._persist()
+        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
+        return ok({"ino": ino, "perm": perm.pack().hex(), "existed": False})
+
+    def _op_mkdir(self, h: Dict, _p: bytes) -> Message:
+        parent, name = h["parent"], h["name"]
+        perm = PermRecord(S_IFDIR | (h["mode"] & 0o777), h["uid"], h["gid"])
+        with self._lock:
+            pdir = self._dirs[parent]
+            if name in pdir:
+                return error(errno.EEXIST, name)
+            fid = self._alloc(FileMeta(perm=perm, is_dir=True, ctime=time.time()))
+            self._dirs[fid] = {}
+            ino = self._inode(fid)
+            pdir[name] = DirEntry(name, ino, perm)
+            self._persist()
+        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
+        return ok({"ino": ino, "perm": perm.pack().hex()})
+
+    def _op_unlink(self, h: Dict, _p: bytes) -> Message:
+        parent, name = h["parent"], h["name"]
+        with self._lock:
+            pdir = self._dirs[parent]
+            if name not in pdir:
+                return error(errno.ENOENT, name)
+            e = pdir[name]
+            if e.perm.is_dir:
+                return error(errno.EISDIR, name)
+            del pdir[name]
+            fid = Inode.unpack(e.ino).file_id
+            if Inode.unpack(e.ino).host_id == self.host_id:
+                self._meta.pop(fid, None)
+                try:
+                    os.unlink(self._obj_path(fid))
+                except FileNotFoundError:
+                    pass
+            self._persist()
+        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
+        return ok()
+
+    def _op_rmdir(self, h: Dict, _p: bytes) -> Message:
+        parent, name = h["parent"], h["name"]
+        with self._lock:
+            pdir = self._dirs[parent]
+            if name not in pdir:
+                return error(errno.ENOENT, name)
+            e = pdir[name]
+            if not e.perm.is_dir:
+                return error(errno.ENOTDIR, name)
+            fid = Inode.unpack(e.ino).file_id
+            if self._dirs.get(fid):
+                return error(errno.ENOTEMPTY, name)
+            del pdir[name]
+            self._dirs.pop(fid, None)
+            self._meta.pop(fid, None)
+            self._persist()
+        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
+        return ok()
+
+    def _op_rename(self, h: Dict, _p: bytes) -> Message:
+        parent, old, new = h["parent"], h["old"], h["new"]
+        with self._lock:
+            pdir = self._dirs[parent]
+            if old not in pdir:
+                return error(errno.ENOENT, old)
+            e = pdir.pop(old)
+            pdir[new] = DirEntry(new, e.ino, e.perm)
+            self._persist()
+        self._invalidate_watchers(parent, [old, new], exclude_client=h.get("client_id"))
+        return ok()
+
+    # --- permission changes (§3.4: invalidate BEFORE applying) ---------
+    def _op_chmod(self, h: Dict, _p: bytes) -> Message:
+        return self._perm_change(h, lambda perm: perm.with_mode_bits(h["mode"]))
+
+    def _op_chown(self, h: Dict, _p: bytes) -> Message:
+        return self._perm_change(
+            h, lambda perm: PermRecord(perm.mode, h["uid"], h["gid"]))
+
+    def _perm_change(self, h: Dict, f) -> Message:
+        parent, name = h["parent"], h["name"]
+        with self._lock:
+            pdir = self._dirs[parent]
+            if name not in pdir:
+                return error(errno.ENOENT, name)
+        # Step 1 (§3.4): inform all caching clients and WAIT for their acks
+        self._invalidate_watchers(parent, [name])
+        # Step 2: only now execute the permission modification
+        with self._lock:
+            e = pdir[name]
+            new_perm = f(e.perm)
+            pdir[name] = DirEntry(name, e.ino, new_perm)
+            ino = Inode.unpack(e.ino)
+            if ino.host_id == self.host_id and ino.file_id in self._meta:
+                self._meta[ino.file_id].perm = new_perm
+                self._meta[ino.file_id].ctime = time.time()
+            self._persist()
+        return ok({"perm": new_perm.pack().hex()})
+
+    def _op_revalidate(self, h: Dict, p: bytes) -> Message:
+        return self._op_lookup_dir(h, p)
+
+    # --- data ops --------------------------------------------------------
+    def _record_open(self, io_h: Dict) -> None:
+        """Deferred step-2 of open(): update the opened-file list (§3.3 b-3)."""
+        rec = io_h.get("incomplete_open")
+        if rec:
+            with self._lock:
+                self._opened.setdefault(io_h["file_id"], set()).add(
+                    (rec["client_id"], rec["pid"], rec["fd"]))
+
+    def _op_read(self, h: Dict, _p: bytes) -> Message:
+        fid, off, ln = h["file_id"], h["offset"], h["length"]
+        self._record_open(h)
+        with self._file_lock(fid):
+            with self._lock:
+                m = self._meta[fid]
+                m.atime = time.time()
+            try:
+                with open(self._obj_path(fid), "rb") as f:
+                    f.seek(off)
+                    data = f.read(ln)
+            except FileNotFoundError:
+                data = b""
+        return ok({"eof": off + len(data) >= m.size}, data)
+
+    def _op_write(self, h: Dict, p: bytes) -> Message:
+        fid, off = h["file_id"], h["offset"]
+        self._record_open(h)
+        with self._file_lock(fid):
+            path = self._obj_path(fid)
+            mode = "r+b" if os.path.exists(path) else "wb"
+            with open(path, mode) as f:
+                if h.get("truncate"):
+                    f.truncate(0)
+                f.seek(off)
+                f.write(p)
+                if self.fsync_policy == "mutating":
+                    f.flush()
+                    os.fsync(f.fileno())
+            with self._lock:
+                m = self._meta[fid]
+                end = (off + len(p)) if not h.get("truncate") else len(p)
+                m.size = max(0 if h.get("truncate") else m.size, end)
+                m.mtime = time.time()
+        return ok({"written": len(p), "size": m.size})
+
+    def _op_truncate(self, h: Dict, _p: bytes) -> Message:
+        fid = h["file_id"]
+        with self._file_lock(fid):
+            with open(self._obj_path(fid), "ab") as f:
+                f.truncate(h["size"])
+            with self._lock:
+                self._meta[fid].size = h["size"]
+        return ok()
+
+    def _op_close(self, h: Dict, _p: bytes) -> Message:
+        """Wrap-up (async on the client side): drop from the opened-file list."""
+        with self._lock:
+            s = self._opened.get(h["file_id"])
+            if s:
+                s.discard((h["client_id"], h["pid"], h["fd"]))
+                if not s:
+                    del self._opened[h["file_id"]]
+        return ok()
+
+    # --- cross-host namespace ops (decentralized placement) -------------
+    def _op_mknod_obj(self, h: Dict, _p: bytes) -> Message:
+        """Allocate a file/dir object on THIS data host; the dentry will be
+        linked into the parent directory's namespace host separately."""
+        is_dir = bool(h["is_dir"])
+        perm = PermRecord((S_IFDIR if is_dir else S_IFREG) | (h["mode"] & 0o777),
+                          h["uid"], h["gid"])
+        with self._lock:
+            fid = self._alloc(FileMeta(perm=perm, is_dir=is_dir,
+                                       ctime=time.time(), mtime=time.time()))
+            if is_dir:
+                self._dirs[fid] = {}
+            else:
+                open(self._obj_path(fid), "wb").close()
+            ino = self._inode(fid)
+            self._meta[fid].xattrs["buffet.ino"] = str(ino)
+            self._persist()
+        return ok({"ino": ino, "perm": perm.pack().hex()})
+
+    def _op_link_dentry(self, h: Dict, _p: bytes) -> Message:
+        parent, name = h["parent"], h["name"]
+        perm = PermRecord.unpack(bytes.fromhex(h["perm"]))
+        with self._lock:
+            pdir = self._dirs[parent]
+            if name in pdir:
+                return error(errno.EEXIST, name)
+            pdir[name] = DirEntry(name, h["ino"], perm)
+            self._persist()
+        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
+        return ok()
+
+    # --- baseline verbs (Lustre simulations) ---------------------------
+    def _op_open_record(self, h: Dict, _p: bytes) -> Message:
+        """Lustre-Normal MDS open(): perm data + open-state record in one RPC."""
+        parent, name = h["parent"], h["name"]
+        with self._lock:
+            pdir = self._dirs[parent]
+            if name not in pdir:
+                return error(errno.ENOENT, name)
+            e = pdir[name]
+            fid = Inode.unpack(e.ino).file_id
+            self._opened.setdefault(fid, set()).add(
+                (h["client_id"], h["pid"], h["fd"]))
+            size = self._meta[fid].size if fid in self._meta else 0
+        return ok({"ino": e.ino, "perm": e.perm.pack().hex(), "size": size})
+
+    def _op_read_inline(self, h: Dict, _p: bytes) -> Message:
+        """Lustre-DoM open(): like OPEN_RECORD but small-file data rides along."""
+        resp = self._op_open_record(h, _p)
+        if resp.type is not MsgType.OK:
+            return resp
+        fid = Inode.unpack(resp.header["ino"]).file_id
+        if resp.header["size"] <= self.dom_limit and fid in self._meta:
+            try:
+                with open(self._obj_path(fid), "rb") as f:
+                    resp.payload = f.read()
+                resp.header["inline"] = True
+            except FileNotFoundError:
+                pass
+        return resp
+
+    def _op_ping(self, h: Dict, _p: bytes) -> Message:
+        return ok({"host_id": self.host_id, "version": self.version})
+
+    # --- introspection ---------------------------------------------------
+    def opened_count(self) -> int:
+        with self._lock:
+            return sum(len(s) for s in self._opened.values())
+
+    def watcher_count(self) -> int:
+        with self._lock:
+            return sum(len(w) for w in self._watchers.values())

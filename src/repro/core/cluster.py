@@ -1,0 +1,147 @@
+"""Decentralized BuffetFS cluster — no metadata server anywhere (paper §3.2).
+
+`ClusterConfig` is the client-local configuration file the paper describes:
+it maps a `(hostID, version)` tuple to a server address, so a bare inode
+number is enough to locate any file in the cluster.
+
+`BuffetCluster` owns the server processes for tests/benchmarks and provides
+the placement policy: the namespace is partitioned at *directory*
+granularity (each directory object, with its dentries + child permission
+records, lives on the host chosen by a stable hash of its path), and a
+file's data lives on the host of its parent directory by default — this is
+how BuffetFS "only needs to manage servers that store files and directories
+data" with no MDS.
+
+Optional replication (`replicas=2`) lets the data pipeline issue hedged
+reads for straggler mitigation.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .bserver import BServer
+from .inode import Inode
+from .transport import InProcTransport, LatencyModel, Transport
+from .wire import Message, MsgType
+
+
+def stable_hash(s: str) -> int:
+    return int.from_bytes(hashlib.blake2s(s.encode(), digest_size=8).digest(), "little")
+
+
+@dataclass
+class HostEntry:
+    addr: str
+    version: int
+
+
+class ClusterConfig:
+    """Client-side (hostID, version) -> address map; thread-safe."""
+
+    def __init__(self, hosts: Optional[Dict[int, HostEntry]] = None) -> None:
+        self._hosts: Dict[int, HostEntry] = dict(hosts or {})
+        self._lock = threading.Lock()
+
+    def addr(self, host_id: int) -> str:
+        with self._lock:
+            return self._hosts[host_id].addr
+
+    def version(self, host_id: int) -> int:
+        with self._lock:
+            return self._hosts[host_id].version
+
+    def hosts(self) -> List[int]:
+        with self._lock:
+            return sorted(self._hosts)
+
+    def set(self, host_id: int, addr: str, version: int) -> None:
+        with self._lock:
+            self._hosts[host_id] = HostEntry(addr, version)
+
+    def bump_version(self, host_id: int, version: int) -> None:
+        with self._lock:
+            self._hosts[host_id].version = version
+
+    def copy(self) -> "ClusterConfig":
+        with self._lock:
+            return ClusterConfig({k: HostEntry(v.addr, v.version)
+                                  for k, v in self._hosts.items()})
+
+
+@dataclass
+class BuffetCluster:
+    """A sandbox BuffetFS cluster: N BServers over one transport."""
+
+    root_dir: str
+    n_servers: int = 4
+    transport: Transport = None  # type: ignore[assignment]
+    latency: Optional[LatencyModel] = None
+    replicas: int = 1
+    fsync_policy: str = "none"
+    servers: Dict[int, BServer] = field(default_factory=dict)
+    config: ClusterConfig = field(default_factory=ClusterConfig)
+    root_ino: int = 0
+
+    def __post_init__(self) -> None:
+        if self.transport is None:
+            self.transport = InProcTransport(self.latency)
+        from .transport import TCPTransport
+        tcp = isinstance(self.transport, TCPTransport)
+        for host_id in range(self.n_servers):
+            backing = os.path.join(self.root_dir, f"bserver{host_id}")
+            os.makedirs(backing, exist_ok=True)
+            addr = "127.0.0.1:0" if tcp else f"bserver:{host_id}"
+            srv = BServer(host_id, backing, self.transport, addr,
+                          fsync_policy=self.fsync_policy)
+            self.servers[host_id] = srv
+            self.config.set(host_id, srv.addr, srv.version)
+        self.root_ino = self.servers[0].make_root().pack()
+
+    # --- placement -----------------------------------------------------
+    def place_dir(self, path: str) -> int:
+        """Directory-granularity namespace partitioning."""
+        if path in ("", "/"):
+            return 0
+        return stable_hash(path) % self.n_servers
+
+    def replica_host(self, host_id: int, k: int = 1) -> int:
+        return (host_id + k) % self.n_servers
+
+    # --- failure injection ----------------------------------------------
+    def kill_server(self, host_id: int) -> None:
+        self.servers[host_id].shutdown()
+
+    def restart_server(self, host_id: int, *, crash: bool = False) -> int:
+        """Restart a server; its incarnation version increments (paper §3.2).
+        Returns the new version.  The cluster config (the 'local configuration
+        file' every client holds) is updated out-of-band, as an admin would
+        push it."""
+        srv = self.servers[host_id]
+        srv.restart(crash=crash)
+        self.config.bump_version(host_id, srv.version)
+        return srv.version
+
+    def ping(self, host_id: int) -> Dict:
+        resp = self.transport.request(self.config.addr(host_id),
+                                      Message(MsgType.PING))
+        return resp.header
+
+    def refresh_host(self, host_id: int) -> int:
+        """Client-side recovery: re-learn a server's incarnation via PING."""
+        info = self.ping(host_id)
+        if "version" in info:
+            self.config.bump_version(host_id, info["version"])
+            return info["version"]
+        raise ConnectionError(f"host {host_id} unreachable")
+
+    def shutdown(self) -> None:
+        for srv in self.servers.values():
+            srv.shutdown()
+
+    # --- convenience ------------------------------------------------------
+    def total_opened(self) -> int:
+        return sum(s.opened_count() for s in self.servers.values())

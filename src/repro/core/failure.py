@@ -1,0 +1,57 @@
+"""Failure injection & recovery scenarios over a BuffetCluster.
+
+Exercised by tests and the failover example: the paper's §3.2 version
+segment exists precisely to make server restarts detectable by clients; this
+module packages the kill/restart/slow-server scenarios used for
+fault-tolerance validation and straggler-mitigation benchmarks.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Iterator, Optional
+
+from .cluster import BuffetCluster
+from .transport import InProcTransport
+
+
+@contextlib.contextmanager
+def server_down(cluster: BuffetCluster, host_id: int) -> Iterator[None]:
+    """Take a server down for the duration of the context; restart (with a
+    version bump) on exit."""
+    cluster.kill_server(host_id)
+    try:
+        yield
+    finally:
+        cluster.restart_server(host_id)
+
+
+@contextlib.contextmanager
+def slow_server(cluster: BuffetCluster, host_id: int,
+                extra_delay_s: float = 0.05) -> Iterator[None]:
+    """Make one server a straggler by wrapping its handler with a delay.
+
+    Only valid for InProcTransport clusters.
+    """
+    tr = cluster.transport
+    assert isinstance(tr, InProcTransport)
+    addr = cluster.config.addr(host_id)
+    orig = tr._handlers[addr]
+
+    def slow(msg):
+        time.sleep(extra_delay_s)
+        return orig(msg)
+
+    tr._handlers[addr] = slow
+    try:
+        yield
+    finally:
+        tr._handlers[addr] = orig
+
+
+def crash_restart_cycle(cluster: BuffetCluster, host_id: int,
+                        *, crash: bool = True) -> int:
+    """One full crash/restart cycle; returns the new incarnation version."""
+    cluster.kill_server(host_id)
+    return cluster.restart_server(host_id, crash=crash)

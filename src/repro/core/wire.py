@@ -1,0 +1,138 @@
+"""BuffetFS wire protocol.
+
+Length-prefixed binary frames; a JSON control header plus an opaque payload
+so bulk data never round-trips through JSON:
+
+    [ u32 total_len ][ u8 msg_type ][ u32 header_len ][ header JSON ][ payload ]
+
+Every request/response is one frame.  `RpcStats` counts RPCs by type and by
+whether they sat on the critical path — RPC *count* is the paper's primary
+metric (BuffetFS restrains file access to ONE critical-path RPC; Lustre needs
+three round trips of which close() is async).
+"""
+from __future__ import annotations
+
+import json
+import struct
+import threading
+from collections import Counter
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import Any, Dict, Optional
+
+
+class MsgType(IntEnum):
+    # --- client -> server ---
+    LOOKUP_DIR = 1      # fetch directory data: dentries + 10-byte perm records
+    READ = 2            # may carry incomplete_open flag (deferred open step 2)
+    WRITE = 3           # may carry incomplete_open flag
+    CLOSE = 4           # async: remove from opened-file list
+    CREATE = 5
+    MKDIR = 6
+    UNLINK = 7
+    RMDIR = 8
+    CHMOD = 9           # triggers invalidation fan-out (§3.4)
+    CHOWN = 10
+    RENAME = 11
+    STAT = 12
+    TRUNCATE = 13
+    OPEN_RECORD = 14    # explicit open-state record (baselines; BuffetFS defers)
+    READ_INLINE = 15    # DoM-style open+read combined (baseline Lustre-DoM)
+    PING = 16
+    REVALIDATE = 17     # client refreshes an invalidated tree node
+    MKNOD_OBJ = 18      # allocate file/dir object on a data host (cross-host)
+    LINK_DENTRY = 19    # insert dentry(+10-byte perm) into parent's namespace host
+    # --- server -> client (callback channel) ---
+    INVALIDATE = 32     # server asks client to invalidate cached tree nodes
+    # --- generic ---
+    OK = 64
+    ERROR = 65
+
+
+_HDR = struct.Struct("<IBI")
+
+
+def encode(msg_type: int, header: Dict[str, Any], payload: bytes = b"") -> bytes:
+    hj = json.dumps(header, separators=(",", ":")).encode()
+    total = _HDR.size + len(hj) + len(payload)
+    return _HDR.pack(total, msg_type, len(hj)) + hj + payload
+
+
+def decode(frame: bytes):
+    total, msg_type, hlen = _HDR.unpack_from(frame, 0)
+    off = _HDR.size
+    header = json.loads(frame[off : off + hlen].decode())
+    payload = frame[off + hlen : total]
+    return MsgType(msg_type), header, payload
+
+
+@dataclass
+class Message:
+    type: MsgType
+    header: Dict[str, Any] = field(default_factory=dict)
+    payload: bytes = b""
+
+    def encode(self) -> bytes:
+        return encode(self.type, self.header, self.payload)
+
+    @staticmethod
+    def decode(frame: bytes) -> "Message":
+        t, h, p = decode(frame)
+        return Message(t, h, p)
+
+    @property
+    def nbytes(self) -> int:
+        return _HDR.size + len(json.dumps(self.header)) + len(self.payload)
+
+
+def ok(header: Optional[Dict[str, Any]] = None, payload: bytes = b"") -> Message:
+    return Message(MsgType.OK, header or {}, payload)
+
+
+def error(errno_: int, msg: str) -> Message:
+    return Message(MsgType.ERROR, {"errno": errno_, "msg": msg})
+
+
+class RpcStats:
+    """Thread-safe RPC accounting: the reproduction's primary metric."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.by_type: Counter = Counter()
+        self.critical_path: int = 0      # RPCs the caller blocked on
+        self.async_offpath: int = 0      # RPCs issued asynchronously (close())
+        self.bytes_sent: int = 0
+        self.bytes_recv: int = 0
+
+    def record(self, msg_type: MsgType, sent: int, recv: int, critical: bool) -> None:
+        with self._lock:
+            self.by_type[msg_type.name] += 1
+            if critical:
+                self.critical_path += 1
+            else:
+                self.async_offpath += 1
+            self.bytes_sent += sent
+            self.bytes_recv += recv
+
+    @property
+    def total(self) -> int:
+        return sum(self.by_type.values())
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "by_type": dict(self.by_type),
+                "total": self.total,
+                "critical_path": self.critical_path,
+                "async_offpath": self.async_offpath,
+                "bytes_sent": self.bytes_sent,
+                "bytes_recv": self.bytes_recv,
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self.by_type.clear()
+            self.critical_path = 0
+            self.async_offpath = 0
+            self.bytes_sent = 0
+            self.bytes_recv = 0

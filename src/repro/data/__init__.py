@@ -1,0 +1,8 @@
+"""repro.data — BuffetFS-served training input pipeline."""
+from .dataset import BuffetDataset, DatasetSpec
+from .pipeline import DataPipeline, PipelineStats
+from .sampler import ShardedSampler
+from .tokens import decode_sample, encode_sample, pack_batch
+
+__all__ = ["BuffetDataset", "DatasetSpec", "DataPipeline", "PipelineStats",
+           "ShardedSampler", "decode_sample", "encode_sample", "pack_batch"]

@@ -1,0 +1,16 @@
+"""repro.kernels — Pallas TPU kernels for the model compute hot spots.
+
+The BuffetFS paper has no kernel-level contribution (its mechanism is
+host-side RPC elimination); these kernels serve the assigned architectures'
+perf-critical layers.  Each subpackage ships kernel.py (pl.pallas_call +
+BlockSpec), ops.py (jit wrapper) and ref.py (pure-jnp oracle); tests sweep
+shapes/dtypes in interpret mode against the oracle.
+"""
+from .decode_attention import decode_attention, decode_attention_ref
+from .flash_attention import attention_ref, flash_attention
+from .rmsnorm import rmsnorm, rmsnorm_ref
+from .cross_entropy import ce_ref, fused_ce
+from .ssd_scan import ssd_ref, ssd_scan
+
+__all__ = ["decode_attention", "decode_attention_ref", "attention_ref",
+           "flash_attention", "rmsnorm", "rmsnorm_ref", "ssd_ref", "ssd_scan", "ce_ref", "fused_ce"]

@@ -1,0 +1,5 @@
+from .kernel import fused_ce
+from .ops import fused_ce_op
+from .ref import ce_ref
+
+__all__ = ["fused_ce", "fused_ce_op", "ce_ref"]

@@ -1,0 +1,14 @@
+"""jit'd wrapper for the fused cross-entropy kernel."""
+import functools
+
+import jax
+
+from .kernel import fused_ce
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "block_v", "interpret"))
+def fused_ce_op(logits, labels, mask, *, block_rows: int = 256,
+                block_v: int = 2048, interpret: bool = False):
+    return fused_ce(logits, labels, mask, block_rows=block_rows,
+                    block_v=block_v, interpret=interpret)

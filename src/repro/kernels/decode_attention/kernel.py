@@ -1,0 +1,93 @@
+"""Single-token decode attention over a long KV cache (Pallas TPU).
+
+The decode hot spot is MEMORY-bound: it streams the whole KV cache once per
+token.  The kernel tiles the cache along T (sequential innermost grid axis)
+and carries the online-softmax state in VMEM scratch; the GQA query group
+([rep, D], rep = H/Hkv) rides along in registers so each KV tile is read
+exactly once for all of its query heads — the roofline-optimal layout.
+
+Variable sequence lengths are handled with a per-sequence `lengths` mask so
+one batched kernel serves ragged batches (continuous batching).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, block_kv):
+    ti = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    start = ti * block_kv
+
+    @pl.when(start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # [rep, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bkv, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # [bkv, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [rep,bkv]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * alpha
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_scr[...] = m_new
+
+    @pl.when(ti == nt - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lengths, *, scale=None, block_kv: int = 512,
+                     interpret: bool = False):
+    """q [B,H,D]; k,v [B,T,Hkv,D]; lengths [B] -> out [B,H,D]."""
+    b, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    block_kv = min(block_kv, t)
+    assert t % block_kv == 0
+    qg = q.reshape(b, hkv, rep, d)
+    grid = (b, hkv, t // block_kv)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_kv=block_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, gi, ti: (bi,)),
+            pl.BlockSpec((1, 1, rep, d), lambda bi, gi, ti: (bi, gi, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, d), lambda bi, gi, ti: (bi, ti, gi, 0)),
+            pl.BlockSpec((1, block_kv, 1, d), lambda bi, gi, ti: (bi, ti, gi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d), lambda bi, gi, ti: (bi, gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(b, h, d)

@@ -1,0 +1,13 @@
+"""jit'd wrapper for the decode-attention kernel."""
+import functools
+
+import jax
+
+from .kernel import decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_kv", "interpret"))
+def decode_attention_op(q, k, v, lengths, *, scale=None, block_kv: int = 512,
+                        interpret: bool = False):
+    return decode_attention(q, k, v, lengths, scale=scale, block_kv=block_kv,
+                            interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths, scale=None):
+    """q [B,H,D] (one new token per sequence); k,v [B,T,Hkv,D];
+    lengths [B] (valid cache length per sequence, including the new token).
+    Returns out [B,H,D]."""
+    b, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, rep, d)
+    sc = jnp.einsum("bgrd,btgd->bgrt", qf, k.astype(jnp.float32)) * scale
+    mask = jnp.arange(t)[None, :] < lengths[:, None]          # [B, T]
+    sc = jnp.where(mask[:, None, None, :], sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bgrt,btgd->bgrd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,265 @@
+"""Flash attention (forward + backward) as Pallas TPU kernels.
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+* the TPU grid executes SEQUENTIALLY per core, so the online-softmax running
+  state (m, l, acc) lives in VMEM scratch that persists across the innermost
+  kv-block grid axis — no atomics / shared-memory tricks;
+* BlockSpecs tile q/k/v into (block_q x d) / (block_kv x d) VMEM tiles with
+  d padded to the 128-lane register width; MXU matmuls are (block_q x d) @
+  (d x block_kv) with block sizes multiples of 128 on real TPU (tests use
+  smaller interpret-mode tiles);
+* causal skipping: kv blocks strictly above the diagonal are skipped with
+  `pl.when`, halving compute for long sequences;
+* GQA is handled in the index maps (kv head = q head // group size), so no
+  KV duplication is materialized.
+
+VMEM budget at default tiles (block_q=block_kv=512, d=128, fp32 compute):
+q 256KB + k 256KB + v 256KB + acc 256KB + dots 1MB  <<  ~16MB/core.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *, scale: float, block_q: int,
+                block_kv: int, seq_len: int, causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_end = (qi + 1) * block_q
+    kv_start = ki * block_kv
+    run = (not causal) or (kv_start < q_end)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bkv, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq,bkv]
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                           s.shape, 0)
+            cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]                                # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                             # [bq, bkv]
+        alpha = jnp.exp(m_prev - m_new)                    # [bq, 1]
+        l_new = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # [bkv, d]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nkv - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_scr[...] + jnp.log(jnp.maximum(l, 1e-30)))[:, 0]
+
+
+def flash_attention_fwd(q, k, v, *, scale=None, causal=True,
+                        block_q=512, block_kv=512, interpret=False):
+    """q [B,H,S,D]; k,v [B,Hkv,S,D] -> (out [B,H,S,D], lse [B,H,S])."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    grid = (b, h, s // block_q, s // block_kv)
+
+    kern = functools.partial(_fwd_kernel, scale=scale, block_q=block_q,
+                             block_kv=block_kv, seq_len=s, causal=causal)
+    out, lse = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda bi, hi, qi, ki: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda bi, hi, qi, ki: (bi, hi // rep, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda bi, hi, qi, ki: (bi, hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# backward: dq pass (grid over q blocks; kv innermost) and
+#           dkv pass (grid over kv blocks; q innermost)
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   dq_scr, *, scale, block_q, block_kv, causal):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q_end = (qi + 1) * block_q
+    kv_start = ki * block_kv
+    run = (not causal) or (kv_start < q_end)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        delta = delta_ref[0, 0][:, None]
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())))
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        p = jnp.exp(s - lse)                                # [bq, bkv]
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+        ds = p * (dp - delta) * scale
+        dq_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == nkv - 1)
+    def _fin():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_scr, dv_scr, *, scale, block_q,
+                    block_kv, causal):
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q_end = (qi + 1) * block_q
+    kv_start = ki * block_kv
+    run = (not causal) or (kv_start < q_end)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        delta = delta_ref[0, 0][:, None]
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())))
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        p = jnp.exp(s - lse)                                # [bq, bkv]
+        dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+        ds = p * (dp - delta) * scale                       # [bq, bkv]
+        dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+
+    @pl.when(qi == nq - 1)
+    def _fin():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, out, lse, do, *, scale=None, causal=True,
+                        block_q=512, block_kv=512, interpret=False):
+    """Returns (dq, dk, dv).  dk/dv are per-QUERY-head (caller reduces over
+    the GQA group)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    delta = jnp.sum(out.astype(jnp.float32) * do.astype(jnp.float32), axis=-1)
+
+    kmap = lambda bi, hi, qi, ki: (bi, hi // rep, ki, 0)
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, block_q=block_q,
+                          block_kv=block_kv, causal=causal),
+        grid=(b, h, s // block_q, s // block_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), kmap),
+            pl.BlockSpec((1, 1, block_kv, d), kmap),
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda bi, hi, qi, ki: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, block_q), lambda bi, hi, qi, ki: (bi, hi, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    kmap2 = lambda bi, hi, ki, qi: (bi, hi // rep, ki, 0)
+    qmap2 = lambda bi, hi, ki, qi: (bi, hi, qi, 0)
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, block_q=block_q,
+                          block_kv=block_kv, causal=causal),
+        grid=(b, h, s // block_kv, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), qmap2),
+            pl.BlockSpec((1, 1, block_kv, d), kmap2),
+            pl.BlockSpec((1, 1, block_kv, d), kmap2),
+            pl.BlockSpec((1, 1, block_q, d), qmap2),
+            pl.BlockSpec((1, 1, block_q), lambda bi, hi, ki, qi: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, block_q), lambda bi, hi, ki, qi: (bi, hi, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_kv, d), lambda bi, hi, ki, qi: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda bi, hi, ki, qi: (bi, hi, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_kv, d), jnp.float32),
+                        pltpu.VMEM((block_kv, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    # reduce per-query-head dk/dv back to kv heads
+    dk = dk.reshape(b, hkv, rep, s, d).sum(axis=2).astype(k.dtype)
+    dv = dv.reshape(b, hkv, rep, s, d).sum(axis=2).astype(v.dtype)
+    return dq, dk, dv

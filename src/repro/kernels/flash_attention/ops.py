@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the flash-attention kernel with custom VJP."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bwd, flash_attention_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, scale: Optional[float] = None, causal: bool = True,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False):
+    out, _ = flash_attention_fwd(q, k, v, scale=scale, causal=causal,
+                                 block_q=block_q, block_kv=block_kv,
+                                 interpret=interpret)
+    return out
+
+
+def _fwd(q, k, v, scale, causal, block_q, block_kv, interpret):
+    out, lse = flash_attention_fwd(q, k, v, scale=scale, causal=causal,
+                                   block_q=block_q, block_kv=block_kv,
+                                   interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(scale, causal, block_q, block_kv, interpret, res, do):
+    q, k, v, out, lse = res
+    dq, dk, dv = flash_attention_bwd(q, k, v, out, lse, do, scale=scale,
+                                     causal=causal, block_q=block_q,
+                                     block_kv=block_kv, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel (causal GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  scale: float | None = None, *, causal: bool = True
+                  ) -> jnp.ndarray:
+    """q [B,H,S,D]; k,v [B,Hkv,T,D] -> out [B,H,S,D] (fp32 math)."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, rep, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    sc = jnp.einsum("bgrsd,bgtd->bgrst", qf, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        sc = jnp.where(mask, sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bgrst,bgtd->bgrsd", w, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def lse_ref(q, k, scale=None, *, causal: bool = True):
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, rep, s, d)
+    sc = jnp.einsum("bgrsd,bgtd->bgrst", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        sc = jnp.where(mask, sc, -jnp.inf)
+    return jax.nn.logsumexp(sc, axis=-1).reshape(b, h, s)

@@ -1,0 +1,5 @@
+from .kernel import rmsnorm
+from .ops import rmsnorm_op
+from .ref import rmsnorm_ref
+
+__all__ = ["rmsnorm", "rmsnorm_op", "rmsnorm_ref"]

@@ -1,0 +1,13 @@
+"""jit'd wrapper for the fused RMSNorm kernel."""
+import functools
+
+import jax
+
+from .kernel import rmsnorm
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_op(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+               interpret: bool = False):
+    return rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                   interpret=interpret)

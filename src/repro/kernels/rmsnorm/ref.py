@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)

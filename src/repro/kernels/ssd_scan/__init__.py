@@ -1,0 +1,5 @@
+from .kernel import ssd_scan
+from .ops import ssd_scan_op
+from .ref import ssd_ref
+
+__all__ = ["ssd_scan", "ssd_scan_op", "ssd_ref"]

@@ -1,0 +1,116 @@
+"""Mamba2 / SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation (vs the paper's CUDA kernels): one kernel processes the whole
+sequence for a (batch, head-block) tile, iterating chunks along a SEQUENTIAL
+grid axis; the inter-chunk recurrent state [Hb, P, N] lives in VMEM scratch
+and persists across chunk iterations — the TPU's in-order grid replaces the
+GPU's cross-block synchronization.
+
+Per chunk the kernel computes, entirely in VMEM:
+  1. within-chunk decay cumsum (log space),
+  2. the causal quadratic term  (C_i.B_j * decay)  via MXU matmuls,
+  3. the inter-chunk contribution C_i * decay_i * h_state,
+  4. the state update h <- chunk_decay * h + sum_j decay_to_end B_j x_j^T.
+
+VMEM at defaults (L=256 chunk, Hb=4 heads, P=64, N=128, fp32):
+x 256KB, B/C 128KB each, att 256KB, state 128KB — comfortably < 8MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, h_ref,
+                state_scr, *, chunk: int, nheads_blk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [L, Hb, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [L, Hb]
+    a_log = alog_ref[...].astype(jnp.float32)  # [Hb]
+    B = b_ref[0].astype(jnp.float32)          # [L, N]
+    C = c_ref[0].astype(jnp.float32)          # [L, N]
+
+    A = -jnp.exp(a_log)                       # [Hb]
+    loga = dt * A                             # [L, Hb]
+    cum = jnp.cumsum(loga, axis=0)            # [L, Hb]
+    xdt = x * dt[..., None]                   # [L, Hb, P]
+
+    # causal decay matrix per head: seg[i,j,h] = exp(cum_i - cum_j), j<=i
+    seg = cum[:, None, :] - cum[None, :, :]   # [L, L, Hb]
+    iot_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iot_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = (iot_i >= iot_j)[..., None]
+    att = jnp.where(causal, jnp.exp(seg), 0.0)          # [L, L, Hb]
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))  # [L, L]
+    att = att * cb[..., None]
+
+    # 2. intra-chunk:  y_intra[i,h,p] = sum_j att[i,j,h] xdt[j,h,p]
+    y_intra = jnp.einsum("ijh,jhp->ihp", att, xdt)
+
+    # 3. inter-chunk: y_inter[i,h,p] = C_i . (exp(cum_i) * h_state)[h,p,:]
+    h_state = state_scr[...]                             # [Hb, P, N]
+    dec_from_start = jnp.exp(cum)                        # [L, Hb]
+    ch = jnp.einsum("in,hpn->ihp", C, h_state)           # [L, Hb, P]
+    y = y_intra + ch * dec_from_start[..., None]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # 4. state update
+    dec_to_end = jnp.exp(cum[-1:, :] - cum)              # [L, Hb]
+    new_contrib = jnp.einsum("lh,ln,lhp->hpn", dec_to_end, B, xdt)
+    chunk_decay = jnp.exp(cum[-1, :])                    # [Hb]
+    state_scr[...] = h_state * chunk_decay[:, None, None] + new_contrib
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        h_ref[0] = state_scr[...].astype(h_ref.dtype)
+
+
+def ssd_scan(x, dt, a_log, B, C, *, chunk: int = 256, heads_block: int = 4,
+             interpret: bool = False):
+    """x [B,S,H,P]; dt [B,S,H]; a_log [H]; B,C [B,S,N].
+    Returns y [B,S,H,P], h_final [B,H,P,N]."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    heads_block = min(heads_block, h)
+    assert h % heads_block == 0
+    grid = (b, h // heads_block, s // chunk)
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk, nheads_blk=heads_block)
+    y, h_fin = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, heads_block, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, heads_block),
+                         lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((heads_block,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, heads_block, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, heads_block, p, n),
+                         lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((heads_block, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, B, C)
+    return y, h_fin

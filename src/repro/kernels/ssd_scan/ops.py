@@ -1,0 +1,17 @@
+"""jit'd wrapper for the SSD scan kernel (forward; training uses the jnp
+reference path whose gradient XLA derives — the kernel is the serve-path
+hot spot where the sequential scan dominates)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "heads_block", "interpret"))
+def ssd_scan_op(x, dt, a_log, B, C, *, chunk: int = 256, heads_block: int = 4,
+                interpret: bool = False):
+    return ssd_scan(x, dt, a_log, B, C, chunk=chunk, heads_block=heads_block,
+                    interpret=interpret)

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel: re-exports the model's
+reference implementation (single source of truth)."""
+from ...models.ssm import ssd_chunked as ssd_ref  # noqa: F401

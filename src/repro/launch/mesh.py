@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state.  Shapes: 16x16 = one v5e pod (256 chips);
+2x16x16 = two pods (512 chips) with a leading "pod" axis mapped to the
+DCN-connected dimension.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over locally-visible devices (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

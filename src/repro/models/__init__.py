@@ -1,0 +1,6 @@
+"""repro.models — pure-JAX model zoo (scan-over-layers, functional)."""
+from .transformer import (decode_step, forward, init_cache, init_model,
+                          loss_fn, prefill)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_model", "loss_fn",
+           "prefill"]

@@ -1,0 +1,69 @@
+"""Elastic scaling: re-mesh and re-shard a training job when the device
+count changes (node failure, pool resize).
+
+The checkpoint layer already stores arrays whole (part-split along axis 0,
+reassembled on load), so elasticity is a host-side concern:
+
+  1. detect the new device count,
+  2. build the largest (data, model) mesh that fits it,
+  3. restore the latest checkpoint and `device_put` with the new shardings,
+  4. rebuild the sampler with the new dp_size (cursor preserved).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from ..ckpt import CheckpointManager
+from ..data import ShardedSampler
+
+
+def best_mesh_shape(n_devices: int, *, prefer_model: int = 16
+                    ) -> Tuple[int, int]:
+    """Largest (data, model) grid for n_devices: model axis capped at
+    prefer_model, data gets the rest; falls back toward (n, 1)."""
+    model = min(prefer_model, n_devices)
+    while model > 1 and n_devices % model:
+        model -= 1
+    return n_devices // model, model
+
+
+def remesh(n_devices: Optional[int] = None, *, prefer_model: int = 16) -> Mesh:
+    devs = jax.devices()[: n_devices or len(jax.devices())]
+    data, model = best_mesh_shape(len(devs))
+    import numpy as np
+    return Mesh(np.array(devs).reshape(data, model), ("data", "model"))
+
+
+@dataclass
+class ElasticRestore:
+    mesh: Mesh
+    state: Any
+    step: int
+    sampler: ShardedSampler
+
+
+def elastic_restore(ckpt: CheckpointManager, like_state: Any,
+                    global_batch: int, n_samples: int,
+                    *, n_devices: Optional[int] = None,
+                    shardings: Any = None) -> ElasticRestore:
+    """Restore the latest checkpoint onto a freshly-sized mesh.
+
+    `shardings` (optional) is a sharding pytree matching `like_state` built
+    against the NEW mesh; without it arrays stay on default placement.
+    """
+    mesh = remesh(n_devices)
+    step, state = ckpt.restore(like=like_state)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    man = ckpt.manifest(step)
+    s = ShardedSampler(n_samples=n_samples, global_batch=global_batch,
+                       dp_rank=0, dp_size=1)
+    if "sampler" in man.extra:
+        s.load_state_dict(man.extra["sampler"])
+    return ElasticRestore(mesh=mesh, state=state,
+                          step=int(man.extra.get("train_step", step)),
+                          sampler=s)

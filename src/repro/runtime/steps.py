@@ -1,0 +1,109 @@
+"""Step functions + abstract state builders for train and serve.
+
+`abstract_state` builds ShapeDtypeStruct trees via `jax.eval_shape` so a
+671B-parameter model can be lowered/compiled (dry-run) without allocating a
+byte — the shannon/kernels input_specs pattern applied to whole train states.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, ModelConfig
+from ..models import init_cache, init_model, loss_fn
+from ..models.transformer import decode_step, prefill
+from ..optim import AdamWConfig, adamw_update, init_opt_state
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key) -> Dict[str, Any]:
+    params, _ = init_model(cfg, key)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def train_step(state: Dict[str, Any], batch: Dict[str, jnp.ndarray],
+               cfg: ModelConfig, opt_cfg: AdamWConfig
+               ) -> Tuple[Dict[str, Any], Dict[str, jnp.ndarray]]:
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, cfg), has_aux=True)(state["params"])
+    new_params, new_opt, opt_metrics = adamw_update(
+        grads, state["opt"], state["params"], opt_cfg)
+    metrics = {**metrics, **opt_metrics}
+    return {"params": new_params, "opt": new_opt}, metrics
+
+
+def make_train_step_fn(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    return functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg)
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def prefill_step(params: PyTree, cache: PyTree, batch: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig):
+    return prefill(params, batch, cfg, cache)
+
+
+def serve_step(params: PyTree, cache: PyTree, batch: Dict[str, jnp.ndarray],
+               pos: jnp.ndarray, cfg: ModelConfig):
+    """One-token decode against a cache filled to `pos`."""
+    return decode_step(params, batch, cfg, cache, pos)
+
+
+# ---------------------------------------------------------------------------
+# abstract (ShapeDtypeStruct) builders — no allocation
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_model(cfg, k)[0], key)
+
+
+def model_axes(cfg: ModelConfig) -> PyTree:
+    """Logical-axes tree.  Computed from the reduced config (cheap, CPU-safe):
+    scan stacking keeps ONE axes entry per block, so the tree structure is
+    identical between reduced and full configs."""
+    small = cfg.reduced()
+    _, axes = init_model(small, jax.random.PRNGKey(0))
+    return axes
+
+
+def abstract_opt_state(params_sds: PyTree, opt_cfg: AdamWConfig) -> PyTree:
+    return jax.eval_shape(lambda: init_opt_state(
+        jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), params_sds), opt_cfg))
+
+
+def abstract_state(cfg: ModelConfig, opt_cfg: AdamWConfig) -> Dict[str, PyTree]:
+    p = abstract_params(cfg)
+    return {"params": p, "opt": abstract_opt_state(p, opt_cfg)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def abstract_batch(cfg: ModelConfig, shape: InputShape, *, for_decode: bool = False
+                   ) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch
+    s = 1 if for_decode else shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": sds((b, s), jnp.int32),
+    }
+    if shape.kind == "train":
+        batch["labels"] = sds((b, s), jnp.int32)
+        batch["loss_mask"] = sds((b, s), jnp.float32)
+    if cfg.frontend is not None:
+        # stub modality frontend supplies precomputed embeddings
+        batch["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    return batch

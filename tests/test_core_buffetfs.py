@@ -1,0 +1,396 @@
+"""Core BuffetFS behaviour tests: the paper's mechanism, RPC counts, and
+consistency semantics."""
+import errno
+import threading
+import time
+
+import pytest
+
+from repro.core import (BAgent, BLib, BuffetCluster, Credentials, Inode,
+                        LustreDoMClient, LustreNormalClient, MsgType,
+                        O_CREAT, O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY,
+                        PermRecord, access_ok, R_OK, W_OK, X_OK)
+from repro.core.perms import FSError, PERM_BYTES
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4)
+    yield c
+    c.shutdown()
+
+
+@pytest.fixture()
+def lib(cluster):
+    agent = BAgent(cluster)
+    yield BLib(agent)
+    agent.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# permission record: exactly the paper's ten bytes
+# ---------------------------------------------------------------------------
+
+def test_perm_record_is_ten_bytes():
+    assert PERM_BYTES == 10
+    p = PermRecord(0o100644, 1000, 100)
+    assert len(p.pack()) == 10
+    assert PermRecord.unpack(p.pack()) == p
+
+
+def test_inode_roundtrip():
+    ino = Inode(host_id=37, version=5, file_id=123456789)
+    assert Inode.unpack(ino.pack()) == ino
+
+
+# ---------------------------------------------------------------------------
+# basic POSIX behaviour
+# ---------------------------------------------------------------------------
+
+def test_write_read_roundtrip(lib):
+    lib.makedirs("/data/train")
+    lib.write_file("/data/train/a.bin", b"hello buffet")
+    assert lib.read_file("/data/train/a.bin") == b"hello buffet"
+
+
+def test_listdir_and_exists(lib):
+    lib.makedirs("/d")
+    for i in range(5):
+        lib.write_file(f"/d/f{i}", bytes([i]))
+    assert lib.listdir("/d") == [f"f{i}" for i in range(5)]
+    assert lib.exists("/d/f3")
+    assert not lib.exists("/d/nope")
+
+
+def test_unlink_and_rename(lib):
+    lib.makedirs("/d")
+    lib.write_file("/d/x", b"1")
+    lib.rename("/d/x", "y")
+    assert lib.read_file("/d/y") == b"1"
+    lib.unlink("/d/y")
+    assert not lib.exists("/d/y")
+
+
+def test_open_missing_enoent(lib):
+    lib.makedirs("/d")
+    with pytest.raises(FSError) as ei:
+        lib.read_file("/d/missing")
+    assert ei.value.errno == errno.ENOENT
+
+
+def test_truncate_on_reopen(lib):
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"long old content")
+    lib.write_file("/d/f", b"new")
+    assert lib.read_file("/d/f") == b"new"
+
+
+def test_pread(lib):
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"0123456789")
+    with lib.open("/d/f") as f:
+        assert f.pread(4, 3) == b"3456"
+
+
+# ---------------------------------------------------------------------------
+# THE PAPER'S MECHANISM: open() with zero RPCs once the dir tree is cached
+# ---------------------------------------------------------------------------
+
+def test_open_zero_rpc_when_cached(cluster):
+    agent = BAgent(cluster)
+    lib = BLib(agent)
+    lib.makedirs("/a/b")
+    for i in range(10):
+        lib.write_file(f"/a/b/f{i}", b"x" * 64)
+    agent.warm("/a/b")  # one LOOKUP_DIR per directory, then fully local
+    agent.drain()       # let setup's async closes finish
+    agent.stats.reset()
+
+    fd = agent.open("/a/b/f7", O_RDONLY)
+    snap = agent.stats.snapshot()
+    assert snap["total"] == 0, f"open() must not RPC when cached: {snap}"
+
+    data = agent.read(fd)
+    assert data == b"x" * 64
+    snap = agent.stats.snapshot()
+    assert snap["by_type"] == {"READ": 1}
+    assert snap["critical_path"] == 1
+
+    agent.close(fd)  # async: immediately returns
+    agent.drain()
+    time.sleep(0.02)
+    snap = agent.stats.snapshot()
+    assert snap["critical_path"] == 1          # close never blocked the app
+    assert snap["by_type"].get("CLOSE") == 1   # but the wrap-up RPC happened
+    agent.shutdown()
+
+
+def test_open_of_never_seen_file_uses_parent_perms(cluster):
+    """A file never accessed before must be openable with no extra RPC beyond
+    the parent directory fetch — its perm rides in the parent's dentries."""
+    setup = BAgent(cluster)
+    sl = BLib(setup)
+    sl.makedirs("/p")
+    sl.write_file("/p/never_seen", b"data")
+
+    fresh = BAgent(cluster)
+    fresh.stats.reset()
+    fd = fresh.open("/p/never_seen", O_RDONLY)
+    snap = fresh.stats.snapshot()
+    # 2 LOOKUP_DIRs (root + /p), zero per-file RPCs
+    assert snap["by_type"] == {"LOOKUP_DIR": 2}
+    assert fresh.read(fd) == b"data"
+    fresh.shutdown()
+    setup.shutdown()
+
+
+def test_deferred_open_recorded_on_first_read(cluster):
+    agent = BAgent(cluster)
+    lib = BLib(agent)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"z")
+    agent.drain()
+    assert cluster.total_opened() == 0
+    fd = agent.open("/d/f", O_RDONLY)
+    assert cluster.total_opened() == 0      # step 2 deferred: not yet recorded
+    agent.read(fd, 1)
+    assert cluster.total_opened() == 1      # piggybacked on first READ
+    agent.close(fd)
+    agent.drain()
+    time.sleep(0.05)
+    assert cluster.total_opened() == 0      # async close wrapped up
+    agent.shutdown()
+
+
+def test_open_never_read_never_contacts_server(cluster):
+    agent = BAgent(cluster)
+    lib = BLib(agent)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"z")
+    agent.warm("/d")
+    agent.drain()
+    agent.stats.reset()
+    fd = agent.open("/d/f", O_RDONLY)
+    agent.close(fd)
+    agent.drain()
+    time.sleep(0.02)
+    assert agent.stats.snapshot()["total"] == 0
+    agent.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# permission checks run CLIENT-side and enforce POSIX semantics
+# ---------------------------------------------------------------------------
+
+def test_access_denied_without_read_bit(cluster):
+    root_agent = BAgent(cluster, cred=Credentials(uid=0))
+    rl = BLib(root_agent)
+    rl.makedirs("/secure")
+    rl.write_file("/secure/s", b"secret")
+    rl.chmod("/secure/s", 0o600)
+    rl.chown("/secure/s", 42, 42)
+
+    user = BAgent(cluster, cred=Credentials(uid=1000, gid=1000))
+    with pytest.raises(FSError) as ei:
+        user.open("/secure/s", O_RDONLY)
+    assert ei.value.errno == errno.EACCES
+    # owner can
+    owner = BAgent(cluster, cred=Credentials(uid=42, gid=42))
+    fd = owner.open("/secure/s", O_RDONLY)
+    assert owner.read(fd) == b"secret"
+    for a in (root_agent, user, owner):
+        a.shutdown()
+
+
+def test_execute_bit_required_on_path_components(cluster):
+    root_agent = BAgent(cluster, cred=Credentials(uid=0))
+    rl = BLib(root_agent)
+    rl.makedirs("/locked/inner")
+    rl.write_file("/locked/inner/f", b"x")
+    rl.chmod("/locked", 0o600)  # no x: cannot traverse
+
+    user = BAgent(cluster, cred=Credentials(uid=1000, gid=1000))
+    with pytest.raises(FSError) as ei:
+        user.open("/locked/inner/f", O_RDONLY)
+    assert ei.value.errno == errno.EACCES
+    root_agent.shutdown()
+    user.shutdown()
+
+
+def test_write_requires_w_bit(cluster):
+    root_agent = BAgent(cluster, cred=Credentials(uid=0))
+    rl = BLib(root_agent)
+    rl.makedirs("/d")
+    rl.write_file("/d/ro", b"x")
+    rl.chmod("/d/ro", 0o444)
+    user = BAgent(cluster, cred=Credentials(uid=1000, gid=1000))
+    with pytest.raises(FSError):
+        user.open("/d/ro", O_WRONLY)
+    root_agent.shutdown()
+    user.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# §3.4 consistency: invalidate-before-apply, revalidate-on-access
+# ---------------------------------------------------------------------------
+
+def test_chmod_invalidates_caching_clients(cluster):
+    owner = BAgent(cluster, cred=Credentials(uid=0))
+    ol = BLib(owner)
+    ol.makedirs("/d")
+    ol.write_file("/d/f", b"x")
+    ol.chmod("/d/f", 0o644)
+
+    reader = BAgent(cluster, cred=Credentials(uid=1000, gid=1000))
+    fd = reader.open("/d/f", O_RDONLY)       # caches /d with f's perm
+    assert reader.read(fd) == b"x"
+
+    ol.chmod("/d/f", 0o600)                  # server invalidates reader FIRST
+
+    # reader must now see the new permission (revalidates on access)
+    with pytest.raises(FSError) as ei:
+        reader.open("/d/f", O_RDONLY)
+    assert ei.value.errno == errno.EACCES
+    owner.shutdown()
+    reader.shutdown()
+
+
+def test_revalidation_costs_one_rpc(cluster):
+    owner = BAgent(cluster, cred=Credentials(uid=0))
+    ol = BLib(owner)
+    ol.makedirs("/d")
+    ol.write_file("/d/f", b"x")
+
+    reader = BAgent(cluster)
+    reader.warm("/d")
+    ol.chmod("/d/f", 0o640)                  # invalidates reader's /d node
+    reader.stats.reset()
+    reader.open("/d/f", O_RDONLY)            # must revalidate: exactly 1 RPC
+    snap = reader.stats.snapshot()
+    assert snap["total"] == 1
+    assert list(snap["by_type"]) == ["LOOKUP_DIR"]
+    owner.shutdown()
+    reader.shutdown()
+
+
+def test_create_by_other_client_visible(cluster):
+    a = BAgent(cluster)
+    b = BAgent(cluster)
+    al, bl_ = BLib(a), BLib(b)
+    al.makedirs("/shared")
+    a.warm("/shared")
+    b.warm("/shared")
+    bl_.write_file("/shared/new_file", b"from b")
+    # a's cache of /shared was invalidated by b's CREATE: a sees the file
+    assert al.read_file("/shared/new_file") == b"from b"
+    a.shutdown()
+    b.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# RPC-count comparison vs the Lustre baselines (the paper's headline)
+# ---------------------------------------------------------------------------
+
+def _mkfiles(cluster, n=8):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/bench")
+    for i in range(n):
+        lib.write_file(f"/bench/f{i}", b"v" * 128)
+    a.shutdown()
+
+
+def test_rpc_counts_buffet_vs_lustre(cluster):
+    _mkfiles(cluster)
+
+    # BuffetFS: warm cache, then each access = 1 critical RPC (READ)
+    agent = BAgent(cluster)
+    agent.warm("/bench")
+    agent.stats.reset()
+    for i in range(8):
+        fd = agent.open(f"/bench/f{i}", O_RDONLY)
+        agent.read(fd)
+        agent.close(fd)
+    buffet = agent.stats.snapshot()
+    assert buffet["critical_path"] == 8          # exactly 1 per file
+    agent.shutdown()
+
+    # Lustre-Normal: open RPC + read RPC per file = 2 critical
+    ln = LustreNormalClient(cluster)
+    for i in range(8):
+        fd = ln.open(f"/bench/f{i}", O_RDONLY)
+        ln.read(fd)
+        ln.close(fd)
+    lnorm = ln.stats.snapshot()
+    crit_per_file = (lnorm["critical_path"] - lnorm["by_type"].get("LOOKUP_DIR", 0)) / 8
+    assert crit_per_file == 2.0
+    ln.shutdown()
+
+    # Lustre-DoM: inline read -> 1 critical RPC but it hits the MDS
+    ld = LustreDoMClient(cluster)
+    for i in range(8):
+        fd = ld.open(f"/bench/f{i}", O_RDONLY)
+        ld.read(fd)
+        ld.close(fd)
+    ldom = ld.stats.snapshot()
+    crit_per_file = (ldom["critical_path"] - ldom["by_type"].get("LOOKUP_DIR", 0)) / 8
+    assert crit_per_file == 1.0
+    assert ldom["by_type"]["READ_INLINE"] == 8
+    ld.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# failure handling: version bump on restart, client recovery
+# ---------------------------------------------------------------------------
+
+def test_server_restart_version_recovery(cluster, tmp_path):
+    agent = BAgent(cluster)
+    lib = BLib(agent)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"persisted")
+
+    host = Inode.unpack(agent.stat_cached("/d/f")["ino"]).host_id
+    old_ver = cluster.servers[host].version
+    cluster.restart_server(host)
+    assert cluster.servers[host].version == old_ver + 1
+
+    # client still reads through: ESTALE triggers transparent retry
+    assert lib.read_file("/d/f") == b"persisted"
+    agent.shutdown()
+
+
+def test_crash_restart_preserves_persisted_data(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=2, fsync_policy="mutating")
+    agent = BAgent(c)
+    lib = BLib(agent)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"durable")
+    for host in list(c.servers):
+        c.restart_server(host, crash=True)
+    agent2 = BAgent(c)
+    assert BLib(agent2).read_file("/d/f") == b"durable"
+    for a in (agent, agent2):
+        a.shutdown()
+    c.shutdown()
+
+
+def test_concurrent_readers_many_files(cluster):
+    _mkfiles(cluster, n=32)
+    errors = []
+
+    def worker():
+        try:
+            a = BAgent(cluster)
+            lib = BLib(a)
+            for i in range(32):
+                assert lib.read_file(f"/bench/f{i}") == b"v" * 128
+            a.shutdown()
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors

@@ -1,0 +1,211 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes, dtypes and block sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.flash_attention.kernel import (flash_attention_bwd,
+                                                  flash_attention_fwd)
+from repro.kernels.flash_attention.ref import lse_ref
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+from repro.kernels.ssd_scan import ssd_ref, ssd_scan
+
+TOL = dict(rtol=2e-3, atol=2e-3)
+TOL_BF16 = dict(rtol=3e-2, atol=3e-2)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,hkv,s,d", [
+    (1, 2, 2, 64, 32),     # MHA
+    (2, 4, 2, 128, 32),    # GQA rep=2
+    (1, 8, 1, 128, 64),    # MQA
+    (1, 4, 4, 96, 16),     # non-pow2 seq (3 blocks of 32)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_fwd_matches_ref(b, h, hkv, s, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (b, h, s, d), dtype)
+    k = _rand(ks[1], (b, hkv, s, d), dtype)
+    v = _rand(ks[2], (b, hkv, s, d), dtype)
+    out, lse = flash_attention_fwd(q, k, v, block_q=32, block_kv=32,
+                                   interpret=True)
+    ref = attention_ref(q, k, v)
+    tol = TOL if dtype == jnp.float32 else TOL_BF16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(lse),
+                               np.asarray(lse_ref(q, k)), rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("blocks", [(32, 32), (64, 32), (32, 64), (128, 128)])
+def test_flash_fwd_block_sweep(blocks):
+    bq, bkv = blocks
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 2, 128, 32), jnp.float32)
+    k = _rand(ks[1], (1, 2, 128, 32), jnp.float32)
+    v = _rand(ks[2], (1, 2, 128, 32), jnp.float32)
+    out, _ = flash_attention_fwd(q, k, v, block_q=bq, block_kv=bkv,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(attention_ref(q, k, v)),
+                               **TOL)
+
+
+def test_flash_grad_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (1, 4, 64, 32), jnp.float32)
+    k = _rand(ks[1], (1, 2, 64, 32), jnp.float32)
+    v = _rand(ks[2], (1, 2, 64, 32), jnp.float32)
+
+    def f_kern(q, k, v):
+        return (flash_attention(q, k, v, None, True, 32, 32, True) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (attention_ref(q, k, v) ** 2).sum()
+
+    gk = jax.grad(f_kern, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_flash_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (1, 2, 64, 32), jnp.float32)
+    k = _rand(ks[1], (1, 2, 64, 32), jnp.float32)
+    v = _rand(ks[2], (1, 2, 64, 32), jnp.float32)
+    out, _ = flash_attention_fwd(q, k, v, causal=False, block_q=32,
+                                 block_kv=32, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(attention_ref(q, k, v, causal=False)), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,p,n,chunk,hb", [
+    (1, 32, 4, 16, 16, 8, 2),
+    (2, 64, 8, 16, 32, 16, 4),
+    (1, 64, 8, 32, 64, 32, 8),
+    (2, 128, 2, 8, 16, 64, 1),
+])
+def test_ssd_scan_matches_ref(b, s, h, p, n, chunk, hb):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = _rand(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (b, s, h), jnp.float32))
+    alog = _rand(ks[2], (h,), jnp.float32) * 0.1
+    B = _rand(ks[3], (b, s, n), jnp.float32)
+    C = _rand(ks[4], (b, s, n), jnp.float32)
+    y, hf = ssd_scan(x, dt, alog, B, C, chunk=chunk, heads_block=hb,
+                     interpret=True)
+    yr, hr = ssd_ref(x, dt, alog, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_ssd_scan_bf16_inputs():
+    b, s, h, p, n = 1, 32, 4, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = _rand(ks[0], (b, s, h, p), jnp.bfloat16)
+    dt = jax.nn.softplus(_rand(ks[1], (b, s, h), jnp.float32))
+    alog = _rand(ks[2], (h,), jnp.float32) * 0.1
+    B = _rand(ks[3], (b, s, n), jnp.bfloat16)
+    C = _rand(ks[4], (b, s, n), jnp.bfloat16)
+    y, _ = ssd_scan(x, dt, alog, B, C, chunk=8, heads_block=2, interpret=True)
+    yr, _ = ssd_ref(x, dt, alog, B, C, 8)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **TOL_BF16)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(8, 128), (4, 32, 128), (2, 16, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = _rand(ks[0], shape, dtype)
+    sc = 1.0 + 0.1 * _rand(ks[1], (shape[-1],), dtype)
+    out = rmsnorm(x, sc, interpret=True)
+    ref = rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,hkv,t,d,bkv", [
+    (2, 8, 2, 64, 32, 16),
+    (1, 4, 4, 128, 64, 32),
+    (4, 16, 1, 64, 32, 64),   # MQA, single block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(b, h, hkv, t, d, bkv, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = _rand(ks[0], (b, h, d), dtype)
+    k = _rand(ks[1], (b, t, hkv, d), dtype)
+    v = _rand(ks[2], (b, t, hkv, d), dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, t + 1).astype(jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_kv=bkv, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    tol = TOL if dtype == jnp.float32 else TOL_BF16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+def test_decode_attention_ragged_lengths():
+    """Ragged batch: each sequence only attends within its own length."""
+    b, h, hkv, t, d = 3, 4, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = _rand(ks[0], (b, h, d), jnp.float32)
+    k = _rand(ks[1], (b, t, hkv, d), jnp.float32)
+    v = _rand(ks[2], (b, t, hkv, d), jnp.float32)
+    lengths = jnp.array([1, 17, 64], jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_kv=16, interpret=True)
+    # poisoning cache beyond each length must not change the result
+    k2 = k.at[0, 1:].set(1e4)
+    k2 = k2.at[1, 17:].set(-1e4)
+    out2 = decode_attention(q, k2, v, lengths, block_kv=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# fused cross-entropy
+# ---------------------------------------------------------------------------
+from repro.kernels.cross_entropy import ce_ref, fused_ce
+
+
+@pytest.mark.parametrize("r,v,br,bv", [
+    (32, 256, 8, 64),
+    (64, 512, 16, 128),
+    (16, 1024, 16, 256),   # single row block, 4 vocab tiles
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_ce_matches_ref(r, v, br, bv, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    lg = (jax.random.normal(ks[0], (r, v), jnp.float32) * 3).astype(dtype)
+    lab = jax.random.randint(ks[1], (r,), 0, v)
+    mask = (jax.random.uniform(ks[2], (r,)) > 0.3).astype(jnp.float32)
+    out = fused_ce(lg, lab, mask, block_rows=br, block_v=bv, interpret=True)
+    ref = ce_ref(lg, lab, mask)
+    np.testing.assert_allclose(float(out), float(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_fused_ce_all_masked_is_zero():
+    lg = jnp.ones((8, 64))
+    lab = jnp.zeros((8,), jnp.int32)
+    out = fused_ce(lg, lab, jnp.zeros((8,)), block_rows=8, block_v=32,
+                   interpret=True)
+    assert float(out) == 0.0

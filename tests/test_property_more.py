@@ -1,0 +1,109 @@
+"""Additional property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.sampler import ShardedSampler
+from repro.data.tokens import decode_sample, encode_sample, pack_batch
+
+
+# ---------------------------------------------------------------------------
+# sampler invariants
+# ---------------------------------------------------------------------------
+@given(
+    n=st.integers(8, 512),
+    gb_log=st.integers(1, 4),
+    dp_log=st.integers(0, 3),
+    step=st.integers(0, 50),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=50, deadline=None)
+def test_sampler_shards_partition_the_batch(n, gb_log, dp_log, step, seed):
+    gb = 2 ** (gb_log + dp_log)
+    dp = 2 ** dp_log
+    if gb > n:
+        return
+    shards = [ShardedSampler(n_samples=n, global_batch=gb, dp_rank=r,
+                             dp_size=dp, seed=seed) for r in range(dp)]
+    all_idx = [i for s in shards for i in s.indices_for_step(step)]
+    # disjoint across ranks, correct total size, in range
+    assert len(all_idx) == gb
+    assert len(set(all_idx)) == gb
+    assert all(0 <= i < n for i in all_idx)
+
+
+@given(n=st.integers(16, 256), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_sampler_epoch_covers_everything(n, seed):
+    gb = 16
+    if n % gb:
+        n -= n % gb
+    s = ShardedSampler(n_samples=n, global_batch=gb, dp_rank=0, dp_size=1,
+                       seed=seed)
+    seen = set()
+    for step in range(s.steps_per_epoch):
+        seen.update(s.indices_for_step(step))
+    assert len(seen) == s.steps_per_epoch * gb  # no repeats within an epoch
+
+
+# ---------------------------------------------------------------------------
+# token codec invariants
+# ---------------------------------------------------------------------------
+@given(st.lists(st.integers(0, 2**16 - 1), min_size=0, max_size=512))
+@settings(max_examples=50, deadline=None)
+def test_codec_roundtrip_u16(tokens):
+    arr = np.array(tokens, dtype=np.uint16)
+    assert np.array_equal(decode_sample(encode_sample(arr)), arr)
+
+
+@given(st.lists(st.integers(0, 2**20), min_size=1, max_size=128))
+@settings(max_examples=50, deadline=None)
+def test_codec_roundtrip_u32(tokens):
+    arr = np.array(tokens, dtype=np.uint32)
+    assert np.array_equal(decode_sample(encode_sample(arr)), arr)
+
+
+@given(
+    lens=st.lists(st.integers(0, 64), min_size=1, max_size=8),
+    seq=st.integers(1, 64),
+)
+@settings(max_examples=50, deadline=None)
+def test_pack_batch_mask_counts(lens, seq):
+    samples = [np.arange(n, dtype=np.uint16) for n in lens]
+    toks, mask = pack_batch(samples, seq_len=seq)
+    assert toks.shape == (len(lens), seq)
+    for i, n in enumerate(lens):
+        assert mask[i].sum() == min(n, seq)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manifest round trip
+# ---------------------------------------------------------------------------
+@given(step=st.integers(0, 10**6), parts=st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_manifest_roundtrip(step, parts):
+    from repro.ckpt.manager import Manifest
+    m = Manifest(step=step, parts=parts,
+                 leaves=[{"name": "w", "shape": [2, 2], "dtype": "float32",
+                          "files": [{"path": "/p", "crc": 123}]}],
+                 extra={"k": "v"})
+    m2 = Manifest.from_bytes(m.to_bytes())
+    assert m2.step == step and m2.parts == parts and m2.extra == {"k": "v"}
+
+
+# ---------------------------------------------------------------------------
+# gradient compression error bound
+# ---------------------------------------------------------------------------
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_int8_quantization_error_bound(scale, seed):
+    from repro.runtime.compression import _dequantize, _quantize
+    rng = np.random.default_rng(seed)
+    g = (rng.standard_normal(512) * scale).astype(np.float32)
+    import jax.numpy as jnp
+    q, s = _quantize(jnp.asarray(g))
+    back = np.asarray(_dequantize(q, s, g.shape, jnp.float32))
+    # error bounded by half a quantization step per block
+    step = np.asarray(s).reshape(-1)
+    err = np.abs(back - g).reshape(-1, 256 if g.size % 256 == 0 else g.size)
+    assert np.abs(back - g).max() <= np.max(step) * 0.5 + 1e-6
