@@ -1,0 +1,192 @@
+"""Figure 5 (extension): cold-cache bulk scan of a many-small-file tree —
+the batched service layer vs per-file RPCs.
+
+The paper's mechanism removes the per-open() RPC; this extension removes the
+per-LOOKUP and per-READ round trips too.  The measured unit is a *bulk
+scan*: open + read + close every file in a cold 8-directory tree.  Per-file
+systems run the scan with a pool of concurrent workers (the strongest
+realistic baseline configuration, as in Fig. 4); the batched system is ONE
+client thread using warm_tree() + open_many() + read_many():
+
+  BuffetFS batched    O(1) metadata RPCs (LOOKUP_TREE prefetch) +
+                      ceil(N / batch) BATCH READ frames, fanned out per host
+  BuffetFS unbatched  O(dirs) LOOKUP_DIRs/client + N READ RPCs, spread
+                      across the BServers that own the data
+  Lustre-Normal       N x (MDS OPEN_RECORD + OSS READ) — MDS serializes
+  Lustre-DoM          N x MDS READ_INLINE — everything through one server
+
+The in-proc latency model charges one RTT per frame but a service time per
+sub-operation, so batching amortizes exactly what a real network amortizes,
+and the per-server service lock exposes MDS serialization.
+
+    PYTHONPATH=src python -m benchmarks.fig5_batch [--quick]
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import BAgent
+from repro.core.perms import O_RDONLY
+from repro.core.transport import LatencyModel
+
+from .common import access_file, fresh_cluster, make_client, mkfiles
+
+# Same ms-scale calibration as the other paper benchmarks (common.py):
+# ~1.5ms wire round trip, 800us of server work per operation, ~0.5 GiB/s
+# link.  ms-scale injection keeps host-Python overhead second-order.
+FIG5_LATENCY = LatencyModel(rtt_us=1500.0, per_mib_us=2000.0, service_us=800.0)
+
+FILE_COUNTS = (256, 1024)
+BATCH_SIZES = (32, 256)
+SYSTEMS = ("buffetfs-batched", "buffetfs", "lustre-normal", "lustre-dom")
+FILE_SIZE = 1024  # small files: the paper's target workload
+N_DIRS = 8
+WORKERS = 4
+
+
+def _scan_batched(agent: BAgent, prefix: str, paths: List[str],
+                  batch_size: int) -> None:
+    agent.warm_tree(prefix, batch_size=batch_size)
+    fds = agent.open_many(paths, O_RDONLY, batch_size=batch_size)
+    agent.read_many(fds, batch_size=batch_size)
+    for fd in fds:
+        agent.close(fd)
+
+
+def _scan_workers(kind: str, cluster, paths: List[str], workers: int):
+    """Concurrent per-file scan: `workers` clients split the path list.
+    Client construction happens BEFORE the timed region (symmetric with the
+    batched system, whose client is built before its timer starts); the
+    clock runs from barrier release to last join."""
+    clients = [make_client(kind, cluster) for _ in range(workers)]
+    shards = [paths[i::workers] for i in range(workers)]
+    barrier = threading.Barrier(workers + 1)
+    errors: List[Exception] = []
+
+    def worker(wid: int) -> None:
+        client, _ = clients[wid]
+        barrier.wait()
+        try:
+            for p in shards[wid]:
+                access_file(client, p)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(workers)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    assert not errors, errors
+    return elapsed, clients
+
+
+def run(file_counts: Sequence[int] = FILE_COUNTS,
+        batch_sizes: Sequence[int] = BATCH_SIZES,
+        latency: LatencyModel = FIG5_LATENCY,
+        systems: Sequence[str] = SYSTEMS,
+        workers: int = WORKERS) -> List[Dict]:
+    rows: List[Dict] = []
+    for n_files in file_counts:
+        for system in systems:
+            sweeps: Sequence[Optional[int]] = (
+                batch_sizes if system == "buffetfs-batched" else (None,))
+            for bs in sweeps:
+                with fresh_cluster(latency=latency) as cluster:
+                    kind = ("buffetfs" if system == "buffetfs-batched"
+                            else system)
+                    paths = mkfiles(cluster, n_files=n_files, size=FILE_SIZE,
+                                    n_dirs=N_DIRS, system=kind)
+                    # identical random access order for every system
+                    random.Random(7).shuffle(paths)
+                    if system == "buffetfs-batched":
+                        agent, _ = make_client(kind, cluster)
+                        t0 = time.perf_counter()
+                        _scan_batched(agent, "/bench", paths, bs)
+                        elapsed = time.perf_counter() - t0
+                        snaps = [agent.stats.snapshot()]
+                        clients = [(agent, agent)]
+                    else:
+                        elapsed, clients = _scan_workers(kind, cluster,
+                                                         paths, workers)
+                        snaps = [c.stats.snapshot() for c, _ in clients]
+                    crit = sum(s["critical_path"] for s in snaps)
+                    rows.append({
+                        "bench": "fig5_batch", "system": system,
+                        "n_files": n_files, "batch_size": bs,
+                        "workers": 1 if system == "buffetfs-batched"
+                        else workers,
+                        "seconds": round(elapsed, 3),
+                        "critical_rpcs": crit,
+                        "total_rpcs": sum(s["total"] for s in snaps),
+                        "subops": sum(s["subops"] for s in snaps),
+                        "rpcs_per_file": round(crit / n_files, 4),
+                    })
+                    for c, _ in clients:
+                        if hasattr(c, "shutdown"):
+                            c.shutdown()
+    return rows
+
+
+def verdict(rows: List[Dict], n_files: int) -> List[str]:
+    """The acceptance statement for one file count: batched BuffetFS issues
+    >=10x fewer critical-path RPCs and finishes faster than the unbatched
+    BuffetFS scan, which in turn beats both Lustre baselines."""
+    by: Dict[str, Dict] = {}
+    for r in rows:
+        if r["n_files"] != n_files:
+            continue
+        key = r["system"]
+        if key == "buffetfs-batched":
+            cur = by.get(key)
+            if cur is None or r["seconds"] < cur["seconds"]:
+                by[key] = r  # best batch size
+        else:
+            by[key] = r
+    lines = []
+    b, u = by.get("buffetfs-batched"), by.get("buffetfs")
+    ln, ld = by.get("lustre-normal"), by.get("lustre-dom")
+    if b and u:
+        ratio = u["critical_rpcs"] / max(1, b["critical_rpcs"])
+        lines.append(
+            f"n={n_files}: batched {b['critical_rpcs']} vs unbatched "
+            f"{u['critical_rpcs']} critical RPCs ({ratio:.0f}x fewer; "
+            f"{'PASS' if ratio >= 10 else 'FAIL'} >=10x), "
+            f"{b['seconds']}s vs {u['seconds']}s "
+            f"({'PASS' if b['seconds'] < u['seconds'] else 'FAIL'} faster)")
+    if u and ln and ld:
+        beats = u["seconds"] < ln["seconds"] and u["seconds"] < ld["seconds"]
+        lines.append(
+            f"n={n_files}: unbatched buffetfs {u['seconds']}s vs "
+            f"lustre-normal {ln['seconds']}s / lustre-dom {ld['seconds']}s "
+            f"({'PASS' if beats else 'FAIL'} beats both baselines)")
+    return lines
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    counts = (256,) if args.quick else FILE_COUNTS
+    sizes = (64,) if args.quick else BATCH_SIZES
+    rows = run(file_counts=counts, batch_sizes=sizes)
+    for r in rows:
+        bs = "" if r["batch_size"] is None else f",bs={r['batch_size']}"
+        print(f"fig5,{r['system']},n={r['n_files']}{bs},w={r['workers']},"
+              f"{r['seconds']}s,rpcs={r['critical_rpcs']},"
+              f"subops={r['subops']}")
+    for n in counts:
+        for line in verdict(rows, n):
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,8 +20,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="smaller sweeps")
     args = ap.parse_args()
 
-    from benchmarks import (fig3_latency, fig4_concurrency, invalidation,
-                            rpc_table)
+    from benchmarks import (fig3_latency, fig4_concurrency, fig5_batch,
+                            invalidation, rpc_table)
 
     print("name,us_per_call,derived")
     rows = []
@@ -40,6 +40,16 @@ def main() -> None:
         rows.append(r)
         print(f"fig4_{r['system']}_w{r['workers']},{r['us_per_access']},"
               f"total_s={r['total_s']}", flush=True)
+
+    # Figure 5 (extension): batched service layer vs per-file RPCs
+    for r in fig5_batch.run(
+            file_counts=(256,) if args.quick else fig5_batch.FILE_COUNTS,
+            batch_sizes=(64,) if args.quick else fig5_batch.BATCH_SIZES):
+        rows.append(r)
+        bs = "" if r["batch_size"] is None else f"_bs{r['batch_size']}"
+        us_per_file = round(r["seconds"] * 1e6 / r["n_files"], 1)
+        print(f"fig5_{r['system']}{bs}_n{r['n_files']},{us_per_file},"
+              f"total_s={r['seconds']} rpcs={r['critical_rpcs']}", flush=True)
 
     # RPC table (the mechanism itself)
     for r in rpc_table.run():

@@ -14,8 +14,10 @@ from .cluster import BuffetCluster, ClusterConfig
 from .inode import Inode
 from .perms import (Credentials, FSError, O_CREAT, O_RDONLY, O_RDWR, O_TRUNC,
                     O_WRONLY, PermRecord, R_OK, W_OK, X_OK, access_ok)
+from .service import Operation, OperationRegistry, SERVER_OPS
 from .transport import InProcTransport, LatencyModel, TCPTransport, ZERO_LATENCY
-from .wire import Message, MsgType, RpcStats
+from .wire import (Message, MsgType, RpcStats, batch_status, pack_batch,
+                   unpack_batch)
 
 __all__ = [
     "BAgent", "TreeNode", "LustreDoMClient", "LustreNormalClient", "BLib",
@@ -25,4 +27,6 @@ __all__ = [
     "R_OK", "W_OK", "X_OK",
     "InProcTransport", "LatencyModel", "TCPTransport", "ZERO_LATENCY",
     "Message", "MsgType", "RpcStats",
+    "Operation", "OperationRegistry", "SERVER_OPS",
+    "batch_status", "pack_batch", "unpack_batch",
 ]

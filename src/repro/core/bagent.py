@@ -22,6 +22,7 @@ import errno
 import itertools
 import queue
 import threading
+from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -29,10 +30,25 @@ from .cluster import BuffetCluster, ClusterConfig
 from .inode import Inode
 from .perms import (Credentials, FSError, O_CREAT, PermRecord, R_OK, W_OK,
                     X_OK, access_ok, err, flags_to_access, O_TRUNC)
+from .service import MAX_TREE_DEPTH
 from .transport import Transport
-from .wire import Message, MsgType, RpcStats, ok
+from .wire import (Message, MsgType, RpcStats, error as wire_error, ok,
+                   pack_batch, unpack_batch)
 
 _agent_counter = itertools.count()
+
+DEFAULT_BATCH = 256  # sub-messages per BATCH frame on the bulk paths
+
+
+def _chunks(items: List, n: int) -> List[List]:
+    n = max(1, n)  # a non-positive batch size must not silently drop work
+    return [items[i : i + n] for i in range(0, len(items), n)]
+
+
+def _ino_key(ino: int) -> Tuple[int, int]:
+    """Version-insensitive identity of an inode (restarts bump versions)."""
+    i = Inode.unpack(ino)
+    return (i.host_id, i.file_id)
 
 
 class TreeNode:
@@ -90,6 +106,20 @@ class BAgent:
         self.root = TreeNode("", cluster.root_ino,
                              PermRecord(0o040755, 0, 0), parent=None)
         self._tree_lock = threading.RLock()
+        # per-directory invalidation generation, bumped by every INVALIDATE
+        # callback (even for dirs not yet in the tree).  Fetch paths
+        # snapshot it before the RPC and refuse to mark a directory valid
+        # if its generation moved while the response was in flight —
+        # otherwise a pre-mutation snapshot crossing an INVALIDATE on the
+        # wire would be cached as valid-but-stale forever.
+        self._inval_gen: Dict[Tuple[int, int], int] = {}
+        # (host_id, file_id) -> TreeNode index so an INVALIDATE callback is
+        # O(1) instead of a full-tree scan (the server blocks on our ack,
+        # so callback latency is mutation latency).  Stale entries for
+        # dropped nodes are harmless: invalidating a detached node is a
+        # no-op for the live tree.
+        self._node_index: Dict[Tuple[int, int], TreeNode] = {
+            _ino_key(self.root.ino): self.root}
         self._fd_lock = threading.Lock()
         self._fds: Dict[int, FileHandle] = {}
         self._next_fd = 3
@@ -124,6 +154,33 @@ class BAgent:
             raise err(resp.header.get("errno", errno.EIO), resp.header.get("msg", ""))
         return resp
 
+    def _rpc_batch(self, host_id: int, msgs: List[Message], *,
+                   critical: bool = True) -> List[Message]:
+        """Send N sub-messages to one host in a single BATCH frame (one
+        round trip).  Returns the N sub-responses; per-sub errors are left
+        to the caller, envelope-level errors raise (with the same one-shot
+        ESTALE/version recovery as `_rpc`)."""
+        if not msgs:
+            return []
+        if len(msgs) == 1:
+            # same ESTALE/version recovery as any other RPC.  Server-level
+            # per-op failures surface as a per-sub ERROR (this method's
+            # contract); transport-level failures raise, exactly as the
+            # multi-message envelope path does — a caller must not get
+            # "silently skipped" vs "raised" depending on chunk size.
+            try:
+                return [self._rpc(host_id, msgs[0], critical=critical)]
+            except FSError as e:
+                if e.errno in (errno.ENOTCONN, errno.ETIMEDOUT,
+                               errno.ECONNREFUSED, errno.ESTALE):
+                    raise
+                return [wire_error(e.errno or errno.EIO, str(e))]
+        # the envelope rides the ordinary RPC path: _rpc stamps the server
+        # incarnation, retries once on ESTALE, and raises on envelope-level
+        # errors — one copy of the recovery protocol, not two
+        return unpack_batch(self._rpc(host_id, pack_batch(msgs),
+                                      critical=critical))
+
     # ------------------------------------------------------------------
     # invalidation callback (§3.4): mark-before-ack => strong consistency
     # ------------------------------------------------------------------
@@ -131,23 +188,28 @@ class BAgent:
         if msg.type is MsgType.INVALIDATE:
             dir_ino = msg.header["dir_ino"]
             with self._tree_lock:
-                node = self._find_by_ino(self.root, dir_ino)
+                key = _ino_key(dir_ino)
+                self._inval_gen[key] = self._inval_gen.get(key, 0) + 1
+                node = self._node_index.get(key)
                 if node is not None:
                     node.valid = False
             return ok()
         return ok()
 
-    def _find_by_ino(self, node: TreeNode, ino: int) -> Optional[TreeNode]:
-        # version-insensitive match (restart bumps versions, fileIDs persist)
-        a, b = Inode.unpack(node.ino), Inode.unpack(ino)
-        if (a.host_id, a.file_id) == (b.host_id, b.file_id):
-            return node
-        if node.children:
-            for c in node.children.values():
-                r = self._find_by_ino(c, ino)
-                if r is not None:
-                    return r
-        return None
+    def _gen_snapshot(self) -> Dict[Tuple[int, int], int]:
+        with self._tree_lock:
+            return dict(self._inval_gen)
+
+    def _forget_node(self, node: TreeNode) -> None:
+        """Drop a detached node (and its subtree) from the lookup index and
+        the generation map so long-lived agents on churny namespaces don't
+        retain every TreeNode ever seen.  Caller holds _tree_lock."""
+        key = _ino_key(node.ino)
+        if self._node_index.get(key) is node:
+            del self._node_index[key]
+            self._inval_gen.pop(key, None)
+        for c in (node.children or {}).values():
+            self._forget_node(c)
 
     # ------------------------------------------------------------------
     # directory-tree management
@@ -156,24 +218,54 @@ class BAgent:
         """LOOKUP_DIR: pull a directory's dentries + child perms, register as
         watcher.  This is the only metadata RPC BuffetFS ever needs."""
         ino = Inode.unpack(node.ino)
+        # only this dir's generation matters here; the full-map snapshot is
+        # reserved for the bulk paths, whose response dir set is unknown
+        key = _ino_key(node.ino)
+        with self._tree_lock:
+            gens = {key: self._inval_gen.get(key, 0)}
         resp = self._rpc(ino.host_id, Message(MsgType.LOOKUP_DIR, {
             "file_id": ino.file_id, "client_id": self.client_id,
             "cb_addr": self.cb_addr}))
+        self._merge_dir(node, resp.header, gens=gens)
+
+    def _merge_dir(self, node: TreeNode, record: Dict,
+                   gens: Optional[Dict[Tuple[int, int], int]] = None) -> None:
+        """Install a directory's fetched dentries + perms into the cached
+        tree (shared by LOOKUP_DIR responses and LOOKUP_TREE dir records).
+
+        `gens` is the invalidation-generation snapshot taken before the
+        fetch RPC was issued: if this directory was invalidated while the
+        response was in flight, the data is merged (still useful) but the
+        node stays invalid so the next access revalidates."""
         with self._tree_lock:
-            node.perm = PermRecord.unpack(bytes.fromhex(resp.header["perm"]))
+            node.perm = PermRecord.unpack(bytes.fromhex(record["perm"]))
             old = node.children or {}
             fresh: Dict[str, TreeNode] = {}
-            for e in resp.header["entries"]:
+            for e in record["entries"]:
                 perm = PermRecord.unpack(bytes.fromhex(e["perm"]))
                 child = old.get(e["name"])
-                if child is None:
+                if child is None or _ino_key(child.ino) != _ino_key(e["ino"]):
+                    # unseen name, or the name now points at a different
+                    # object: start a fresh node
                     child = TreeNode(e["name"], e["ino"], perm, parent=node)
+                    self._node_index[_ino_key(child.ino)] = child
                 else:
+                    # refresh what the parent's entries carry (ino version,
+                    # perm) but do NOT touch child.valid: that flag covers
+                    # the child's OWN listing, whose invalidations arrive
+                    # separately — re-marking it valid here would resurrect
+                    # a stale child dentry cache (§3.4 violation)
                     child.ino, child.perm = e["ino"], perm
-                    child.valid = True
                 fresh[e["name"]] = child
+            for name, old_child in old.items():
+                if fresh.get(name) is not old_child:
+                    self._forget_node(old_child)  # dentry gone or replaced
             node.children = fresh
-            node.valid = True
+            if gens is None:
+                node.valid = True
+            else:
+                key = _ino_key(node.ino)
+                node.valid = (self._inval_gen.get(key, 0) == gens.get(key, 0))
 
     def _ensure_children(self, node: TreeNode) -> Dict[str, "TreeNode"]:
         if not node.perm.is_dir:
@@ -243,18 +335,27 @@ class BAgent:
                                        pending_trunc=bool(flags & O_TRUNC))
         return fd
 
-    def _create(self, parent: TreeNode, name: str, mode: int) -> TreeNode:
-        pino = Inode.unpack(parent.ino)
-        resp = self._rpc(pino.host_id, Message(MsgType.CREATE, {
+    def _create_msg(self, pino: Inode, name: str, mode: int) -> Message:
+        return Message(MsgType.CREATE, {
             "parent": pino.file_id, "name": name, "mode": mode,
             "uid": self.cred.uid, "gid": self.cred.gid,
-            "client_id": self.client_id}))
-        perm = PermRecord.unpack(bytes.fromhex(resp.header["perm"]))
+            "client_id": self.client_id})
+
+    def _install_child(self, parent: TreeNode, name: str, header: Dict
+                       ) -> TreeNode:
+        """Install a CREATE/MKNOD response's (ino, perm) into the tree."""
+        perm = PermRecord.unpack(bytes.fromhex(header["perm"]))
         with self._tree_lock:
-            node = TreeNode(name, resp.header["ino"], perm, parent=parent)
+            node = TreeNode(name, header["ino"], perm, parent=parent)
+            self._node_index[_ino_key(node.ino)] = node
             if parent.children is not None:
                 parent.children[name] = node
         return node
+
+    def _create(self, parent: TreeNode, name: str, mode: int) -> TreeNode:
+        pino = Inode.unpack(parent.ino)
+        resp = self._rpc(pino.host_id, self._create_msg(pino, name, mode))
+        return self._install_child(parent, name, resp.header)
 
     def _io_header(self, fh: FileHandle) -> Dict:
         h: Dict = {}
@@ -265,8 +366,25 @@ class BAgent:
             fh.incomplete_open = False
         return h
 
+    def _flush_trunc(self, fh: FileHandle, *, ignore_enoent: bool = False
+                     ) -> None:
+        """The O_TRUNC from open() is deferred onto the first WRITE; any
+        other operation that observes file contents (read, close) must
+        flush it first or the caller sees pre-truncation data."""
+        if not fh.pending_trunc:
+            return
+        ino = Inode.unpack(fh.ino)
+        h = {"file_id": ino.file_id, "size": 0, **self._io_header(fh)}
+        try:
+            self._rpc(ino.host_id, Message(MsgType.TRUNCATE, h))
+        except FSError as e:
+            if not (ignore_enoent and e.errno == errno.ENOENT):
+                raise
+        fh.pending_trunc = False
+
     def read(self, fd: int, n: int = -1) -> bytes:
         fh = self._fh(fd)
+        self._flush_trunc(fh)
         ino = Inode.unpack(fh.ino)
         length = n if n >= 0 else (1 << 31)
         h = {"file_id": ino.file_id, "offset": fh.offset, "length": length,
@@ -277,6 +395,7 @@ class BAgent:
 
     def pread(self, fd: int, n: int, offset: int) -> bytes:
         fh = self._fh(fd)
+        self._flush_trunc(fh)
         ino = Inode.unpack(fh.ino)
         h = {"file_id": ino.file_id, "offset": offset, "length": n,
              **self._io_header(fh)}
@@ -300,6 +419,11 @@ class BAgent:
             fh = self._fds.pop(fd, None)
         if fh is None:
             raise err(errno.EBADF, str(fd))
+        # open(O_TRUNC) with no intervening write(): the deferred truncate
+        # never rode on a WRITE — flush it now, synchronously.  A file
+        # unlinked in the meantime has nothing left to truncate; close()
+        # must not raise for that.
+        self._flush_trunc(fh, ignore_enoent=True)
         if fh.incomplete_open:
             return  # never touched the server: nothing to wrap up
         ino = Inode.unpack(fh.ino)
@@ -370,6 +494,7 @@ class BAgent:
         with self._tree_lock:
             node = TreeNode(name, ino, PermRecord.unpack(bytes.fromhex(perm_hex)),
                             parent=parent)
+            self._node_index[_ino_key(node.ino)] = node
             # children stays None: the first use LOOKUP_DIRs, which registers
             # this client in the server's watcher list (else invalidations
             # from other clients' creates would never reach us)
@@ -385,7 +510,9 @@ class BAgent:
             "parent": pino.file_id, "name": name, "client_id": self.client_id}))
         with self._tree_lock:
             if parent.children:
-                parent.children.pop(name, None)
+                dropped = parent.children.pop(name, None)
+                if dropped is not None:
+                    self._forget_node(dropped)
 
     def chmod(self, path: str, mode: int) -> None:
         parent, name = self._walk(path, want_parent=True)
@@ -431,6 +558,243 @@ class BAgent:
         node, _ = self._walk(path)
         if node.perm.is_dir:
             self._ensure_children(node)
+
+    # ------------------------------------------------------------------
+    # bulk paths: batched RPCs + bulk namespace prefetch
+    # ------------------------------------------------------------------
+    def warm_tree(self, path: str = "/", *, batch_size: int = DEFAULT_BATCH
+                  ) -> int:
+        """Bulk namespace prefetch on the LOOKUP_TREE verb: pull the whole
+        subtree under `path` — dentries + 10-byte perm records for every
+        directory — in O(rounds x hosts) RPCs instead of one LOOKUP_DIR per
+        directory.  Each server expands the locally-owned part of the
+        subtree up to MAX_TREE_DEPTH and hands back a frontier of
+        directories it could not descend (foreign host / depth bound);
+        frontier nodes are fetched in per-host BATCH frames until none
+        remain.  Every prefetched directory registers this client as a
+        watcher server-side, so §3.4 invalidations keep working.
+
+        Returns the number of directories warmed."""
+        node, _ = self._walk(path)
+        if not node.perm.is_dir:
+            return 0
+        nodes: Dict[Tuple[int, int], TreeNode] = {_ino_key(node.ino): node}
+        seen = {_ino_key(node.ino)}
+        frontier: List[int] = [node.ino]
+        warmed = 0
+        while frontier:
+            by_host: Dict[int, List[Message]] = {}
+            for ino in frontier:
+                i = Inode.unpack(ino)
+                by_host.setdefault(i.host_id, []).append(
+                    Message(MsgType.LOOKUP_TREE, {
+                        "file_id": i.file_id, "depth": MAX_TREE_DEPTH,
+                        "client_id": self.client_id, "cb_addr": self.cb_addr}))
+            next_frontier: List[int] = []
+            for host, msgs in by_host.items():
+                for chunk in _chunks(msgs, batch_size):
+                    gens = self._gen_snapshot()
+                    for r in self._rpc_batch(host, chunk):
+                        if r.type is MsgType.ERROR:
+                            continue  # e.g. dir unlinked mid-prefetch
+                        for d in r.header["dirs"]:
+                            n = nodes.get(_ino_key(d["ino"]))
+                            if n is None:
+                                continue
+                            self._merge_dir(n, d, gens=gens)
+                            warmed += 1
+                            for child in (n.children or {}).values():
+                                if child.perm.is_dir:  # only dirs are ever
+                                    nodes.setdefault(   # looked up again
+                                        _ino_key(child.ino), child)
+                        for fino in r.header["frontier"]:
+                            k = _ino_key(fino)
+                            if k in nodes and k not in seen:
+                                seen.add(k)
+                                next_frontier.append(fino)
+            frontier = next_frontier
+        return warmed
+
+    def _warm_dirs(self, dir_paths, *, batch_size: int = DEFAULT_BATCH) -> None:
+        """Populate the cached tree for many directories, level by level,
+        with one BATCH of LOOKUP_DIRs per (level, host) — O(depth x hosts)
+        RPCs for an arbitrary set of directories.  Missing components are
+        skipped silently; the subsequent per-path operation reports ENOENT."""
+        levels: Dict[int, set] = {}
+        for p in dir_paths:
+            parts = [x for x in p.split("/") if x]
+            for i in range(len(parts)):
+                levels.setdefault(i + 1, set()).add("/" + "/".join(parts[: i + 1]))
+        with self._tree_lock:
+            root_cold = self.root.children is None or not self.root.valid
+        if root_cold:
+            self._fetch_dir(self.root)
+        node_of: Dict[str, TreeNode] = {"/": self.root}
+        for lvl in sorted(levels):
+            to_fetch: Dict[int, List[Tuple[TreeNode, Message]]] = {}
+            for prefix in sorted(levels[lvl]):
+                parent_prefix, _, name = prefix.rpartition("/")
+                parent = node_of.get(parent_prefix or "/")
+                if parent is None or parent.children is None:
+                    continue
+                child = parent.children.get(name)
+                if child is None or not child.perm.is_dir:
+                    continue
+                node_of[prefix] = child
+                if child.children is None or not child.valid:
+                    ino = Inode.unpack(child.ino)
+                    to_fetch.setdefault(ino.host_id, []).append(
+                        (child, Message(MsgType.LOOKUP_DIR, {
+                            "file_id": ino.file_id, "client_id": self.client_id,
+                            "cb_addr": self.cb_addr})))
+            for host, items in to_fetch.items():
+                for chunk in _chunks(items, batch_size):
+                    # this chunk's dir set is known: snapshot only its keys
+                    # (the full-map copy is reserved for LOOKUP_TREE, whose
+                    # response set is unknown in advance)
+                    keys = [_ino_key(dnode.ino) for dnode, _ in chunk]
+                    with self._tree_lock:
+                        gens = {k: self._inval_gen.get(k, 0) for k in keys}
+                    resps = self._rpc_batch(host, [m for _, m in chunk])
+                    for (dnode, _), r in zip(chunk, resps):
+                        if r.type is not MsgType.ERROR:
+                            self._merge_dir(dnode, r.header, gens=gens)
+
+    def open_many(self, paths: List[str], flags: int = 0, mode: int = 0o644,
+                  *, batch_size: int = DEFAULT_BATCH) -> List[int]:
+        """Bulk open(): warm every parent directory with batched LOOKUP_DIRs,
+        then run each open locally (zero per-file RPCs).  With O_CREAT,
+        missing files are created in per-host CREATE batches — each batched
+        CREATE still blocks on watcher invalidation acks server-side, so
+        §3.4 strong consistency is untouched."""
+        self._warm_dirs({p.rpartition("/")[0] or "/" for p in paths},
+                        batch_size=batch_size)
+        if flags & O_CREAT:
+            self._create_missing(paths, mode, batch_size=batch_size)
+        fds: List[int] = []
+        try:
+            for p in paths:
+                fds.append(self.open(p, flags, mode))
+            return fds
+        except Exception:
+            # all-or-nothing: drop the partial fd list (none of these fds
+            # ever reached the server — incomplete_open — so a local pop is
+            # a complete cleanup, and no deferred truncate fires)
+            with self._fd_lock:
+                for fd in fds:
+                    self._fds.pop(fd, None)
+            raise
+
+    def _create_missing(self, paths: List[str], mode: int, *,
+                        batch_size: int) -> None:
+        by_host: Dict[int, List[Tuple[TreeNode, str, Message]]] = {}
+        for p in paths:
+            parent, name = self._walk(p, want_parent=True)
+            if name is None:
+                raise err(errno.EISDIR, p)
+            if name in (parent.children or {}):
+                continue
+            if not access_ok(parent.perm, self.cred, W_OK):
+                raise err(errno.EACCES, f"cannot create in {parent.path()}")
+            pino = Inode.unpack(parent.ino)
+            by_host.setdefault(pino.host_id, []).append(
+                (parent, name, self._create_msg(pino, name, mode)))
+        for host, items in by_host.items():
+            for chunk in _chunks(items, batch_size):
+                resps = self._rpc_batch(host, [m for _, _, m in chunk])
+                for (parent, name, _), r in zip(chunk, resps):
+                    if r.type is MsgType.ERROR:
+                        raise err(r.header.get("errno", errno.EIO),
+                                  r.header.get("msg", name))
+                    self._install_child(parent, name, r.header)
+
+    def read_many(self, fds: List[int], n: int = -1,
+                  *, batch_size: int = DEFAULT_BATCH) -> List[bytes]:
+        """Bulk read(): one BATCH frame per (host, batch_size) chunk instead
+        of one READ RPC per fd.  Deferred open records (§3.3) piggyback on
+        the sub-messages exactly as they would on individual READs."""
+        length = n if n >= 0 else (1 << 31)
+        results: List[bytes] = [b""] * len(fds)
+        # a duplicated fd needs offset chaining (read #2 starts where #1
+        # ended, unknown until the response) — those go through sequential
+        # read(); distinct fds batch freely
+        dup_fds = {fd for fd, c in Counter(fds).items() if c > 1}
+        fhs: Dict[int, FileHandle] = {}
+        by_host: Dict[int, List[Tuple[int, Message]]] = {}
+        for i, fd in enumerate(fds):
+            if fd in dup_fds:
+                continue
+            fh = self._fh(fd)
+            self._flush_trunc(fh)
+            fhs[i] = fh
+            ino = Inode.unpack(fh.ino)
+            h = {"file_id": ino.file_id, "offset": fh.offset,
+                 "length": length, **self._io_header(fh)}
+            by_host.setdefault(ino.host_id, []).append(
+                (i, Message(MsgType.READ, h)))
+        # two-phase so a failure leaves NO offset advanced: gather every
+        # sub-response first, then apply results + offsets only if the
+        # whole bulk read succeeded — otherwise a caller retrying after the
+        # raise would silently skip the chunks that had already landed
+        gathered: List[Tuple[int, bytes]] = []
+        gather_lock = threading.Lock()
+
+        def drain_host(host: int, items: List[Tuple[int, Message]]) -> None:
+            for chunk in _chunks(items, batch_size):
+                resps = self._rpc_batch(host, [m for _, m in chunk])
+                for (i, _), r in zip(chunk, resps):
+                    if r.type is MsgType.ERROR:
+                        raise err(r.header.get("errno", errno.EIO),
+                                  r.header.get("msg", ""))
+                    with gather_lock:
+                        gathered.append((i, r.payload))
+
+        if len(by_host) == 1:
+            host, items = next(iter(by_host.items()))
+            drain_host(host, items)
+        else:
+            # hosts are independent servers: drain them concurrently (each
+            # fd belongs to exactly one host, so no slot is shared)
+            failures: List[BaseException] = []
+
+            def runner(host: int, items) -> None:
+                try:
+                    drain_host(host, items)
+                except BaseException as e:  # re-raised on the caller thread
+                    failures.append(e)
+
+            threads = [threading.Thread(target=runner, args=(h, it))
+                       for h, it in by_host.items()]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if failures:
+                raise failures[0]
+        # duplicated fds: chained preads (no offset mutation) gathered
+        # BEFORE anything is applied, so a raise anywhere leaves every
+        # offset untouched
+        dup_gathered: List[Tuple[int, bytes]] = []
+        dup_final: Dict[int, int] = {}  # fd -> offset after its chain
+        for dfd in dup_fds:
+            fh = self._fh(dfd)
+            self._flush_trunc(fh)
+            off = fh.offset
+            for i, fd in enumerate(fds):
+                if fd != dfd:
+                    continue
+                payload = self.pread(dfd, length, off)
+                dup_gathered.append((i, payload))
+                off += len(payload)
+            dup_final[dfd] = off
+        for i, payload in gathered:
+            results[i] = payload
+            fhs[i].offset += len(payload)
+        for i, payload in dup_gathered:
+            results[i] = payload
+        for dfd, off in dup_final.items():
+            self._fh(dfd).offset = off
+        return results
 
     def shutdown(self) -> None:
         self.drain()

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import errno
 import itertools
+import os
 import queue
 import threading
 from dataclasses import dataclass
@@ -33,11 +34,59 @@ from .cluster import BuffetCluster, stable_hash
 from .inode import Inode
 from .perms import (Credentials, O_CREAT, O_TRUNC, PermRecord, W_OK, X_OK,
                     access_ok, err, flags_to_access)
-from .wire import Message, MsgType, RpcStats
+from .service import SERVER_OPS
+from .wire import Message, MsgType, RpcStats, error, ok
 
 _counter = itertools.count()
 
 MDS = 0  # host 0 plays the MDS role for the baselines
+
+
+# ---------------------------------------------------------------------------
+# Baseline server-side verbs, registered into the shared service-layer
+# registry (repro.core.service.SERVER_OPS).  They execute on a BServer —
+# identical storage to BuffetFS — but belong to the Lustre protocol
+# simulations, so they live here rather than inside BServer.
+# ---------------------------------------------------------------------------
+
+@SERVER_OPS.register(MsgType.OPEN_RECORD)
+def _op_open_record(server, h, _p) -> Message:
+    """Lustre-Normal MDS open(): perm data + open-state record in one RPC."""
+    parent, name = h["parent"], h["name"]
+    with server._lock:
+        pdir = server._dirs[parent]
+        if name not in pdir:
+            return error(errno.ENOENT, name)
+        e = pdir[name]
+        fid = Inode.unpack(e.ino).file_id
+        server._opened.setdefault(fid, set()).add(
+            (h["client_id"], h["pid"], h["fd"]))
+        size = server._meta[fid].size if fid in server._meta else 0
+    return ok({"ino": e.ino, "perm": e.perm.pack().hex(), "size": size})
+
+
+@SERVER_OPS.register(MsgType.READ_INLINE)
+def _op_read_inline(server, h, _p) -> Message:
+    """Lustre-DoM open(): like OPEN_RECORD but small-file data rides along."""
+    resp = _op_open_record(server, h, _p)
+    if resp.type is not MsgType.OK:
+        return resp
+    fid = Inode.unpack(resp.header["ino"]).file_id
+    if fid in server._meta:
+        # size + data from the backing file under the per-file lock, like
+        # _op_read: an unlocked read races a concurrent WRITE and would
+        # hand the client torn half-written inline contents
+        with server._file_lock(fid):
+            try:
+                with open(server._obj_path(fid), "rb") as f:
+                    size = os.fstat(f.fileno()).st_size
+                    resp.header["size"] = size
+                    if size <= server.dom_limit:
+                        resp.payload = f.read()
+                        resp.header["inline"] = True
+            except FileNotFoundError:
+                pass
+    return resp
 
 
 @dataclass
@@ -137,8 +186,22 @@ class LustreNormalClient:
                                    pending_trunc=bool(flags & O_TRUNC))
         return fd
 
+    def _flush_trunc(self, fh: _LFile, *, ignore_enoent: bool = False) -> None:
+        if not fh.pending_trunc:
+            return
+        ino = Inode.unpack(fh.ino)
+        try:
+            self._rpc(ino.host_id, Message(MsgType.TRUNCATE,
+                                           {"file_id": ino.file_id, "size": 0}))
+        except OSError as e:
+            if not (ignore_enoent and e.errno == errno.ENOENT):
+                raise
+        fh.pending_trunc = False
+        fh.inline = None  # DoM: the open() reply carried pre-truncation data
+
     def read(self, fd: int, n: int = -1) -> bytes:
         fh = self._fds[fd]
+        self._flush_trunc(fh)
         length = n if n >= 0 else (1 << 31)
         if fh.inline is not None:  # DoM: served from the open() reply
             data = fh.inline[fh.offset : fh.offset + length]
@@ -168,6 +231,9 @@ class LustreNormalClient:
         if fh is None:
             raise err(errno.EBADF, str(fd))
         ino = Inode.unpack(fh.ino)
+        # O_TRUNC with no intervening write: the deferred truncate must
+        # still happen — flush it before the (async) close wrap-up
+        self._flush_trunc(fh, ignore_enoent=True)
         self._close_q.put(Message(MsgType.CLOSE, {
             "host": MDS, "file_id": ino.file_id,
             "client_id": self.client_id, "pid": self.pid, "fd": fd}))

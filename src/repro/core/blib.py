@@ -72,6 +72,21 @@ class BLib:
         with self.open(path, "rb") as f:
             return f.read()
 
+    def read_files(self, paths: List[str]) -> List[bytes]:
+        """Bulk whole-file read over the agent's batched open/read path:
+        O(depth + hosts) RPCs for the lot instead of one per file."""
+        fds = self.agent.open_many(list(paths), O_RDONLY)
+        try:
+            return self.agent.read_many(fds)
+        finally:
+            for fd in fds:
+                self.agent.close(fd)
+
+    def warm_tree(self, path: str = "/") -> int:
+        """Prefetch the whole namespace subtree under `path` (bulk
+        LOOKUP_TREE); returns the number of directories warmed."""
+        return self.agent.warm_tree(path)
+
     def write_file(self, path: str, data: bytes, perm: int = 0o644) -> int:
         with self.open(path, "wb", perm) as f:
             return f.write(data)

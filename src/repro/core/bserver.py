@@ -17,9 +17,12 @@ Responsibilities faithful to the paper:
     arranges file locks inside the BServer", §4)
   * version number bumped on restart/restore  (§3.2)
 
-It also implements the baseline verbs (OPEN_RECORD, READ_INLINE) used by the
-Lustre-Normal / Lustre-DoM protocol simulations so all three systems in the
-paper's evaluation run against identical storage.
+Dispatch goes through the explicit operation registry in
+`repro.core.service` (SERVER_OPS): every verb — including the Lustre
+baseline verbs OPEN_RECORD/READ_INLINE, which register from
+`repro.core.baselines` — is declared there, and the BATCH envelope is
+executed generically on top, so all three systems in the paper's evaluation
+run against identical storage and the same batching machinery.
 """
 from __future__ import annotations
 
@@ -28,11 +31,13 @@ import json
 import os
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
 from .inode import Inode, ROOT_FILE_ID
 from .perms import PermRecord, S_IFDIR, S_IFREG
+from .service import MAX_TREE_DEPTH, SERVER_OPS
 from .transport import Transport
 from .wire import Message, MsgType, error, ok
 
@@ -70,12 +75,27 @@ class BServer:
         self.fsync_policy = fsync_policy
         self.dom_limit = dom_limit  # Lustre-DoM small-file threshold
 
+        # the Lustre baseline verbs live in repro.core.baselines and join
+        # SERVER_OPS on import; import it here so every constructed BServer
+        # serves the full verb set regardless of how the caller imported us
+        # (runtime import: baselines -> cluster -> bserver would cycle at
+        # module load time)
+        from . import baselines  # noqa: F401
+
         self._objs = os.path.join(backing_dir, "objs")
         os.makedirs(self._objs, exist_ok=True)
         self._meta_path = os.path.join(backing_dir, "meta.json")
 
         self._lock = threading.RLock()
         self._file_locks: Dict[int, threading.Lock] = {}
+        # per-directory mutation mutex: held across the §3.4 two-phase
+        # (invalidate-and-wait, then apply) AND by directory reads, so the
+        # server never hands out a snapshot taken inside a mutation window.
+        # (A snapshot already in flight when the mutation starts is handled
+        # client-side: BAgent refuses to mark a directory valid if its
+        # invalidation generation moved during the fetch.)
+        # Lock order: dir mutex BEFORE self._lock, never the reverse.
+        self._dir_mutexes: Dict[int, threading.Lock] = {}
         self._next_file_id = ROOT_FILE_ID + 1
         self._meta: Dict[int, FileMeta] = {}
         self._dirs: Dict[int, Dict[str, DirEntry]] = {}
@@ -194,6 +214,13 @@ class BServer:
                 lk = self._file_locks[file_id] = threading.Lock()
             return lk
 
+    def _dir_mutex(self, dir_file_id: int) -> threading.Lock:
+        with self._lock:
+            mtx = self._dir_mutexes.get(dir_file_id)
+            if mtx is None:
+                mtx = self._dir_mutexes[dir_file_id] = threading.Lock()
+            return mtx
+
     def _check_version(self, header: Dict) -> Optional[Message]:
         v = header.get("ver")
         if v is not None and v != self.version:
@@ -230,44 +257,62 @@ class BServer:
                 with self._lock:
                     self._watchers.get(dir_file_id, {}).pop(client_id, None)
 
+    def _two_phase(self, parent: int, names: List[str], check, apply,
+                   exclude_client: Optional[str] = None) -> Message:
+        """§3.4 two-phase scaffold shared by every namespace mutation.
+
+        Under the directory's mutation mutex: (1) `check` runs under the
+        meta lock and may refuse by returning a Message — nothing has been
+        invalidated yet, so a refused mutation costs the watchers nothing;
+        (2) the invalidation fan-out BLOCKS until every watcher acks;
+        (3) only then does `apply` run, under the meta lock.  The mutex
+        also serializes directory reads against the (2)-(3) window."""
+        with self._dir_mutex(parent):
+            with self._lock:
+                refusal = check()
+                if refusal is not None:
+                    return refusal
+            self._invalidate_watchers(parent, names,
+                                      exclude_client=exclude_client)
+            with self._lock:
+                return apply()
+
     # ------------------------------------------------------------------
-    # request dispatch
+    # request dispatch — through the shared service-layer registry; the
+    # BATCH envelope is unpacked and executed generically there
     # ------------------------------------------------------------------
     def handle(self, msg: Message) -> Message:
         if self._stopped:
             return error(errno.ECONNREFUSED, "server stopped")
-        h = msg.header
-        stale = self._check_version(h)
-        if stale is not None and msg.type not in (MsgType.PING,):
+        stale = self._check_version(msg.header)
+        if stale is not None and msg.type is not MsgType.PING:
             return stale
-        try:
-            fn = getattr(self, f"_op_{msg.type.name.lower()}", None)
-            if fn is None:
-                return error(errno.ENOSYS, f"unsupported op {msg.type.name}")
-            return fn(h, msg.payload)
-        except KeyError:
-            return error(errno.ENOENT, "no such object")
-        except OSError as e:
-            return error(e.errno or errno.EIO, str(e))
+        return SERVER_OPS.dispatch(self, msg)
 
     # --- namespace ops -------------------------------------------------
+    @SERVER_OPS.register(MsgType.LOOKUP_DIR)
     def _op_lookup_dir(self, h: Dict, _p: bytes) -> Message:
         """Return a directory's full data: dentries WITH the 10-byte perm
-        records, and register the requesting client for invalidation."""
+        records, and register the requesting client for invalidation.  The
+        dir mutex serializes this against a mutation's invalidate+apply
+        window (§3.4): a revalidation sees the directory either before the
+        fan-out or after the apply, never in between."""
         fid = h["file_id"]
-        with self._lock:
-            meta = self._meta[fid]
-            if not meta.is_dir:
-                return error(errno.ENOTDIR, "not a directory")
-            entries = [
-                {"name": e.name, "ino": e.ino, "perm": e.perm.pack().hex()}
-                for e in self._dirs[fid].values()
-            ]
-            if "client_id" in h and h.get("cb_addr"):
-                self._watchers.setdefault(fid, {})[h["client_id"]] = h["cb_addr"]
-            dperm = meta.perm.pack().hex()
+        with self._dir_mutex(fid):
+            with self._lock:
+                meta = self._meta[fid]
+                if not meta.is_dir:
+                    return error(errno.ENOTDIR, "not a directory")
+                entries = [
+                    {"name": e.name, "ino": e.ino, "perm": e.perm.pack().hex()}
+                    for e in self._dirs[fid].values()
+                ]
+                if "client_id" in h and h.get("cb_addr"):
+                    self._watchers.setdefault(fid, {})[h["client_id"]] = h["cb_addr"]
+                dperm = meta.perm.pack().hex()
         return ok({"entries": entries, "perm": dperm, "ino": self._inode(fid)})
 
+    @SERVER_OPS.register(MsgType.STAT)
     def _op_stat(self, h: Dict, _p: bytes) -> Message:
         fid = h["file_id"]
         with self._lock:
@@ -277,112 +322,166 @@ class BServer:
                        "nlink": m.nlink, "atime": m.atime, "mtime": m.mtime,
                        "ctime": m.ctime, "is_dir": m.is_dir})
 
+    @SERVER_OPS.register(MsgType.CREATE, mutating=True)
     def _op_create(self, h: Dict, _p: bytes) -> Message:
         parent, name = h["parent"], h["name"]
         perm = PermRecord(S_IFREG | (h["mode"] & 0o777), h["uid"], h["gid"])
-        with self._lock:
-            pdir = self._dirs[parent]
-            if name in pdir:
-                if h.get("excl"):
-                    return error(errno.EEXIST, name)
-                e = pdir[name]
-                return ok({"ino": e.ino, "perm": e.perm.pack().hex(), "existed": True})
+
+        # a batched CREATE burst goes through here per sub-message, so the
+        # §3.4 ordering holds for batches exactly as for single RPCs
+        def check() -> Optional[Message]:
+            e = self._dirs[parent].get(name)
+            if e is None:
+                return None
+            if h.get("excl"):
+                return error(errno.EEXIST, name)
+            return ok({"ino": e.ino, "perm": e.perm.pack().hex(),
+                       "existed": True})
+
+        def apply() -> Message:
+            pdir = self._dirs.get(parent)
+            if pdir is None:  # parent rmdir'd during the fan-out: allocate
+                return error(errno.ENOENT, name)  # nothing, leak nothing
             fid = self._alloc(FileMeta(perm=perm, ctime=time.time(),
                                        mtime=time.time()))
             ino = self._inode(fid)
             pdir[name] = DirEntry(name, ino, perm)
-            # front-end metadata mirrored into xattrs of the actual file (§3.2)
+            # front-end metadata mirrored into xattrs of the file (§3.2)
             self._meta[fid].xattrs["buffet.ino"] = str(ino)
             open(self._obj_path(fid), "wb").close()
             self._persist()
-        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
-        return ok({"ino": ino, "perm": perm.pack().hex(), "existed": False})
+            return ok({"ino": ino, "perm": perm.pack().hex(),
+                       "existed": False})
 
+        return self._two_phase(parent, [name], check, apply,
+                               exclude_client=h.get("client_id"))
+
+    @SERVER_OPS.register(MsgType.MKDIR, mutating=True)
     def _op_mkdir(self, h: Dict, _p: bytes) -> Message:
         parent, name = h["parent"], h["name"]
         perm = PermRecord(S_IFDIR | (h["mode"] & 0o777), h["uid"], h["gid"])
-        with self._lock:
-            pdir = self._dirs[parent]
-            if name in pdir:
+
+        def check() -> Optional[Message]:
+            if name in self._dirs[parent]:
                 return error(errno.EEXIST, name)
-            fid = self._alloc(FileMeta(perm=perm, is_dir=True, ctime=time.time()))
+            return None
+
+        def apply() -> Message:
+            pdir = self._dirs.get(parent)
+            if pdir is None:  # parent rmdir'd during the fan-out
+                return error(errno.ENOENT, name)
+            fid = self._alloc(FileMeta(perm=perm, is_dir=True,
+                                       ctime=time.time()))
             self._dirs[fid] = {}
             ino = self._inode(fid)
             pdir[name] = DirEntry(name, ino, perm)
             self._persist()
-        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
-        return ok({"ino": ino, "perm": perm.pack().hex()})
+            return ok({"ino": ino, "perm": perm.pack().hex()})
 
+        return self._two_phase(parent, [name], check, apply,
+                               exclude_client=h.get("client_id"))
+
+    @SERVER_OPS.register(MsgType.UNLINK, mutating=True)
     def _op_unlink(self, h: Dict, _p: bytes) -> Message:
         parent, name = h["parent"], h["name"]
-        with self._lock:
-            pdir = self._dirs[parent]
-            if name not in pdir:
+
+        def check() -> Optional[Message]:
+            e = self._dirs[parent].get(name)
+            if e is None:
                 return error(errno.ENOENT, name)
-            e = pdir[name]
             if e.perm.is_dir:
                 return error(errno.EISDIR, name)
-            del pdir[name]
-            fid = Inode.unpack(e.ino).file_id
-            if Inode.unpack(e.ino).host_id == self.host_id:
-                self._meta.pop(fid, None)
+            return None
+
+        def apply() -> Message:
+            e = self._dirs[parent].pop(name)
+            ino = Inode.unpack(e.ino)
+            if ino.host_id == self.host_id:
+                self._meta.pop(ino.file_id, None)
                 try:
-                    os.unlink(self._obj_path(fid))
+                    os.unlink(self._obj_path(ino.file_id))
                 except FileNotFoundError:
                     pass
             self._persist()
-        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
-        return ok()
+            return ok()
 
+        return self._two_phase(parent, [name], check, apply,
+                               exclude_client=h.get("client_id"))
+
+    @SERVER_OPS.register(MsgType.RMDIR, mutating=True)
     def _op_rmdir(self, h: Dict, _p: bytes) -> Message:
         parent, name = h["parent"], h["name"]
-        with self._lock:
-            pdir = self._dirs[parent]
-            if name not in pdir:
+
+        def check() -> Optional[Message]:
+            e = self._dirs[parent].get(name)
+            if e is None:
                 return error(errno.ENOENT, name)
-            e = pdir[name]
             if not e.perm.is_dir:
                 return error(errno.ENOTDIR, name)
+            if self._dirs.get(Inode.unpack(e.ino).file_id):
+                # reject BEFORE the fan-out: a failing rmdir must not blow
+                # away every watcher's cache for nothing
+                return error(errno.ENOTEMPTY, name)
+            return None
+
+        def apply() -> Message:
+            # re-check: the child dir is guarded by its OWN mutex, so a
+            # CREATE inside it can land during our fan-out — deleting now
+            # would orphan those files
+            e = self._dirs[parent].get(name)
+            if e is None:
+                return error(errno.ENOENT, name)
             fid = Inode.unpack(e.ino).file_id
             if self._dirs.get(fid):
                 return error(errno.ENOTEMPTY, name)
-            del pdir[name]
+            del self._dirs[parent][name]
             self._dirs.pop(fid, None)
             self._meta.pop(fid, None)
             self._persist()
-        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
-        return ok()
+            return ok()
 
+        return self._two_phase(parent, [name], check, apply,
+                               exclude_client=h.get("client_id"))
+
+    @SERVER_OPS.register(MsgType.RENAME, mutating=True)
     def _op_rename(self, h: Dict, _p: bytes) -> Message:
         parent, old, new = h["parent"], h["old"], h["new"]
-        with self._lock:
-            pdir = self._dirs[parent]
-            if old not in pdir:
+
+        def check() -> Optional[Message]:
+            if old not in self._dirs[parent]:
                 return error(errno.ENOENT, old)
+            return None
+
+        def apply() -> Message:
+            pdir = self._dirs[parent]
             e = pdir.pop(old)
             pdir[new] = DirEntry(new, e.ino, e.perm)
             self._persist()
-        self._invalidate_watchers(parent, [old, new], exclude_client=h.get("client_id"))
-        return ok()
+            return ok()
+
+        return self._two_phase(parent, [old, new], check, apply,
+                               exclude_client=h.get("client_id"))
 
     # --- permission changes (§3.4: invalidate BEFORE applying) ---------
+    @SERVER_OPS.register(MsgType.CHMOD, mutating=True)
     def _op_chmod(self, h: Dict, _p: bytes) -> Message:
         return self._perm_change(h, lambda perm: perm.with_mode_bits(h["mode"]))
 
+    @SERVER_OPS.register(MsgType.CHOWN, mutating=True)
     def _op_chown(self, h: Dict, _p: bytes) -> Message:
         return self._perm_change(
             h, lambda perm: PermRecord(perm.mode, h["uid"], h["gid"]))
 
     def _perm_change(self, h: Dict, f) -> Message:
         parent, name = h["parent"], h["name"]
-        with self._lock:
-            pdir = self._dirs[parent]
-            if name not in pdir:
+
+        def check() -> Optional[Message]:
+            if name not in self._dirs[parent]:
                 return error(errno.ENOENT, name)
-        # Step 1 (§3.4): inform all caching clients and WAIT for their acks
-        self._invalidate_watchers(parent, [name])
-        # Step 2: only now execute the permission modification
-        with self._lock:
+            return None
+
+        def apply() -> Message:
+            pdir = self._dirs[parent]
             e = pdir[name]
             new_perm = f(e.perm)
             pdir[name] = DirEntry(name, e.ino, new_perm)
@@ -391,10 +490,72 @@ class BServer:
                 self._meta[ino.file_id].perm = new_perm
                 self._meta[ino.file_id].ctime = time.time()
             self._persist()
-        return ok({"perm": new_perm.pack().hex()})
+            return ok({"perm": new_perm.pack().hex()})
 
+        # no exclude_client: even the caller's own cache must revalidate
+        return self._two_phase(parent, [name], check, apply)
+
+    @SERVER_OPS.register(MsgType.REVALIDATE)
     def _op_revalidate(self, h: Dict, p: bytes) -> Message:
         return self._op_lookup_dir(h, p)
+
+    @SERVER_OPS.register(MsgType.LOOKUP_TREE)
+    def _op_lookup_tree(self, h: Dict, _p: bytes) -> Message:
+        """Readdirplus-style bulk namespace fetch (one RPC): BFS over the
+        locally-owned subtree rooted at `file_id`, bounded by `depth`,
+        returning every visited directory's dentries + 10-byte perm records.
+
+        Directories that cannot be descended here — owned by another host,
+        or beyond the depth bound — are returned in `frontier` so the client
+        can continue with one more (batched) round per host.  Every visited
+        directory registers the requesting client as a watcher, exactly as a
+        LOOKUP_DIR would, so §3.4 invalidations keep reaching prefetched
+        nodes."""
+        root_fid = h["file_id"]
+        depth = max(1, min(int(h.get("depth", MAX_TREE_DEPTH)), MAX_TREE_DEPTH))
+        client_id, cb_addr = h.get("client_id"), h.get("cb_addr")
+        with self._lock:
+            if not self._meta[root_fid].is_dir:
+                return error(errno.ENOTDIR, "not a directory")
+        dirs: List[Dict] = []
+        frontier: List[int] = []
+        # per-directory lock scope: each visited dir is snapshotted under
+        # its own mutex (consistent vs §3.4 mutation windows) + the meta
+        # lock, then released — one big LOOKUP_TREE never stalls the whole
+        # server for the duration of the walk
+        queue: "deque[Tuple[int, int]]" = deque([(root_fid, 0)])
+        while queue:
+            fid, d = queue.popleft()
+            with self._dir_mutex(fid):
+                with self._lock:
+                    children = self._dirs.get(fid)
+                    m = self._meta.get(fid)
+                    if children is None or m is None:
+                        continue  # directory vanished mid-walk
+                    entries = []
+                    # (ino, locally-descendable) for dir children, decided
+                    # here where the perm is already decoded — the walk loop
+                    # below must not re-parse every entry's hex perm
+                    subdirs: List[Tuple[int, bool]] = []
+                    for e in children.values():
+                        entries.append({"name": e.name, "ino": e.ino,
+                                        "perm": e.perm.pack().hex()})
+                        if e.perm.is_dir:
+                            ci = Inode.unpack(e.ino)
+                            subdirs.append((e.ino,
+                                            ci.host_id == self.host_id
+                                            and ci.file_id in self._dirs))
+                    perm_hex = m.perm.pack().hex()
+                    if client_id and cb_addr:
+                        self._watchers.setdefault(fid, {})[client_id] = cb_addr
+            dirs.append({"ino": self._inode(fid), "perm": perm_hex,
+                         "entries": entries})
+            for ino, local in subdirs:
+                if local and d + 1 < depth:
+                    queue.append((Inode.unpack(ino).file_id, d + 1))
+                else:
+                    frontier.append(ino)
+        return ok({"dirs": dirs, "frontier": frontier})
 
     # --- data ops --------------------------------------------------------
     def _record_open(self, io_h: Dict) -> None:
@@ -405,6 +566,7 @@ class BServer:
                 self._opened.setdefault(io_h["file_id"], set()).add(
                     (rec["client_id"], rec["pid"], rec["fd"]))
 
+    @SERVER_OPS.register(MsgType.READ)
     def _op_read(self, h: Dict, _p: bytes) -> Message:
         fid, off, ln = h["file_id"], h["offset"], h["length"]
         self._record_open(h)
@@ -412,19 +574,33 @@ class BServer:
             with self._lock:
                 m = self._meta[fid]
                 m.atime = time.time()
+            # size comes from the backing file itself, under the file lock:
+            # race-free against concurrent WRITEs (the old code read m.size
+            # unlocked for the eof flag) and correct even when a crash left
+            # meta.json behind the fsynced object data.  Clamping the "read
+            # to EOF" sentinel (2 GiB) also avoids BufferedReader's ~0.4ms
+            # of buffer setup per huge read() call.
             try:
                 with open(self._obj_path(fid), "rb") as f:
+                    size = os.fstat(f.fileno()).st_size
                     f.seek(off)
-                    data = f.read(ln)
+                    data = f.read(min(ln, max(0, size - off)))
             except FileNotFoundError:
-                data = b""
-        return ok({"eof": off + len(data) >= m.size}, data)
+                size, data = 0, b""
+        return ok({"eof": off + len(data) >= size}, data)
 
+    @SERVER_OPS.register(MsgType.WRITE, mutating=True)
     def _op_write(self, h: Dict, p: bytes) -> Message:
         fid, off = h["file_id"], h["offset"]
+        with self._lock:
+            if fid not in self._meta:
+                return error(errno.ENOENT, "no such object")
         self._record_open(h)
         with self._file_lock(fid):
             path = self._obj_path(fid)
+            # "wb" fallback is legitimate re-materialization while metadata
+            # exists (e.g. object lost in a crash); the unlinked-file case
+            # is caught above and re-checked below
             mode = "r+b" if os.path.exists(path) else "wb"
             with open(path, mode) as f:
                 if h.get("truncate"):
@@ -435,21 +611,49 @@ class BServer:
                     f.flush()
                     os.fsync(f.fileno())
             with self._lock:
-                m = self._meta[fid]
+                m = self._meta.get(fid)
+                if m is None:
+                    # unlinked while we were writing: remove the object we
+                    # just (re-)materialized rather than leak an orphan
+                    try:
+                        os.unlink(path)
+                    except FileNotFoundError:
+                        pass
+                    return error(errno.ENOENT, "unlinked during write")
                 end = (off + len(p)) if not h.get("truncate") else len(p)
                 m.size = max(0 if h.get("truncate") else m.size, end)
                 m.mtime = time.time()
-        return ok({"written": len(p), "size": m.size})
+                size = m.size
+        return ok({"written": len(p), "size": size})
 
+    @SERVER_OPS.register(MsgType.TRUNCATE, mutating=True)
     def _op_truncate(self, h: Dict, _p: bytes) -> Message:
         fid = h["file_id"]
+        with self._lock:
+            if fid not in self._meta:
+                return error(errno.ENOENT, "no such object")
+        self._record_open(h)
         with self._file_lock(fid):
-            with open(self._obj_path(fid), "ab") as f:
+            path = self._obj_path(fid)
+            # mirror _op_write: re-materialize a crash-lost object while
+            # metadata exists; the unlinked-race case is handled by the
+            # post-mutation meta re-check below, never by leaking an orphan
+            mode = "r+b" if os.path.exists(path) else "wb"
+            with open(path, mode) as f:
                 f.truncate(h["size"])
             with self._lock:
-                self._meta[fid].size = h["size"]
+                m = self._meta.get(fid)
+                if m is None:
+                    try:
+                        os.unlink(path)
+                    except FileNotFoundError:
+                        pass
+                    return error(errno.ENOENT, "unlinked during truncate")
+                m.size = h["size"]
+                m.mtime = time.time()
         return ok()
 
+    @SERVER_OPS.register(MsgType.CLOSE)
     def _op_close(self, h: Dict, _p: bytes) -> Message:
         """Wrap-up (async on the client side): drop from the opened-file list."""
         with self._lock:
@@ -461,6 +665,7 @@ class BServer:
         return ok()
 
     # --- cross-host namespace ops (decentralized placement) -------------
+    @SERVER_OPS.register(MsgType.MKNOD_OBJ, mutating=True)
     def _op_mknod_obj(self, h: Dict, _p: bytes) -> Message:
         """Allocate a file/dir object on THIS data host; the dentry will be
         linked into the parent directory's namespace host separately."""
@@ -479,48 +684,29 @@ class BServer:
             self._persist()
         return ok({"ino": ino, "perm": perm.pack().hex()})
 
+    @SERVER_OPS.register(MsgType.LINK_DENTRY, mutating=True)
     def _op_link_dentry(self, h: Dict, _p: bytes) -> Message:
         parent, name = h["parent"], h["name"]
         perm = PermRecord.unpack(bytes.fromhex(h["perm"]))
-        with self._lock:
-            pdir = self._dirs[parent]
-            if name in pdir:
+
+        def check() -> Optional[Message]:
+            if name in self._dirs[parent]:
                 return error(errno.EEXIST, name)
-            pdir[name] = DirEntry(name, h["ino"], perm)
+            return None
+
+        def apply() -> Message:
+            self._dirs[parent][name] = DirEntry(name, h["ino"], perm)
             self._persist()
-        self._invalidate_watchers(parent, [name], exclude_client=h.get("client_id"))
-        return ok()
+            return ok()
 
-    # --- baseline verbs (Lustre simulations) ---------------------------
-    def _op_open_record(self, h: Dict, _p: bytes) -> Message:
-        """Lustre-Normal MDS open(): perm data + open-state record in one RPC."""
-        parent, name = h["parent"], h["name"]
-        with self._lock:
-            pdir = self._dirs[parent]
-            if name not in pdir:
-                return error(errno.ENOENT, name)
-            e = pdir[name]
-            fid = Inode.unpack(e.ino).file_id
-            self._opened.setdefault(fid, set()).add(
-                (h["client_id"], h["pid"], h["fd"]))
-            size = self._meta[fid].size if fid in self._meta else 0
-        return ok({"ino": e.ino, "perm": e.perm.pack().hex(), "size": size})
+        return self._two_phase(parent, [name], check, apply,
+                               exclude_client=h.get("client_id"))
 
-    def _op_read_inline(self, h: Dict, _p: bytes) -> Message:
-        """Lustre-DoM open(): like OPEN_RECORD but small-file data rides along."""
-        resp = self._op_open_record(h, _p)
-        if resp.type is not MsgType.OK:
-            return resp
-        fid = Inode.unpack(resp.header["ino"]).file_id
-        if resp.header["size"] <= self.dom_limit and fid in self._meta:
-            try:
-                with open(self._obj_path(fid), "rb") as f:
-                    resp.payload = f.read()
-                resp.header["inline"] = True
-            except FileNotFoundError:
-                pass
-        return resp
+    # NOTE: the Lustre baseline verbs (OPEN_RECORD, READ_INLINE) register
+    # into the same SERVER_OPS registry from repro.core.baselines — the
+    # baseline protocol lives with the baselines, not inside BServer.
 
+    @SERVER_OPS.register(MsgType.PING)
     def _op_ping(self, h: Dict, _p: bytes) -> Message:
         return ok({"host_id": self.host_id, "version": self.version})
 

@@ -19,7 +19,9 @@ import socketserver
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
+import itertools
+import queue
+from typing import Callable, Dict, List, Optional
 
 from .wire import Message, MsgType, RpcStats, error
 
@@ -54,6 +56,14 @@ class Transport:
     def request(self, addr: Addr, msg: Message, *, critical: bool = True,
                 stats: Optional[RpcStats] = None) -> Message:
         raise NotImplementedError
+
+    def request_many(self, addr: Addr, msgs: List[Message], *,
+                     critical: bool = True, stats: Optional[RpcStats] = None
+                     ) -> List[Message]:
+        """Issue several independent requests to one server.  The base
+        implementation is sequential; pipelining transports overlap them."""
+        return [self.request(addr, m, critical=critical, stats=stats)
+                for m in msgs]
 
     def serve(self, addr: Addr, handler: Handler) -> None:
         raise NotImplementedError
@@ -98,24 +108,32 @@ class InProcTransport(Transport):
             return error(107, f"server {addr!r} unreachable")  # ENOTCONN
         req_bytes = msg.nbytes
         lat = self.latency
+        # batch physics: a BATCH envelope pays ONE round trip but the server
+        # still performs (and is occupied for) every sub-operation, so the
+        # service time scales with the sub-message count while the RTT does
+        # not — this asymmetry is what makes batching win.
+        n_sub = msg.header.get("n", 1) if msg.type is MsgType.BATCH else 1
+        svc_s = lat.service_us * n_sub * 1e-6
         # service time: serialized per server when contention is simulated
         # (this is what exposes the MDS bottleneck under concurrency)
         if self.simulate_contention and svc_lock is not None and lat.service_us:
             with svc_lock:
-                time.sleep(lat.service_us * 1e-6)
+                time.sleep(svc_s)
                 resp = handler(msg)
         else:
             if lat.service_us:
-                time.sleep(lat.service_us * 1e-6)
+                time.sleep(svc_s)
             resp = handler(msg)
         resp_bytes = resp.nbytes
-        # network: one combined sleep per RPC (rtt + both transfers) to keep
+        # network: one combined sleep per RPC (rtt charged ONCE even for a
+        # batch + transfer proportional to the summed frame bytes) to keep
         # the host-sleep granularity bias (~100us/sleep on Linux) uniform
         if lat.rtt_us or lat.per_mib_us:
             time.sleep(lat.rtt_us * 1e-6 + (req_bytes + resp_bytes)
                        / (1024 * 1024) * lat.per_mib_us * 1e-6)
         if stats is not None:
-            stats.record(msg.type, req_bytes, resp_bytes, critical)
+            stats.record(msg.type, req_bytes, resp_bytes, critical,
+                         subops=n_sub)
         return resp
 
 
@@ -139,19 +157,81 @@ def _recv_frame(sock: socket.socket) -> bytes:
     return head + _recv_exact(sock, total - 4)
 
 
+MAX_INFLIGHT_PER_CONN = 32  # server-side concurrent frames per connection
+
+
 class _TCPHandler(socketserver.BaseRequestHandler):
-    def handle(self) -> None:  # one connection, many frames
-        while True:
-            try:
-                frame = _recv_frame(self.request)
-            except (ConnectionError, OSError):
-                return
-            msg = Message.decode(frame)
-            resp = self.server.buffet_handler(msg)  # type: ignore[attr-defined]
-            try:
-                self.request.sendall(resp.encode())
-            except OSError:
-                return
+    """One connection, many (pipelined) frames.
+
+    rid-bearing frames are fed to a lazily-grown per-connection worker pool
+    (capped at MAX_INFLIGHT_PER_CONN): the read loop never blocks on a
+    handler, so one slow mutation cannot head-of-line-block other threads
+    sharing the connection, while the sequential-RPC case reuses a single
+    long-lived worker instead of paying thread create/teardown per frame.
+    The rid demux on the client side makes out-of-order responses safe."""
+
+    def handle(self) -> None:
+        send_lock = threading.Lock()
+        work_q: "queue.Queue[Optional[tuple]]" = queue.Queue()
+        busy = [0]
+        busy_lock = threading.Lock()
+        workers: List[threading.Thread] = []
+
+        def worker() -> None:
+            while True:
+                item = work_q.get()
+                if item is None:
+                    return
+                msg, rid = item
+                try:
+                    try:
+                        resp = self.server.buffet_handler(msg)  # type: ignore[attr-defined]
+                    except Exception as e:  # last resort: never let a
+                        # handler exception kill a pool worker silently
+                        resp = error(5, f"handler error: {e}")  # EIO
+                    resp.header["_rid"] = rid
+                    try:
+                        with send_lock:
+                            self.request.sendall(resp.encode())
+                    except OSError:
+                        pass  # connection gone; peer's waiter fails on its own
+                finally:
+                    with busy_lock:
+                        busy[0] -= 1
+
+        try:
+            while True:
+                try:
+                    frame = _recv_frame(self.request)
+                except (ConnectionError, OSError):
+                    return
+                msg = Message.decode(frame)
+                # pipelining: the request id is transport-level framing, not
+                # protocol payload — strip it before dispatch, echo it back
+                # so the client can match responses to outstanding requests
+                rid = msg.header.pop("_rid", None)
+                if rid is None:
+                    # legacy non-pipelined peer: in-order request/response
+                    # (send under the shared lock — pool workers may be
+                    # writing responses on this same socket)
+                    resp = self.server.buffet_handler(msg)  # type: ignore[attr-defined]
+                    try:
+                        with send_lock:
+                            self.request.sendall(resp.encode())
+                    except OSError:
+                        return
+                    continue
+                with busy_lock:
+                    busy[0] += 1
+                    saturated = busy[0] > len(workers)
+                if saturated and len(workers) < MAX_INFLIGHT_PER_CONN:
+                    t = threading.Thread(target=worker, daemon=True)
+                    t.start()
+                    workers.append(t)
+                work_q.put((msg, rid))
+        finally:
+            for _ in workers:
+                work_q.put(None)
 
 
 class _TCPServer(socketserver.ThreadingTCPServer):
@@ -159,12 +239,95 @@ class _TCPServer(socketserver.ThreadingTCPServer):
     daemon_threads = True
 
 
+class _Waiter:
+    """One outstanding pipelined request awaiting its response."""
+
+    __slots__ = ("event", "resp")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.resp: Optional[Message] = None
+
+
+class _PipelinedConn:
+    """One shared socket per server with request-id demultiplexing.
+
+    Any number of threads send frames (serialized per frame by `send_lock`)
+    and a single reader thread matches responses to waiters by the `_rid`
+    echoed in the response header — so multiple outstanding requests share
+    one connection instead of one connection per (thread, server)."""
+
+    def __init__(self, addr: Addr, on_dead: Callable[["_PipelinedConn"], None]
+                 ) -> None:
+        host, _, port = addr.partition(":")
+        self.addr = addr
+        self.sock = socket.create_connection((host, int(port)), timeout=10.0)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.sock.settimeout(None)  # reader blocks; waiters carry timeouts
+        self.send_lock = threading.Lock()
+        self.lock = threading.Lock()
+        self.pending: Dict[int, _Waiter] = {}
+        self.dead: Optional[str] = None
+        self._on_dead = on_dead
+        threading.Thread(target=self._reader, daemon=True).start()
+
+    def _reader(self) -> None:
+        while True:
+            try:
+                resp = Message.decode(_recv_frame(self.sock))
+            except (OSError, ConnectionError) as e:
+                self._fail(str(e))
+                return
+            rid = resp.header.pop("_rid", None)
+            with self.lock:
+                waiter = self.pending.pop(rid, None)
+            if waiter is not None:
+                waiter.resp = resp
+                waiter.event.set()
+
+    def _fail(self, why: str) -> None:
+        with self.lock:
+            self.dead = why
+            stranded = list(self.pending.values())
+            self.pending.clear()
+        for w in stranded:
+            w.event.set()  # resp stays None => unreachable
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        self._on_dead(self)
+
+    def submit(self, rid: int, msg: Message) -> Optional[_Waiter]:
+        """Register a waiter and send the frame; None if the conn died."""
+        waiter = _Waiter()
+        with self.lock:
+            if self.dead is not None:
+                return None
+            self.pending[rid] = waiter
+        msg.header["_rid"] = rid
+        try:
+            with self.send_lock:
+                self.sock.sendall(msg.encode())
+        except OSError as e:
+            self._fail(str(e))
+            return None
+        return waiter
+
+
 class TCPTransport(Transport):
-    """Real TCP transport; addresses are "host:port" strings."""
+    """Real TCP transport; addresses are "host:port" strings.
+
+    Request-id-based pipelining: all threads share one connection per server
+    address and may have many requests in flight at once; the per-connection
+    reader thread demultiplexes responses by id."""
+
+    REQUEST_TIMEOUT_S = 15.0
 
     def __init__(self) -> None:
         self._servers: Dict[Addr, _TCPServer] = {}
-        self._conns: Dict[Tuple[int, Addr], socket.socket] = {}
+        self._conns: Dict[Addr, _PipelinedConn] = {}
+        self._rids = itertools.count(1)
         self._lock = threading.Lock()
 
     def serve(self, addr: Addr, handler: Handler) -> Addr:
@@ -184,37 +347,76 @@ class TCPTransport(Transport):
             srv.shutdown()
             srv.server_close()
 
-    def _conn(self, addr: Addr) -> socket.socket:
-        key = (threading.get_ident(), addr)
+    def _forget(self, conn: _PipelinedConn) -> None:
         with self._lock:
-            sock = self._conns.get(key)
-        if sock is None:
-            host, _, port = addr.partition(":")
-            sock = socket.create_connection((host, int(port)), timeout=10.0)
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            with self._lock:
-                self._conns[key] = sock
-        return sock
+            if self._conns.get(conn.addr) is conn:
+                del self._conns[conn.addr]
 
-    def _drop_conn(self, addr: Addr) -> None:
-        key = (threading.get_ident(), addr)
+    def _conn(self, addr: Addr) -> _PipelinedConn:
         with self._lock:
-            sock = self._conns.pop(key, None)
-        if sock is not None:
-            try:
-                sock.close()
-            except OSError:
-                pass
+            conn = self._conns.get(addr)
+            if conn is not None and conn.dead is None:
+                return conn
+        conn = _PipelinedConn(addr, self._forget)
+        loser = None
+        with self._lock:
+            cur = self._conns.get(addr)
+            if cur is not None and cur.dead is None:
+                loser, conn = conn, cur  # lost the race; use the winner
+            else:
+                self._conns[addr] = conn
+        if loser is not None:
+            # dispose OUTSIDE self._lock: _fail calls back into _forget,
+            # which takes self._lock (non-reentrant — would deadlock)
+            loser._fail("superseded")
+        return conn
+
+    def _submit(self, addr: Addr, msg: Message):
+        """Returns (conn, rid, waiter), or None if the server is gone."""
+        try:
+            conn = self._conn(addr)
+        except (OSError, ConnectionError):
+            return None
+        rid = next(self._rids)
+        waiter = conn.submit(rid, msg)
+        if waiter is None:
+            return None
+        return conn, rid, waiter
+
+    def _await(self, addr: Addr, msg: Message, handle, *,
+               critical: bool, stats: Optional[RpcStats]) -> Message:
+        if handle is None:
+            return error(107, f"server {addr!r} unreachable")  # ENOTCONN
+        conn, rid, waiter = handle
+        # a BATCH is N server-side operations (each possibly blocking on
+        # watcher acks): scale the deadline with the sub-op count so a big
+        # legitimate batch is not reported failed while the server applies it
+        n_sub = msg.header.get("n", 1) if msg.type is MsgType.BATCH else 1
+        timeout_s = self.REQUEST_TIMEOUT_S + 0.05 * (n_sub - 1)
+        if not waiter.event.wait(timeout_s):
+            # abandon the waiter so a late response doesn't leak an entry;
+            # the server is alive-but-slow, which is not "unreachable"
+            with conn.lock:
+                conn.pending.pop(rid, None)
+            return error(110, f"request to {addr!r} timed out")  # ETIMEDOUT
+        if waiter.resp is None:
+            return error(107, f"server {addr!r} unreachable")
+        resp = waiter.resp
+        if stats is not None:
+            stats.record(msg.type, msg.nbytes, resp.nbytes, critical,
+                         subops=n_sub)
+        return resp
 
     def request(self, addr: Addr, msg: Message, *, critical: bool = True,
                 stats: Optional[RpcStats] = None) -> Message:
-        try:
-            sock = self._conn(addr)
-            sock.sendall(msg.encode())
-            resp = Message.decode(_recv_frame(sock))
-        except (OSError, ConnectionError) as e:
-            self._drop_conn(addr)
-            return error(107, f"server {addr!r} unreachable: {e}")
-        if stats is not None:
-            stats.record(msg.type, msg.nbytes, resp.nbytes, critical)
-        return resp
+        return self._await(addr, msg, self._submit(addr, msg),
+                           critical=critical, stats=stats)
+
+    def request_many(self, addr: Addr, msgs: List[Message], *,
+                     critical: bool = True, stats: Optional[RpcStats] = None
+                     ) -> List[Message]:
+        """Pipelined fan-out: send every frame before collecting any
+        response, so N requests cost ~1 RTT + N service times."""
+        waiters = [self._submit(addr, m) for m in msgs]
+        return [self._await(addr, m, w, critical=critical, stats=stats)
+                for m, w in zip(msgs, waiters)]

@@ -5,10 +5,14 @@ so bulk data never round-trips through JSON:
 
     [ u32 total_len ][ u8 msg_type ][ u32 header_len ][ header JSON ][ payload ]
 
-Every request/response is one frame.  `RpcStats` counts RPCs by type and by
+Every request/response is one frame.  A `MsgType.BATCH` envelope packs N
+sub-messages (each its own nested frame) into one request frame, so N
+operations cost one round trip; the response is a BATCH of sub-responses
+with a per-sub-message status vector.  `RpcStats` counts RPCs by type and by
 whether they sat on the critical path — RPC *count* is the paper's primary
 metric (BuffetFS restrains file access to ONE critical-path RPC; Lustre needs
-three round trips of which close() is async).
+three round trips of which close() is async) — plus the sub-operations
+carried inside batches.
 """
 from __future__ import annotations
 
@@ -18,12 +22,13 @@ import threading
 from collections import Counter
 from dataclasses import dataclass, field
 from enum import IntEnum
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 
 class MsgType(IntEnum):
     # --- client -> server ---
     LOOKUP_DIR = 1      # fetch directory data: dentries + 10-byte perm records
+    LOOKUP_TREE = 20    # bounded-depth subtree of dentries + perms (readdirplus)
     READ = 2            # may carry incomplete_open flag (deferred open step 2)
     WRITE = 3           # may carry incomplete_open flag
     CLOSE = 4           # async: remove from opened-file list
@@ -47,6 +52,7 @@ class MsgType(IntEnum):
     # --- generic ---
     OK = 64
     ERROR = 65
+    BATCH = 66          # envelope packing N sub-messages into one frame
 
 
 _HDR = struct.Struct("<IBI")
@@ -93,6 +99,40 @@ def error(errno_: int, msg: str) -> Message:
     return Message(MsgType.ERROR, {"errno": errno_, "msg": msg})
 
 
+# ---------------------------------------------------------------------------
+# BATCH envelope: N sub-messages in one frame (one round trip on the wire)
+# ---------------------------------------------------------------------------
+
+def pack_batch(msgs: List[Message], header: Optional[Dict[str, Any]] = None
+               ) -> Message:
+    """Pack sub-messages into one BATCH frame.  The payload is the
+    concatenation of the sub-messages' own length-prefixed frames, so the
+    envelope nests the wire format rather than inventing a second one."""
+    env_header: Dict[str, Any] = dict(header or {})
+    env_header["n"] = len(msgs)
+    return Message(MsgType.BATCH, env_header,
+                   b"".join(m.encode() for m in msgs))
+
+
+def unpack_batch(msg: Message) -> List[Message]:
+    """Unpack a BATCH envelope back into its sub-messages."""
+    if msg.type is not MsgType.BATCH:
+        raise ValueError(f"not a BATCH message: {msg.type.name}")
+    subs: List[Message] = []
+    buf, off = msg.payload, 0
+    for _ in range(msg.header.get("n", 0)):
+        (total,) = struct.unpack_from("<I", buf, off)
+        subs.append(Message.decode(buf[off : off + total]))
+        off += total
+    return subs
+
+
+def batch_status(responses: List[Message]) -> List[int]:
+    """Per-sub-message status vector: 0 for OK, errno otherwise."""
+    return [0 if r.type is not MsgType.ERROR else int(r.header.get("errno", 5))
+            for r in responses]
+
+
 class RpcStats:
     """Thread-safe RPC accounting: the reproduction's primary metric."""
 
@@ -103,8 +143,10 @@ class RpcStats:
         self.async_offpath: int = 0      # RPCs issued asynchronously (close())
         self.bytes_sent: int = 0
         self.bytes_recv: int = 0
+        self.subops: int = 0             # operations carried (batch sub-msgs)
 
-    def record(self, msg_type: MsgType, sent: int, recv: int, critical: bool) -> None:
+    def record(self, msg_type: MsgType, sent: int, recv: int, critical: bool,
+               subops: int = 1) -> None:
         with self._lock:
             self.by_type[msg_type.name] += 1
             if critical:
@@ -113,6 +155,7 @@ class RpcStats:
                 self.async_offpath += 1
             self.bytes_sent += sent
             self.bytes_recv += recv
+            self.subops += subops
 
     @property
     def total(self) -> int:
@@ -127,6 +170,7 @@ class RpcStats:
                 "async_offpath": self.async_offpath,
                 "bytes_sent": self.bytes_sent,
                 "bytes_recv": self.bytes_recv,
+                "subops": self.subops,
             }
 
     def reset(self) -> None:
@@ -136,3 +180,4 @@ class RpcStats:
             self.async_offpath = 0
             self.bytes_sent = 0
             self.bytes_recv = 0
+            self.subops = 0

@@ -1,0 +1,648 @@
+"""Service-layer tests: BATCH envelope, operation registry, LOOKUP_TREE /
+warm_tree prefetch, bulk open/read paths, batching x invalidation interplay
+(§3.4), deferred-O_TRUNC flush, and TCP pipelining."""
+import errno
+import threading
+import time
+
+import pytest
+
+from repro.core import (BAgent, BLib, BuffetCluster, Credentials, Inode,
+                        LustreNormalClient, Message, MsgType, O_CREAT,
+                        O_RDONLY, O_TRUNC, O_WRONLY, SERVER_OPS, TCPTransport,
+                        batch_status, pack_batch, unpack_batch)
+from repro.core.perms import FSError
+from repro.core.wire import error, ok
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4)
+    yield c
+    c.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# wire layer: BATCH envelope
+# ---------------------------------------------------------------------------
+
+def test_batch_envelope_roundtrip():
+    subs = [Message(MsgType.READ, {"file_id": 7, "offset": 0, "length": 10}),
+            Message(MsgType.WRITE, {"file_id": 9, "offset": 4}, b"payload"),
+            Message(MsgType.PING)]
+    env = pack_batch(subs)
+    assert env.type is MsgType.BATCH and env.header["n"] == 3
+    # survives a full encode/decode cycle (nested wire format)
+    out = unpack_batch(Message.decode(env.encode()))
+    assert [m.type for m in out] == [m.type for m in subs]
+    assert out[1].payload == b"payload"
+    assert out[0].header["file_id"] == 7
+
+
+def test_batch_status_vector():
+    resps = [ok(), error(errno.ENOENT, "x"), ok()]
+    assert batch_status(resps) == [0, errno.ENOENT, 0]
+
+
+# ---------------------------------------------------------------------------
+# service layer: explicit operation registry (no getattr dispatch)
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_every_protocol_verb():
+    registered = set(SERVER_OPS.types())
+    expected = {MsgType.LOOKUP_DIR, MsgType.LOOKUP_TREE, MsgType.READ,
+                MsgType.WRITE, MsgType.CLOSE, MsgType.CREATE, MsgType.MKDIR,
+                MsgType.UNLINK, MsgType.RMDIR, MsgType.CHMOD, MsgType.CHOWN,
+                MsgType.RENAME, MsgType.STAT, MsgType.TRUNCATE,
+                MsgType.OPEN_RECORD, MsgType.READ_INLINE, MsgType.PING,
+                MsgType.REVALIDATE, MsgType.MKNOD_OBJ, MsgType.LINK_DENTRY}
+    assert expected <= registered
+    # baseline verbs registered (from baselines.py) through the same table
+    assert SERVER_OPS.operation(MsgType.OPEN_RECORD) is not None
+    assert SERVER_OPS.operation(MsgType.CREATE).mutating
+    assert not SERVER_OPS.operation(MsgType.READ).mutating
+
+
+def test_unknown_op_is_enosys(cluster):
+    resp = cluster.transport.request(cluster.config.addr(0),
+                                     Message(MsgType.INVALIDATE, {}))
+    assert resp.type is MsgType.ERROR
+    assert resp.header["errno"] == errno.ENOSYS
+
+
+def test_server_executes_batch_generically(cluster):
+    """A BATCH of mixed verbs executes in order with per-sub status."""
+    agent = BAgent(cluster)
+    lib = BLib(agent)
+    lib.makedirs("/b")
+    lib.write_file("/b/f", b"0123456789")
+    ino = Inode.unpack(agent.stat_cached("/b/f")["ino"])
+    env = pack_batch([
+        Message(MsgType.READ, {"file_id": ino.file_id, "offset": 0,
+                               "length": 4}),
+        Message(MsgType.READ, {"file_id": 999999, "offset": 0, "length": 4}),
+        Message(MsgType.PING),
+    ])
+    resp = cluster.transport.request(cluster.config.addr(ino.host_id), env)
+    assert resp.type is MsgType.BATCH
+    subs = unpack_batch(resp)
+    assert subs[0].payload == b"0123"
+    assert subs[1].type is MsgType.ERROR
+    assert subs[2].header["host_id"] == ino.host_id
+    assert resp.header["status"] == [0, errno.ENOENT, 0]
+    agent.shutdown()
+
+
+def test_nested_batch_rejected(cluster):
+    inner = pack_batch([Message(MsgType.PING)])
+    env = pack_batch([inner, Message(MsgType.PING)])
+    resp = cluster.transport.request(cluster.config.addr(0), env)
+    subs = unpack_batch(resp)
+    assert subs[0].type is MsgType.ERROR
+    assert subs[0].header["errno"] == errno.EBADMSG
+    assert subs[1].type is MsgType.OK
+
+
+# ---------------------------------------------------------------------------
+# LOOKUP_TREE + warm_tree: bulk namespace prefetch
+# ---------------------------------------------------------------------------
+
+def _mktree(cluster, files_per_dir=6):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    paths = []
+    for d in ("/t/a", "/t/b", "/t/b/c"):
+        lib.makedirs(d)
+        for i in range(files_per_dir):
+            p = f"{d}/f{i}"
+            lib.write_file(p, p.encode())
+            paths.append(p)
+    a.drain()
+    a.shutdown()
+    return paths
+
+
+def test_warm_tree_bounded_rpcs_then_zero_rpc_opens(cluster):
+    paths = _mktree(cluster)
+    fresh = BAgent(cluster)
+    fresh.stats.reset()
+    warmed = fresh.warm_tree("/t")
+    assert warmed == 4  # /t, /t/a, /t/b, /t/b/c
+    snap = fresh.stats.snapshot()
+    # O(1)-ish metadata: bounded by hosts+rounds, NOT by directory count;
+    # must beat one-RPC-per-directory (5 dirs incl. root) on this 4-host
+    # cluster and must not grow with file count
+    assert snap["total"] <= 5, snap
+    # every subsequent open is now fully local
+    fresh.stats.reset()
+    for p in paths:
+        fd = fresh.open(p, O_RDONLY)
+    assert fresh.stats.snapshot()["total"] == 0
+    fresh.shutdown()
+
+
+def test_warm_tree_registers_watcher_on_every_prefetched_dir(cluster):
+    _mktree(cluster)
+    fresh = BAgent(cluster)
+    fresh.warm_tree("/t")
+    # every directory returned by the prefetch must have registered the
+    # client as a watcher, else §3.4 invalidations would silently miss it
+    watchers = {}
+    for srv in cluster.servers.values():
+        with srv._lock:
+            for fid, regs in srv._watchers.items():
+                if fresh.client_id in regs:
+                    watchers[(srv.host_id, fid)] = True
+    # 4 prefetched dirs (+ root from the initial walk)
+    assert len(watchers) >= 5, watchers
+    # and an invalidation actually lands on a prefetched node
+    other = BAgent(cluster)
+    BLib(other).write_file("/t/b/c/new", b"x")
+    node, _ = fresh._walk("/t/b/c")
+    assert node.valid is False
+    fresh.shutdown()
+    other.shutdown()
+
+
+def test_parent_refetch_does_not_revalidate_stale_child(cluster):
+    """Refetching a parent directory must not mark an invalidated child
+    directory valid again — its own listing is still stale."""
+    a = BAgent(cluster)
+    b = BAgent(cluster)
+    al, bl_ = BLib(a), BLib(b)
+    al.makedirs("/t/sub")
+    a.warm("/t")
+    a.warm("/t/sub")
+    bl_.write_file("/t/sub/y", b"v")   # invalidates a's /t/sub
+    bl_.write_file("/t/x", b"v")       # invalidates a's /t
+    # walking to /t/sub/y refetches /t; /t/sub must still refetch its own
+    # listing (pre-fix: the parent merge re-validated it -> ENOENT forever)
+    assert al.read_file("/t/sub/y") == b"v"
+    a.shutdown()
+    b.shutdown()
+
+
+def test_failing_rmdir_does_not_invalidate_watchers(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/r/sub")
+    lib.write_file("/r/sub/keep", b"x")
+    ino = Inode.unpack(a.stat_cached("/r")["ino"])
+    hits = []
+    cluster.transport.serve("cb:rmspy", lambda m: (hits.append(m.type), ok())[1])
+    cluster.transport.request(
+        cluster.config.addr(ino.host_id),
+        Message(MsgType.LOOKUP_DIR, {"file_id": ino.file_id,
+                                     "client_id": "rmspy",
+                                     "cb_addr": "cb:rmspy"}))
+    resp = cluster.transport.request(
+        cluster.config.addr(ino.host_id),
+        Message(MsgType.RMDIR, {"parent": ino.file_id, "name": "sub"}))
+    assert resp.type is MsgType.ERROR
+    assert resp.header["errno"] == errno.ENOTEMPTY
+    assert hits == [], "failing rmdir must not fan out invalidations"
+    cluster.transport.shutdown("cb:rmspy")
+    a.shutdown()
+
+
+def test_warm_tree_sees_new_files_immediately(cluster):
+    _mktree(cluster)
+    fresh = BAgent(cluster)
+    fresh.warm_tree("/t")
+    assert BLib(fresh).read_file("/t/b/c/f3") == b"/t/b/c/f3"
+    fresh.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# bulk open/read: >=10x fewer RPCs than per-file access
+# ---------------------------------------------------------------------------
+
+def test_open_read_many_rpc_reduction(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/bulk")
+    paths = []
+    for i in range(64):
+        p = f"/bulk/f{i:03d}"
+        lib.write_file(p, p.encode())
+        paths.append(p)
+    a.drain()
+    a.shutdown()
+
+    # unbatched cold client: one RPC per file + per-dir lookups
+    cold1 = BAgent(cluster)
+    for p in paths:
+        fd = cold1.open(p, O_RDONLY)
+        cold1.read(fd)
+        cold1.close(fd)
+    unbatched = cold1.stats.snapshot()["critical_path"]
+    cold1.shutdown()
+
+    # batched cold client
+    cold2 = BAgent(cluster)
+    cold2.warm_tree("/bulk")
+    fds = cold2.open_many(paths, O_RDONLY)
+    blobs = cold2.read_many(fds)
+    batched = cold2.stats.snapshot()["critical_path"]
+    assert blobs == [p.encode() for p in paths]
+    for fd in fds:
+        cold2.close(fd)
+    cold2.shutdown()
+
+    assert unbatched >= 64
+    assert batched * 10 <= unbatched, (batched, unbatched)
+
+
+def test_read_many_advances_offsets_and_defers_open(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"abcdef")
+    a.drain()
+    assert cluster.total_opened() == 0
+    fd = a.open("/d/f", O_RDONLY)
+    assert cluster.total_opened() == 0          # step 2 still deferred
+    assert a.read_many([fd], 3) == [b"abc"]
+    assert cluster.total_opened() == 1          # piggybacked on batch READ
+    assert a.read_many([fd], 3) == [b"def"]     # offset advanced
+    a.close(fd)
+    a.drain()
+    time.sleep(0.05)
+    assert cluster.total_opened() == 0
+    a.shutdown()
+
+
+def test_blib_read_files(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/rf")
+    paths = []
+    for i in range(10):
+        p = f"/rf/f{i}"
+        lib.write_file(p, bytes([i]) * 8)
+        paths.append(p)
+    assert lib.read_files(paths) == [bytes([i]) * 8 for i in range(10)]
+    a.shutdown()
+
+
+def test_open_many_creates_missing_files(cluster):
+    a = BAgent(cluster)
+    BLib(a).makedirs("/mk")
+    paths = [f"/mk/n{i}" for i in range(12)]
+    fds = a.open_many(paths, O_WRONLY | O_CREAT)
+    for fd in fds:
+        a.write(fd, b"w")
+        a.close(fd)
+    a.drain()
+    lib = BLib(a)
+    assert lib.listdir("/mk") == sorted(f"n{i}" for i in range(12))
+    assert lib.read_file("/mk/n7") == b"w"
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# §3.4 interplay: a batched CREATE burst must still block on watcher acks
+# BEFORE each mutation is applied
+# ---------------------------------------------------------------------------
+
+def test_batched_create_blocks_on_watcher_acks(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/shared")
+    # find the server owning /shared and register a spy watcher through the
+    # normal protocol (LOOKUP_DIR with a callback address we serve)
+    ino = Inode.unpack(a.stat_cached("/shared")["ino"])
+    srv = cluster.servers[ino.host_id]
+    violations = []
+    invalidated = []
+
+    def spy_cb(msg):
+        assert msg.type is MsgType.INVALIDATE
+        names = msg.header.get("names") or []
+        with srv._lock:
+            present = set(srv._dirs.get(ino.file_id, {}))
+        for name in names:
+            # strong consistency: at invalidation time the mutation must
+            # NOT yet be applied
+            if name in present:
+                violations.append(name)
+            invalidated.append(name)
+        return ok()
+
+    cluster.transport.serve("cb:spy", spy_cb)
+    resp = cluster.transport.request(
+        cluster.config.addr(ino.host_id),
+        Message(MsgType.LOOKUP_DIR, {"file_id": ino.file_id,
+                                     "client_id": "spy",
+                                     "cb_addr": "cb:spy"}))
+    assert resp.type is MsgType.OK
+
+    # batched CREATE burst from another client
+    b = BAgent(cluster)
+    names = [f"burst{i}" for i in range(16)]
+    fds = b.open_many([f"/shared/{n}" for n in names], O_WRONLY | O_CREAT)
+    for fd in fds:
+        b.close(fd)
+    assert not violations, violations
+    assert set(names) <= set(invalidated)  # every sub-create fanned out
+    cluster.transport.shutdown("cb:spy")
+    a.shutdown()
+    b.shutdown()
+
+
+def test_revalidation_during_mutation_window_sees_post_apply_state(cluster):
+    """A LOOKUP_DIR issued while a mutation is between its watcher fan-out
+    and its apply must serialize after the apply (per-dir mutex) — else the
+    revalidating client would cache the pre-mutation directory as valid and
+    never be invalidated again."""
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/w")
+    ino = Inode.unpack(a.stat_cached("/w")["ino"])
+    addr = cluster.config.addr(ino.host_id)
+    fired = threading.Event()
+
+    def spy_cb(msg):
+        fired.set()
+        time.sleep(0.05)  # hold the fan-out open: apply cannot start yet
+        return ok()
+
+    cluster.transport.serve("cb:spy2", spy_cb)
+    resp = cluster.transport.request(
+        addr, Message(MsgType.LOOKUP_DIR, {"file_id": ino.file_id,
+                                           "client_id": "spy2",
+                                           "cb_addr": "cb:spy2"}))
+    assert resp.type is MsgType.OK
+    seen = {}
+
+    def revalidate_mid_window():
+        fired.wait(5)
+        r = cluster.transport.request(
+            addr, Message(MsgType.LOOKUP_DIR, {"file_id": ino.file_id}))
+        seen["names"] = [e["name"] for e in r.header["entries"]]
+
+    t = threading.Thread(target=revalidate_mid_window)
+    t.start()
+    b = BAgent(cluster)
+    fd = b.open("/w/newfile", O_WRONLY | O_CREAT)
+    b.close(fd)
+    t.join(10)
+    assert "newfile" in seen.get("names", []), seen
+    cluster.transport.shutdown("cb:spy2")
+    a.shutdown()
+    b.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# deferred-O_TRUNC flush on close (BAgent + baseline)
+# ---------------------------------------------------------------------------
+
+def test_open_trunc_close_without_write_truncates(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"long old content")
+    fd = a.open("/d/f", O_WRONLY | O_TRUNC)
+    a.close(fd)  # no write in between
+    a.drain()
+    assert lib.read_file("/d/f") == b""
+    assert a.stat("/d/f")["size"] == 0
+    a.shutdown()
+
+
+def test_baseline_open_trunc_close_without_write_truncates(cluster):
+    ln = LustreNormalClient(cluster)
+    ln.mkdir("/ld")
+    fd = ln.open("/ld/f", O_WRONLY | O_CREAT)
+    ln.write(fd, b"content")
+    ln.close(fd)
+    ln.drain()
+    fd = ln.open("/ld/f", O_WRONLY | O_TRUNC)
+    ln.close(fd)
+    ln.drain()
+    fd = ln.open("/ld/f", O_RDONLY)
+    assert ln.read(fd) == b""
+    ln.close(fd)
+    ln.drain()
+    ln.shutdown()
+
+
+def test_open_trunc_then_read_sees_empty_file(cluster):
+    """read() before the first write() must observe the deferred truncate."""
+    from repro.core import O_RDWR
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"hello world")
+    fd = a.open("/d/f", O_RDWR | O_TRUNC)
+    assert a.read(fd) == b""  # flushes the deferred truncate first
+    a.close(fd)
+    a.drain()
+    assert lib.read_file("/d/f") == b""
+    a.shutdown()
+
+
+def test_trunc_close_after_unlink_does_not_raise_or_resurrect(cluster):
+    a = BAgent(cluster)
+    b = BAgent(cluster)
+    al, bl_ = BLib(a), BLib(b)
+    al.makedirs("/d")
+    al.write_file("/d/f", b"content")
+    fd = a.open("/d/f", O_WRONLY | O_TRUNC)   # truncate deferred
+    bl_.unlink("/d/f")                         # another client removes it
+    a.close(fd)                                # must not raise
+    a.drain()
+    assert not al.exists("/d/f")
+    # no orphan object resurrected server-side
+    for srv in cluster.servers.values():
+        import os as _os
+        with srv._lock:
+            objs = set(_os.listdir(srv._objs))
+            known = {f"{fid:016x}" for fid in srv._meta}
+        assert objs <= known, (objs - known)
+    a.shutdown()
+    b.shutdown()
+
+
+def test_read_many_duplicate_fds_chain_offsets(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"abcdef")
+    fd = a.open("/d/f", O_RDONLY)
+    assert a.read_many([fd, fd], 3) == [b"abc", b"def"]
+    a.close(fd)
+    a.shutdown()
+
+
+def test_trunc_then_write_not_double_truncated(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"old")
+    fd = a.open("/d/f", O_WRONLY | O_TRUNC)
+    a.write(fd, b"new")  # truncate rides on the write
+    a.close(fd)
+    a.drain()
+    assert lib.read_file("/d/f") == b"new"
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# concurrent read/write: the eof race fix (size snapshotted under lock)
+# ---------------------------------------------------------------------------
+
+def test_concurrent_read_write_no_crash(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/rw")
+    lib.write_file("/rw/f", b"x")
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        w = BAgent(cluster)
+        try:
+            data = b"y" * 64
+            while not stop.is_set():
+                fd = w.open("/rw/f", O_WRONLY)
+                w.write(fd, data)
+                w.close(fd)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+        finally:
+            w.shutdown()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        for _ in range(200):
+            fd = a.open("/rw/f", O_RDONLY)
+            a.read(fd)
+            a.close(fd)
+    finally:
+        stop.set()
+        t.join()
+    assert not errors
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# TCP: pipelining + batches over real sockets
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def tcp_cluster(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=2,
+                      transport=TCPTransport())
+    yield c
+    c.shutdown()
+
+
+def test_tcp_request_many_pipelined(tcp_cluster):
+    c = tcp_cluster
+    addr = c.config.addr(0)
+    resps = c.transport.request_many(
+        addr, [Message(MsgType.PING) for _ in range(16)])
+    assert all(r.type is MsgType.OK for r in resps)
+    assert all(r.header["host_id"] == 0 for r in resps)
+    assert "_rid" not in resps[0].header  # framing stripped before return
+
+
+def test_tcp_batch_and_bulk_paths(tcp_cluster):
+    c = tcp_cluster
+    a = BAgent(c)
+    lib = BLib(a)
+    lib.makedirs("/tcp")
+    paths = []
+    for i in range(24):
+        p = f"/tcp/f{i:02d}"
+        lib.write_file(p, p.encode())
+        paths.append(p)
+    a.drain()
+
+    fresh = BAgent(c)
+    fresh.warm_tree("/tcp")
+    fresh.stats.reset()
+    fds = fresh.open_many(paths, O_RDONLY)
+    blobs = fresh.read_many(fds)
+    assert blobs == [p.encode() for p in paths]
+    snap = fresh.stats.snapshot()
+    assert snap["by_type"].get("BATCH", 0) >= 1
+    assert snap["total"] <= 4
+    a.shutdown()
+    fresh.shutdown()
+
+
+def test_tcp_concurrent_first_connections_no_deadlock(tcp_cluster):
+    """Threads racing to create the first connection to a server must not
+    deadlock (the loser of the race is disposed outside the transport
+    lock)."""
+    c = tcp_cluster
+    addr = c.config.addr(0)
+    results = []
+
+    def first_request():
+        tr = c.transport
+        results.append(tr.request(addr, Message(MsgType.PING)).type)
+
+    ts = [threading.Thread(target=first_request) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(10)
+    assert not any(t.is_alive() for t in ts), "transport deadlocked"
+    assert results.count(MsgType.OK) == 8
+
+
+def test_read_many_batch_size_clamped(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/bs")
+    lib.write_file("/bs/f", b"hello")
+    fd = a.open("/bs/f", O_RDONLY)
+    assert a.read_many([fd], batch_size=0) == [b"hello"]  # not silently b""
+    a.close(fd)
+    a.shutdown()
+
+
+def test_tcp_large_payload_pipelined(tcp_cluster):
+    """4MB payload across the pipelined framing (coverage that used to live
+    in the hypothesis-guarded TCP module, which skips without hypothesis)."""
+    import os as _os
+    c = tcp_cluster
+    a = BAgent(c)
+    lib = BLib(a)
+    lib.makedirs("/big")
+    blob = _os.urandom(4 * 1024 * 1024)
+    lib.write_file("/big/blob", blob)
+    a.drain()
+    fresh = BAgent(c)
+    assert BLib(fresh).read_file("/big/blob") == blob
+    a.shutdown()
+    fresh.shutdown()
+
+
+def test_tcp_concurrent_shared_connection(tcp_cluster):
+    c = tcp_cluster
+    a = BAgent(c)
+    lib = BLib(a)
+    lib.makedirs("/cc")
+    lib.write_file("/cc/f", b"shared")
+    a.drain()
+    errs = []
+
+    def worker():
+        try:
+            for _ in range(20):
+                assert lib.read_file("/cc/f") == b"shared"
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker) for _ in range(6)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs, errs
+    a.shutdown()

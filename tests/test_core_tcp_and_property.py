@@ -12,7 +12,9 @@ import os
 import threading
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (BAgent, BLib, BuffetCluster, Credentials, Inode,
                         O_RDONLY, PermRecord, access_ok, R_OK, W_OK, X_OK)

@@ -1,7 +1,9 @@
 """Additional property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data.sampler import ShardedSampler
 from repro.data.tokens import decode_sample, encode_sample, pack_batch
