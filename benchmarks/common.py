@@ -113,6 +113,9 @@ def make_client(kind: str, cluster: BuffetCluster):
     if kind == "buffetfs":
         agent = BAgent(cluster)
         return agent, agent
+    if kind == "buffetfs-wb":
+        agent = BAgent(cluster, write_behind=True)
+        return agent, agent
     if kind == "lustre-normal":
         c = LustreNormalClient(cluster)
         return c, c

@@ -14,7 +14,16 @@ One BAgent per client process.  It maintains:
   permission changes (§3.4), giving strong consistency;
 * **ESTALE recovery**: if a server restarted, its incarnation version no
   longer matches; the agent re-learns the version via the cluster config and
-  retries (§3.2 version segment).
+  retries (§3.2 version segment);
+* an optional **write-behind pipeline** (``write_behind=True``): write()
+  appends into a per-handle dirty buffer and returns with ZERO critical-path
+  RPCs; per-host flusher threads coalesce adjacent extents, pack multi-file
+  WRITE sub-messages into BATCH envelopes and pipeline them off the critical
+  path, under a bounded dirty-bytes budget that applies backpressure.  Flush
+  errors are latched per handle and re-raised at the next write()/fsync()/
+  close() (CannyFS-style optimistic completion); fsync() is the durability
+  barrier (drain + server-side FSYNC), and reads/unlinks drain the affected
+  file first so ordering and read-your-writes are preserved.
 """
 from __future__ import annotations
 
@@ -38,6 +47,13 @@ from .wire import (Message, MsgType, RpcStats, error as wire_error, ok,
 _agent_counter = itertools.count()
 
 DEFAULT_BATCH = 256  # sub-messages per BATCH frame on the bulk paths
+
+# write-behind defaults: total unflushed bytes an agent may buffer before
+# write() blocks (backpressure), and the byte size at which the flusher
+# starts a new BATCH envelope so one giant flush doesn't head-of-line-block
+# a host's pipeline
+DEFAULT_DIRTY_BUDGET = 8 * 1024 * 1024
+MAX_FLUSH_ENVELOPE_BYTES = 4 * 1024 * 1024
 
 
 def _chunks(items: List, n: int) -> List[List]:
@@ -75,7 +91,58 @@ class TreeNode:
         return "/" + "/".join(reversed(parts))
 
 
-@dataclass
+class _Extent:
+    """One contiguous run of buffered write-behind data."""
+
+    __slots__ = ("offset", "data")
+
+    def __init__(self, offset: int, data: bytearray) -> None:
+        self.offset = offset
+        self.data = data
+
+    @property
+    def end(self) -> int:
+        return self.offset + len(self.data)
+
+
+def _coalesce(extents: List[_Extent]) -> List[_Extent]:
+    """Merge adjacent/overlapping extents (later data wins on overlap)."""
+    if len(extents) <= 1:
+        return extents
+    out: List[_Extent] = []
+    for e in sorted(extents, key=lambda x: x.offset):
+        if out and e.offset <= out[-1].end:
+            last = out[-1]
+            # splice so later data wins but any tail beyond the new extent
+            # survives (bytearray slice assignment grows/replaces as needed)
+            last.data[e.offset - last.offset : e.end - last.offset] = e.data
+        else:
+            out.append(e)
+    return out
+
+
+class _FlushJob:
+    """One handle's unit of work in a write-behind flush cycle."""
+
+    __slots__ = ("fh", "extents", "trunc", "io_h", "nbytes", "error",
+                 "first_sub_failed")
+
+    def __init__(self, fh: "FileHandle", extents: List[_Extent], trunc: bool,
+                 io_h: Dict) -> None:
+        self.fh = fh
+        self.extents = extents
+        self.trunc = trunc
+        self.io_h = io_h
+        self.nbytes = sum(len(e.data) for e in extents)
+        self.error: Optional[FSError] = None
+        self.first_sub_failed = False  # the sub carrying trunc/open record
+
+    @property
+    def trunc_only(self) -> bool:
+        return self.trunc and not self.extents
+
+
+@dataclass(eq=False)  # identity semantics: handles live in flush-queue sets
 class FileHandle:
     fd: int
     ino: int
@@ -84,6 +151,11 @@ class FileHandle:
     offset: int = 0
     incomplete_open: bool = True   # deferred open step-2 not yet done
     pending_trunc: bool = False
+    # --- write-behind state (all guarded by the agent's _wb_cond) ---
+    dirty: List[_Extent] = field(default_factory=list)
+    wb_inflight: bool = False      # a flusher is carrying this handle's data
+    wb_closing: bool = False       # closed with unflushed state: flush, then CLOSE
+    wb_error: Optional[FSError] = None  # latched flush error (CannyFS-style)
 
 
 class BAgent:
@@ -91,7 +163,9 @@ class BAgent:
 
     def __init__(self, cluster: BuffetCluster, *, cred: Credentials = Credentials(),
                  pid: int = 1, client_id: Optional[str] = None,
-                 hedge_delay_s: Optional[float] = None) -> None:
+                 hedge_delay_s: Optional[float] = None,
+                 write_behind: bool = False,
+                 dirty_budget: int = DEFAULT_DIRTY_BUDGET) -> None:
         self.cluster = cluster
         self.transport: Transport = cluster.transport
         self.config: ClusterConfig = cluster.config
@@ -128,6 +202,24 @@ class BAgent:
         self._close_q: "queue.Queue[Optional[Message]]" = queue.Queue()
         self._closer = threading.Thread(target=self._close_worker, daemon=True)
         self._closer.start()
+
+        # write-behind pipeline state.  _wb_cond guards every field below
+        # plus the per-handle dirty/wb_* fields; flusher threads (one per
+        # host, lazily started) wait on it and every state transition
+        # notifies it (backpressure waiters, drains, fsync barriers).
+        self.write_behind = write_behind
+        self.dirty_budget = dirty_budget
+        self._wb_cond = threading.Condition()
+        self._wb_dirty_bytes = 0
+        self._wb_inflight = 0                       # handles being flushed
+        self._wb_pending: Dict[int, Dict[int, FileHandle]] = {}  # host->fd->fh
+        self._wb_by_ino: Dict[Tuple[int, int], set] = {}  # unflushed handles
+        self._wb_flushers: Dict[int, threading.Thread] = {}
+        self._wb_stop = False
+        # asynchronous failures nobody could be told about synchronously:
+        # failed async CLOSE RPCs + flush errors on already-closed handles.
+        # drain() returns it so benchmarks/tests can assert clean shutdown.
+        self.async_errors = 0
 
         # invalidation callback endpoint (server -> client RPCs, §3.4)
         from .transport import TCPTransport
@@ -180,6 +272,33 @@ class BAgent:
         # errors — one copy of the recovery protocol, not two
         return unpack_batch(self._rpc(host_id, pack_batch(msgs),
                                       critical=critical))
+
+    def _rpc_many(self, host_id: int, msgs: List[Message], *,
+                  critical: bool = True) -> List[Message]:
+        """Pipeline N independent frames to one host via the transport's
+        request_many (all outstanding at once, ~1 RTT + N service times),
+        with the usual one-shot ESTALE/version recovery applied per frame.
+        Responses are returned as-is — ERROR frames included — because the
+        write-behind flusher must map failures back to individual handles
+        rather than abort the whole flush cycle."""
+        addr = self.config.addr(host_id)
+        for m in msgs:
+            m.header["ver"] = self.config.version(host_id)
+        resps = self.transport.request_many(addr, msgs, critical=critical,
+                                            stats=self.stats)
+        stale = [i for i, r in enumerate(resps)
+                 if r.type is MsgType.ERROR
+                 and r.header.get("errno") == errno.ESTALE]
+        if stale:
+            self.cluster.refresh_host(host_id)
+            retry = [msgs[i] for i in stale]
+            for m in retry:
+                m.header["ver"] = self.config.version(host_id)
+            redo = self.transport.request_many(addr, retry, critical=critical,
+                                               stats=self.stats)
+            for i, r in zip(stale, redo):
+                resps[i] = r
+        return resps
 
     # ------------------------------------------------------------------
     # invalidation callback (§3.4): mark-before-ack => strong consistency
@@ -384,6 +503,7 @@ class BAgent:
 
     def read(self, fd: int, n: int = -1) -> bytes:
         fh = self._fh(fd)
+        self._wb_drain_key(_ino_key(fh.ino))  # read-your-writes barrier
         self._flush_trunc(fh)
         ino = Inode.unpack(fh.ino)
         length = n if n >= 0 else (1 << 31)
@@ -395,6 +515,7 @@ class BAgent:
 
     def pread(self, fd: int, n: int, offset: int) -> bytes:
         fh = self._fh(fd)
+        self._wb_drain_key(_ino_key(fh.ino))  # read-your-writes barrier
         self._flush_trunc(fh)
         ino = Inode.unpack(fh.ino)
         h = {"file_id": ino.file_id, "offset": offset, "length": n,
@@ -404,21 +525,48 @@ class BAgent:
 
     def write(self, fd: int, data: bytes) -> int:
         fh = self._fh(fd)
+        if self.write_behind:
+            return self._wb_write(fh, data)
         ino = Inode.unpack(fh.ino)
         h = {"file_id": ino.file_id, "offset": fh.offset, **self._io_header(fh)}
         if fh.pending_trunc:
             h["truncate"] = True
-            fh.pending_trunc = False
         resp = self._rpc(ino.host_id, Message(MsgType.WRITE, h, data))
+        # cleared only on success: a failed WRITE must not silently drop the
+        # deferred O_TRUNC (the retry or the eventual close still owes it)
+        fh.pending_trunc = False
         fh.offset += resp.header["written"]
         return resp.header["written"]
 
+    def fsync(self, fd: int) -> None:
+        """Durability barrier: drain this file's buffered writes, re-raise
+        any latched flush error (CannyFS-style sync-point reporting), then
+        have the server flush object data + metadata to disk (FSYNC verb).
+        On a synchronous agent only the server-side FSYNC remains."""
+        fh = self._fh(fd)
+        self._wb_drain_key(_ino_key(fh.ino))
+        e = self._take_latched(fh)
+        if e is not None:
+            raise e
+        self._flush_trunc(fh)
+        ino = Inode.unpack(fh.ino)
+        self._rpc(ino.host_id, Message(MsgType.FSYNC, {
+            "file_id": ino.file_id, **self._io_header(fh)}))
+
     def close(self, fd: int) -> None:
-        """Returns immediately; the CLOSE RPC is issued asynchronously (§3.3)."""
+        """Returns immediately; the CLOSE RPC is issued asynchronously (§3.3).
+        Under write-behind the handle's buffered extents are handed to the
+        flusher and the (still-async) CLOSE is enqueued only after they
+        land — close() never blocks on the flush, but a flush error already
+        latched on the handle is re-raised here, the caller's last sync
+        point."""
         with self._fd_lock:
             fh = self._fds.pop(fd, None)
         if fh is None:
             raise err(errno.EBADF, str(fd))
+        if self.write_behind:
+            self._wb_close(fh)
+            return
         # open(O_TRUNC) with no intervening write(): the deferred truncate
         # never rode on a WRITE — flush it now, synchronously.  A file
         # unlinked in the meantime has nothing left to truncate; close()
@@ -426,10 +574,13 @@ class BAgent:
         self._flush_trunc(fh, ignore_enoent=True)
         if fh.incomplete_open:
             return  # never touched the server: nothing to wrap up
+        self._enqueue_close(fh)
+
+    def _enqueue_close(self, fh: FileHandle) -> None:
         ino = Inode.unpack(fh.ino)
         self._close_q.put(Message(MsgType.CLOSE, {
             "host": ino.host_id, "file_id": ino.file_id,
-            "client_id": self.client_id, "pid": self.pid, "fd": fd}))
+            "client_id": self.client_id, "pid": self.pid, "fd": fh.fd}))
 
     def _close_worker(self) -> None:
         while True:
@@ -441,17 +592,267 @@ class BAgent:
             try:
                 self._rpc(host, msg, critical=False)
             except Exception:
-                pass  # best-effort wrap-up; server GC would reap on lease expiry
+                # best-effort wrap-up (server GC would reap on lease expiry)
+                # but not silent: the count surfaces through drain()
+                with self._wb_cond:
+                    self.async_errors += 1
             finally:
                 self._close_q.task_done()
 
-    def drain(self) -> None:
-        """Block until every queued async close RPC has completed."""
+    def drain(self) -> int:
+        """Block until every buffered write-behind extent has been flushed
+        and every queued async CLOSE RPC has completed.  Returns the number
+        of asynchronous failures recorded so far (failed async closes +
+        flush errors on already-closed handles) so callers can assert a
+        clean shutdown."""
+        if self.write_behind:
+            with self._wb_cond:
+                while self._wb_by_ino or self._wb_inflight:
+                    self._wb_cond.wait()
         self._close_q.join()
+        with self._wb_cond:
+            return self.async_errors
+
+    # ------------------------------------------------------------------
+    # write-behind pipeline: dirty buffers, per-host flushers, barriers
+    # ------------------------------------------------------------------
+    def _wb_write(self, fh: FileHandle, data: bytes) -> int:
+        with self._wb_cond:
+            e, fh.wb_error = fh.wb_error, None
+            if e is not None:
+                raise e  # latched flush failure: this is the next sync point
+            if not data:
+                return 0
+            if fh.dirty and fh.dirty[-1].end == fh.offset:
+                fh.dirty[-1].data += data      # coalesce sequential appends
+            else:
+                fh.dirty.append(_Extent(fh.offset, bytearray(data)))
+            fh.offset += len(data)
+            self._wb_dirty_bytes += len(data)
+            self._wb_register(fh)
+            # backpressure: the dirty buffer is bounded; once the budget is
+            # exceeded the writer blocks until the flushers drain below it
+            while self._wb_dirty_bytes > self.dirty_budget and not self._wb_stop:
+                self._wb_cond.wait()
+        return len(data)
+
+    def _wb_close(self, fh: FileHandle) -> None:
+        with self._wb_cond:
+            e, fh.wb_error = fh.wb_error, None
+            if e is not None:
+                # broken handle: drop its buffered data and report now
+                self._wb_dirty_bytes -= sum(len(x.data) for x in fh.dirty)
+                fh.dirty = []
+                if fh.wb_inflight:
+                    # a flush is still carrying this (now dead) handle: mark
+                    # it closing so a second failure lands in async_errors
+                    # instead of being latched where nobody can see it
+                    fh.wb_closing = True
+                else:
+                    self._wb_unregister(fh)
+                self._wb_cond.notify_all()
+                raise e
+            if fh.dirty or fh.wb_inflight or fh.pending_trunc:
+                fh.wb_closing = True
+                if fh.dirty or fh.pending_trunc:
+                    # trunc-only handles need a flush job of their own; the
+                    # flusher re-reads pending_trunc at snapshot time, so a
+                    # registration made stale by an in-flight flush is a no-op
+                    self._wb_register(fh)
+                return
+        if not fh.incomplete_open:
+            self._enqueue_close(fh)
+
+    def _wb_register(self, fh: FileHandle) -> None:
+        """Queue a handle for its host's flusher.  Caller holds _wb_cond."""
+        host = Inode.unpack(fh.ino).host_id
+        self._wb_pending.setdefault(host, {})[fh.fd] = fh
+        self._wb_by_ino.setdefault(_ino_key(fh.ino), set()).add(fh)
+        if host not in self._wb_flushers:
+            t = threading.Thread(target=self._flusher_loop, args=(host,),
+                                 daemon=True)
+            self._wb_flushers[host] = t
+            t.start()
+        self._wb_cond.notify_all()
+
+    def _wb_unregister(self, fh: FileHandle) -> None:
+        """Drop a clean handle from the flush queues.  Caller holds _wb_cond."""
+        pend = self._wb_pending.get(Inode.unpack(fh.ino).host_id)
+        if pend is not None:
+            pend.pop(fh.fd, None)
+        key = _ino_key(fh.ino)
+        s = self._wb_by_ino.get(key)
+        if s is not None:
+            s.discard(fh)
+            if not s:
+                del self._wb_by_ino[key]
+
+    def _wb_drain_key(self, key: Tuple[int, int]) -> None:
+        """Write barrier for one file: block until no handle holds buffered
+        or in-flight data for it.  This is what gives read-your-writes and
+        orders flushes before unlink/stat on the same object."""
+        if not self.write_behind:
+            return
+        with self._wb_cond:
+            while self._wb_by_ino.get(key):
+                self._wb_cond.wait()
+
+    def _take_latched(self, fh: FileHandle) -> Optional[FSError]:
+        with self._wb_cond:
+            e, fh.wb_error = fh.wb_error, None
+        return e
+
+    def _flusher_loop(self, host: int) -> None:
+        """One flusher per host: snapshot every pending handle's extents
+        (coalesced), flush them in per-host BATCH envelopes, repeat.  Cycles
+        are sequential per host, which is what keeps one file's WRITEs in
+        order even though the envelopes themselves are pipelined."""
+        while True:
+            with self._wb_cond:
+                while not self._wb_pending.get(host) and not self._wb_stop:
+                    self._wb_cond.wait()
+                pend = self._wb_pending.get(host)
+                if not pend:
+                    return  # stopping, nothing left for this host
+                jobs: List[_FlushJob] = []
+                for fd in list(pend):
+                    fh = pend.pop(fd)
+                    extents, fh.dirty = _coalesce(fh.dirty), []
+                    fh.wb_inflight = True
+                    self._wb_inflight += 1
+                    jobs.append(_FlushJob(fh, extents, fh.pending_trunc,
+                                          self._io_header(fh)))
+            self._flush_jobs(host, jobs)
+
+    def _flush_jobs(self, host: int, jobs: List[_FlushJob]) -> None:
+        """Build WRITE/TRUNCATE sub-messages for each job, pack them into
+        BATCH envelopes (never splitting one handle's run across envelopes —
+        pipelined frames may be serviced out of order, an envelope executes
+        in order), send, and map failures back to individual handles."""
+        try:
+            per_job: List[List[Message]] = []
+            for j in jobs:
+                ino = Inode.unpack(j.fh.ino)
+                subs: List[Message] = []
+                if j.extents:
+                    for i, e in enumerate(j.extents):
+                        h: Dict = {"file_id": ino.file_id, "offset": e.offset}
+                        if i == 0:
+                            h.update(j.io_h)
+                            if j.trunc:
+                                h["truncate"] = True
+                        subs.append(Message(MsgType.WRITE, h, bytes(e.data)))
+                elif j.trunc:
+                    subs.append(Message(MsgType.TRUNCATE, {
+                        "file_id": ino.file_id, "size": 0, **j.io_h}))
+                per_job.append(subs)
+            chunks: List[List[int]] = [[]]
+            n_sub = size = 0
+            for idx, subs in enumerate(per_job):
+                jb = sum(len(m.payload) for m in subs)
+                if chunks[-1] and (n_sub + len(subs) > DEFAULT_BATCH
+                                   or size + jb > MAX_FLUSH_ENVELOPE_BYTES):
+                    chunks.append([])
+                    n_sub = size = 0
+                chunks[-1].append(idx)
+                n_sub += len(subs)
+                size += jb
+            sends = [(c, [m for idx in c for m in per_job[idx]])
+                     for c in chunks]
+            sends = [(c, flat) for c, flat in sends if flat]
+            if len(sends) == 1:
+                c, flat = sends[0]
+                try:
+                    resps = self._rpc_batch(host, flat, critical=False)
+                except FSError as e:
+                    self._fail_chunk(jobs, c, e)
+                else:
+                    self._apply_flush_resps(jobs, c, per_job, resps)
+            elif sends:
+                env_resps = self._rpc_many(
+                    host, [pack_batch(flat) for _, flat in sends],
+                    critical=False)
+                for (c, _), er in zip(sends, env_resps):
+                    if er.type is MsgType.ERROR:
+                        self._fail_chunk(jobs, c, err(
+                            er.header.get("errno", errno.EIO),
+                            er.header.get("msg", "")))
+                    else:
+                        self._apply_flush_resps(jobs, c, per_job,
+                                                unpack_batch(er))
+        except Exception as e:  # refresh_host, malformed response, ...
+            fb = e if isinstance(e, FSError) else err(errno.EIO,
+                                                      f"flush failed: {e}")
+            for j in jobs:
+                if j.error is None:
+                    j.error, j.first_sub_failed = fb, True
+        finally:
+            self._complete_jobs(jobs)
+
+    @staticmethod
+    def _fail_chunk(jobs: List[_FlushJob], idxs: List[int], e: FSError) -> None:
+        for idx in idxs:
+            jobs[idx].error = e
+            jobs[idx].first_sub_failed = True
+
+    @staticmethod
+    def _apply_flush_resps(jobs: List[_FlushJob], idxs: List[int],
+                           per_job: List[List[Message]],
+                           resps: List[Message]) -> None:
+        pos = 0
+        for idx in idxs:
+            n = len(per_job[idx])
+            j = jobs[idx]
+            for k in range(n):
+                r = resps[pos + k]
+                if r.type is MsgType.ERROR:
+                    j.error = err(r.header.get("errno", errno.EIO),
+                                  r.header.get("msg", j.fh.path))
+                    j.first_sub_failed = (k == 0)
+                    break
+            pos += n
+
+    def _complete_jobs(self, jobs: List[_FlushJob]) -> None:
+        """Settle a flush cycle: release dirty-byte budget, latch errors on
+        live handles (or count them for closed ones), and enqueue the
+        deferred async CLOSE for handles that finished flushing."""
+        with self._wb_cond:
+            for j in jobs:
+                fh = j.fh
+                fh.wb_inflight = False
+                self._wb_inflight -= 1
+                self._wb_dirty_bytes -= j.nbytes
+                e = j.error
+                if e is not None and j.trunc_only and e.errno == errno.ENOENT:
+                    # closing-handle deferred O_TRUNC after the file was
+                    # unlinked: same ignore-ENOENT semantics as the
+                    # synchronous close path
+                    e = None
+                if e is None:
+                    if j.trunc:
+                        fh.pending_trunc = False
+                else:
+                    if j.first_sub_failed and "incomplete_open" in j.io_h:
+                        # the deferred open record never landed: restore the
+                        # flag so a later flush re-sends it and a CLOSE for
+                        # a never-opened handle is skipped
+                        fh.incomplete_open = True
+                    if fh.wb_closing:
+                        self.async_errors += 1  # nobody left to re-raise to
+                    else:
+                        fh.wb_error = e
+                if not fh.dirty:  # no new writes arrived during the flush
+                    self._wb_unregister(fh)
+                    if fh.wb_closing:
+                        fh.wb_closing = False
+                        if not fh.incomplete_open:
+                            self._enqueue_close(fh)
+            self._wb_cond.notify_all()
 
     # --- metadata ops ----------------------------------------------------
     def stat(self, path: str) -> Dict:
         node, _ = self._walk(path)
+        self._wb_drain_key(_ino_key(node.ino))  # size must reflect our writes
         ino = Inode.unpack(node.ino)
         resp = self._rpc(ino.host_id, Message(MsgType.STAT, {"file_id": ino.file_id}))
         return resp.header
@@ -505,6 +906,11 @@ class BAgent:
         parent, name = self._walk(path, want_parent=True)
         if not access_ok(parent.perm, self.cred, W_OK):
             raise err(errno.EACCES, parent.path())
+        target = (parent.children or {}).get(name)
+        if target is not None:
+            # order buffered writes BEFORE the unlink: a flush racing the
+            # UNLINK would either resurrect the object or fail with ENOENT
+            self._wb_drain_key(_ino_key(target.ino))
         pino = Inode.unpack(parent.ino)
         self._rpc(pino.host_id, Message(MsgType.UNLINK, {
             "parent": pino.file_id, "name": name, "client_id": self.client_id}))
@@ -725,6 +1131,7 @@ class BAgent:
             if fd in dup_fds:
                 continue
             fh = self._fh(fd)
+            self._wb_drain_key(_ino_key(fh.ino))
             self._flush_trunc(fh)
             fhs[i] = fh
             ino = Inode.unpack(fh.ino)
@@ -778,6 +1185,7 @@ class BAgent:
         dup_final: Dict[int, int] = {}  # fd -> offset after its chain
         for dfd in dup_fds:
             fh = self._fh(dfd)
+            self._wb_drain_key(_ino_key(fh.ino))
             self._flush_trunc(fh)
             off = fh.offset
             for i, fd in enumerate(fds):
@@ -798,5 +1206,8 @@ class BAgent:
 
     def shutdown(self) -> None:
         self.drain()
+        with self._wb_cond:
+            self._wb_stop = True
+            self._wb_cond.notify_all()
         self._close_q.put(None)
         self.transport.shutdown(self.cb_addr)

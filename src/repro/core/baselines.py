@@ -225,6 +225,17 @@ class LustreNormalClient:
         fh.inline = None
         return resp.header["written"]
 
+    def fsync(self, fd: int) -> None:
+        """Synchronous durability barrier.  The Lustre baselines have no
+        client-side write buffering — every write() already blocked on its
+        RPC — so fsync() is just the server-side FSYNC, kept synchronous
+        for contrast with BuffetFS's write-behind pipeline."""
+        fh = self._fds[fd]
+        self._flush_trunc(fh)
+        ino = Inode.unpack(fh.ino)
+        self._rpc(ino.host_id, Message(MsgType.FSYNC,
+                                       {"file_id": ino.file_id}))
+
     def close(self, fd: int) -> None:
         with self._lock:
             fh = self._fds.pop(fd, None)

@@ -34,6 +34,12 @@ class BuffetFile:
     def write(self, data: bytes) -> int:
         return self._lib.agent.write(self.fd, data)
 
+    def fsync(self) -> None:
+        """Durability barrier: block until every buffered write of this file
+        has been flushed AND made stable server-side (FSYNC verb).  On a
+        write-behind agent this is also where latched flush errors surface."""
+        self._lib.agent.fsync(self.fd)
+
     def close(self) -> None:
         if not self._closed:
             self._lib.agent.close(self.fd)
@@ -90,6 +96,23 @@ class BLib:
     def write_file(self, path: str, data: bytes, perm: int = 0o644) -> int:
         with self.open(path, "wb", perm) as f:
             return f.write(data)
+
+    def write_files(self, paths: List[str], blobs: List[bytes],
+                    perm: int = 0o644) -> int:
+        """Bulk whole-file write: batched creates via open_many (per-host
+        CREATE BATCHes), then per-file writes — which a write-behind agent
+        buffers and flushes off the critical path in coalesced per-host
+        batches.  Returns the total bytes written."""
+        fds = self.agent.open_many(list(paths), O_WRONLY | O_CREAT | O_TRUNC,
+                                   perm)
+        total = 0
+        try:
+            for fd, blob in zip(fds, blobs):
+                total += self.agent.write(fd, blob)
+        finally:
+            for fd in fds:
+                self.agent.close(fd)
+        return total
 
     # --- namespace ---------------------------------------------------------
     def mkdir(self, path: str, mode: int = 0o755) -> None:

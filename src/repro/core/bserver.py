@@ -653,6 +653,30 @@ class BServer:
                 m.mtime = time.time()
         return ok()
 
+    @SERVER_OPS.register(MsgType.FSYNC, barrier=True)
+    def _op_fsync(self, h: Dict, _p: bytes) -> Message:
+        """Durability barrier for one file: fsync the backing object and
+        persist the metadata blob, regardless of the server's fsync_policy.
+        Every WRITE/TRUNCATE applied before this request was dispatched is
+        therefore stable before the client's fsync() returns — the ordering
+        contract the client-side write-behind pipeline builds on."""
+        fid = h["file_id"]
+        with self._lock:
+            if fid not in self._meta:
+                return error(errno.ENOENT, "no such object")
+        self._record_open(h)
+        with self._file_lock(fid):
+            try:
+                with open(self._obj_path(fid), "rb") as f:
+                    os.fsync(f.fileno())
+            except FileNotFoundError:
+                pass  # zero-write file: nothing but metadata to make durable
+        with self._lock:
+            if fid not in self._meta:
+                return error(errno.ENOENT, "unlinked during fsync")
+            self._persist_now()
+        return ok()
+
     @SERVER_OPS.register(MsgType.CLOSE)
     def _op_close(self, h: Dict, _p: bytes) -> Message:
         """Wrap-up (async on the client side): drop from the opened-file list."""

@@ -16,7 +16,9 @@ protocol in the tree:
 
 An `Operation` entry also carries a `mutating` flag so generic machinery
 (stats, future journaling/replication) can classify verbs without parsing
-handler bodies.
+handler bodies, and a `barrier` flag marking durability barriers (FSYNC):
+a replication/journaling layer must not acknowledge a barrier verb until
+every previously-applied mutation for the same object is stable.
 """
 from __future__ import annotations
 
@@ -43,6 +45,7 @@ class Operation:
     msg_type: MsgType
     handler: Handler
     mutating: bool = False
+    barrier: bool = False  # durability barrier: orders behind prior mutations
 
 
 class OperationRegistry:
@@ -57,12 +60,12 @@ class OperationRegistry:
         self.name = name
         self._ops: Dict[MsgType, Operation] = {}
 
-    def register(self, msg_type: MsgType, *, mutating: bool = False
-                 ) -> Callable[[Handler], Handler]:
+    def register(self, msg_type: MsgType, *, mutating: bool = False,
+                 barrier: bool = False) -> Callable[[Handler], Handler]:
         def deco(fn: Handler) -> Handler:
             if msg_type in self._ops:
                 raise ValueError(f"duplicate handler for {msg_type.name}")
-            self._ops[msg_type] = Operation(msg_type, fn, mutating)
+            self._ops[msg_type] = Operation(msg_type, fn, mutating, barrier)
             return fn
         return deco
 

@@ -136,6 +136,33 @@ class InProcTransport(Transport):
                          subops=n_sub)
         return resp
 
+    def request_many(self, addr: Addr, msgs: List[Message], *,
+                     critical: bool = True, stats: Optional[RpcStats] = None
+                     ) -> List[Message]:
+        """Pipelined fan-out, mirroring the TCP transport's request-id
+        pipelining: all frames are outstanding at once, so their network
+        RTT sleeps overlap while the per-server service lock still
+        serializes the service time — N pipelined requests cost ~1 RTT +
+        N service times, exactly the asymmetry a real network shows."""
+        if len(msgs) <= 1:
+            return [self.request(addr, m, critical=critical, stats=stats)
+                    for m in msgs]
+        results: List[Optional[Message]] = [None] * len(msgs)
+
+        def one(i: int, m: Message) -> None:
+            results[i] = self.request(addr, m, critical=critical, stats=stats)
+
+        # bounded in-flight window, like MAX_INFLIGHT_PER_CONN on TCP
+        for base in range(0, len(msgs), MAX_INFLIGHT_PER_CONN):
+            wave = [threading.Thread(target=one, args=(i, m))
+                    for i, m in enumerate(msgs[base:base + MAX_INFLIGHT_PER_CONN],
+                                          start=base)]
+            for t in wave:
+                t.start()
+            for t in wave:
+                t.join()
+        return results  # type: ignore[return-value]
+
 
 # ---------------------------------------------------------------------------
 # TCP transport

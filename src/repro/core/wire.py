@@ -47,6 +47,7 @@ class MsgType(IntEnum):
     REVALIDATE = 17     # client refreshes an invalidated tree node
     MKNOD_OBJ = 18      # allocate file/dir object on a data host (cross-host)
     LINK_DENTRY = 19    # insert dentry(+10-byte perm) into parent's namespace host
+    FSYNC = 21          # durability barrier: flush object data + metadata to disk
     # --- server -> client (callback channel) ---
     INVALIDATE = 32     # server asks client to invalidate cached tree nodes
     # --- generic ---
@@ -88,7 +89,12 @@ class Message:
 
     @property
     def nbytes(self) -> int:
-        return _HDR.size + len(json.dumps(self.header)) + len(self.payload)
+        # sized exactly as encode() frames it (compact JSON separators —
+        # the default ones would overcount every RpcStats byte figure) but
+        # without copying the payload: this runs twice per RPC on the
+        # transport hot path, and flush envelopes carry multi-MiB payloads
+        hj = json.dumps(self.header, separators=(",", ":")).encode()
+        return _HDR.size + len(hj) + len(self.payload)
 
 
 def ok(header: Optional[Dict[str, Any]] = None, payload: bytes = b"") -> Message:

@@ -1,0 +1,542 @@
+"""Write-behind pipeline tests: buffered writes with zero critical-path
+RPCs, coalescing flushes, read-your-writes, FSYNC durability barriers,
+CannyFS-style latched-error reporting at sync points, flush vs
+unlink/rename/O_TRUNC ordering, backpressure, and the async error counter.
+"""
+import errno
+import threading
+import time
+
+import pytest
+
+from repro.core import (BAgent, BLib, BuffetCluster, Inode, Message, MsgType,
+                        O_CREAT, O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY,
+                        SERVER_OPS, TCPTransport)
+from repro.core.perms import FSError
+from repro.core.wire import error as wire_error, ok
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4)
+    yield c
+    c.shutdown()
+
+
+def _wb_agent(cluster, **kw) -> BAgent:
+    return BAgent(cluster, write_behind=True, **kw)
+
+
+def _file_host(agent: BAgent, path: str) -> int:
+    return Inode.unpack(agent.stat_cached(path)["ino"]).host_id
+
+
+class _WriteTrap:
+    """Transport-level interceptor for one host: optionally gates and/or
+    fails WRITE-carrying frames (bare WRITE/TRUNCATE or BATCH envelopes),
+    letting tests order flushes deterministically against other events."""
+
+    def __init__(self, cluster, host: int, *, fail_with: int = 0,
+                 gated: bool = False, fail_times: int = -1) -> None:
+        self.cluster = cluster
+        self.addr = cluster.config.addr(host)
+        self.orig = cluster.servers[host].handle
+        self.fail_with = fail_with
+        self.fail_times = fail_times  # -1 => every time
+        self.gate = threading.Event()
+        if not gated:
+            self.gate.set()
+        cluster.transport.serve(self.addr, self._handle)
+
+    def _handle(self, msg: Message) -> Message:
+        if msg.type in (MsgType.WRITE, MsgType.TRUNCATE, MsgType.BATCH):
+            self.gate.wait(10)
+            if self.fail_with and self.fail_times != 0:
+                if self.fail_times > 0:
+                    self.fail_times -= 1
+                return wire_error(self.fail_with, "injected write failure")
+        return self.orig(msg)
+
+    def restore(self) -> None:
+        self.cluster.transport.serve(self.addr, self.orig)
+        self.gate.set()
+
+
+# ---------------------------------------------------------------------------
+# satellites: wire accounting + sync-path deferred-trunc fix + registry
+# ---------------------------------------------------------------------------
+
+def test_message_nbytes_matches_encoded_frame():
+    m = Message(MsgType.WRITE, {"file_id": 7, "offset": 0, "nested": [1, 2]},
+                b"payload")
+    assert m.nbytes == len(m.encode())
+
+
+def test_fsync_registered_as_barrier():
+    op = SERVER_OPS.operation(MsgType.FSYNC)
+    assert op is not None
+    assert op.barrier and not op.mutating
+
+
+def test_sync_write_failure_preserves_deferred_trunc(cluster):
+    """A failed WRITE must not silently drop the deferred O_TRUNC: the next
+    successful write still owes the truncation."""
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"0123456789")
+    trap = _WriteTrap(cluster, _file_host(a, "/d/f"),
+                      fail_with=errno.EIO, fail_times=1)
+    try:
+        fd = a.open("/d/f", O_WRONLY | O_TRUNC)
+        with pytest.raises(FSError):
+            a.write(fd, b"AB")
+        assert a.write(fd, b"AB") == 2  # retry carries the truncate
+        a.close(fd)
+        a.drain()
+        assert lib.read_file("/d/f") == b"AB"  # pre-fix: b"AB23456789"
+    finally:
+        trap.restore()
+        a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# the pipeline itself: 0 critical RPCs, coalescing, read-your-writes
+# ---------------------------------------------------------------------------
+
+def test_wb_writes_cost_zero_critical_rpcs_warm(cluster):
+    setup = BAgent(cluster)
+    BLib(setup).makedirs("/d")
+    BLib(setup).write_file("/d/f", b"")
+    setup.drain()
+    setup.shutdown()
+
+    a = _wb_agent(cluster)
+    a.warm("/d")
+    fd = a.open("/d/f", O_WRONLY)
+    a.stats.reset()
+    for i in range(8):
+        a.write(fd, bytes([65 + i]) * 16)
+    assert a.stats.snapshot()["critical_path"] == 0
+    a.close(fd)
+    assert a.drain() == 0
+    snap = a.stats.snapshot()
+    assert snap["critical_path"] == 0          # flushes stayed off-path
+    assert snap["async_offpath"] >= 1
+    fresh = BAgent(cluster)
+    assert BLib(fresh).read_file("/d/f") == bytes(
+        b for i in range(8) for b in bytes([65 + i]) * 16)
+    fresh.shutdown()
+    a.shutdown()
+
+
+def test_wb_sequential_writes_coalesce_into_one_extent(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    fd = a.open("/d/f", O_WRONLY | O_CREAT)
+    trap = _WriteTrap(cluster, _file_host(a, "/d/f"), gated=True)
+    try:
+        for _ in range(10):
+            a.write(fd, b"x" * 8)
+        with a._wb_cond:
+            fh = a._fds[fd]
+            # the flusher may have snapshotted an early extent before the
+            # gate blocked it; everything still buffered must have been
+            # coalesced into (at most) one contiguous run
+            assert len(fh.dirty) <= 1
+    finally:
+        trap.gate.set()
+    a.close(fd)
+    assert a.drain() == 0
+    trap.restore()
+    assert lib.read_file("/d/f") == b"x" * 80
+    a.shutdown()
+
+
+def test_coalesce_merges_adjacent_and_overlapping_extents():
+    from repro.core.bagent import _Extent, _coalesce
+    adj = _coalesce([_Extent(0, bytearray(b"aaaa")),
+                     _Extent(4, bytearray(b"bbbb"))])
+    assert len(adj) == 1 and adj[0].data == bytearray(b"aaaabbbb")
+    # contained overlap: later data wins, the old tail survives
+    inner = _coalesce([_Extent(0, bytearray(b"0123456789")),
+                       _Extent(2, bytearray(b"XY"))])
+    assert len(inner) == 1 and inner[0].data == bytearray(b"01XY456789")
+    ext = _coalesce([_Extent(0, bytearray(b"0123")),
+                     _Extent(2, bytearray(b"ABCD"))])
+    assert len(ext) == 1 and ext[0].data == bytearray(b"01ABCD")
+    gap = _coalesce([_Extent(10, bytearray(b"z")),
+                     _Extent(0, bytearray(b"a"))])
+    assert len(gap) == 2 and gap[0].offset == 0  # disjoint: sorted, separate
+
+
+def test_wb_read_your_writes_same_fd_and_fresh_fd(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    fd = a.open("/d/f", O_RDWR | O_CREAT)
+    a.write(fd, b"abc")
+    assert a.pread(fd, 3, 0) == b"abc"     # same fd: drained before the read
+    a.write(fd, b"def")
+    assert a.pread(fd, 6, 0) == b"abcdef"  # interleaved write/read
+    # fresh fd on the same file, handle still open and possibly dirty
+    fd2 = a.open("/d/f", O_RDONLY)
+    assert a.read(fd2) == b"abcdef"
+    a.close(fd2)
+    a.close(fd)
+    # whole-file read through a brand-new fd after close (flush still async)
+    assert lib.read_file("/d/f") == b"abcdef"
+    assert a.drain() == 0
+    a.shutdown()
+
+
+def test_wb_stat_reflects_buffered_writes(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    fd = a.open("/d/f", O_WRONLY | O_CREAT)
+    a.write(fd, b"z" * 100)
+    assert a.stat("/d/f")["size"] == 100   # stat drains the file first
+    a.close(fd)
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# ordering: deferred O_TRUNC, unlink, rename, invalidation
+# ---------------------------------------------------------------------------
+
+def test_wb_trunc_rides_first_flushed_write(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"old much longer content")
+    assert a.drain() == 0
+    fd = a.open("/d/f", O_WRONLY | O_TRUNC)
+    a.write(fd, b"new")
+    a.close(fd)
+    assert a.drain() == 0
+    assert lib.read_file("/d/f") == b"new"
+    a.shutdown()
+
+
+def test_wb_trunc_without_write_flushed_on_close(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"old content")
+    assert a.drain() == 0
+    fd = a.open("/d/f", O_WRONLY | O_TRUNC)
+    a.close(fd)                    # no write in between; flusher owes TRUNCATE
+    assert a.drain() == 0
+    assert lib.read_file("/d/f") == b""
+    a.shutdown()
+
+
+def test_wb_trunc_close_after_unlink_not_an_error(cluster):
+    a, b = _wb_agent(cluster), BAgent(cluster)
+    al, bl_ = BLib(a), BLib(b)
+    al.makedirs("/d")
+    al.write_file("/d/f", b"content")
+    assert a.drain() == 0
+    fd = a.open("/d/f", O_WRONLY | O_TRUNC)  # truncate deferred
+    bl_.unlink("/d/f")                        # another client removes it
+    a.close(fd)                               # must not raise...
+    assert a.drain() == 0                     # ...and must not count an error
+    a.shutdown()
+    b.shutdown()
+
+
+def test_wb_flush_ordered_before_own_unlink(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    fd = a.open("/d/f", O_WRONLY | O_CREAT)
+    a.write(fd, b"doomed but flushed first")
+    a.close(fd)
+    a.unlink("/d/f")               # drains the file's buffers first
+    assert a.drain() == 0          # no ENOENT flush failures
+    assert not lib.exists("/d/f")
+    for srv in cluster.servers.values():
+        import os as _os
+        with srv._lock:
+            objs = set(_os.listdir(srv._objs))
+            known = {f"{fid:016x}" for fid in srv._meta}
+        assert objs <= known, (objs - known)   # nothing resurrected
+    a.shutdown()
+
+
+def test_wb_flush_survives_rename(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    fd = a.open("/d/f", O_WRONLY | O_CREAT)
+    a.write(fd, b"payload")
+    a.close(fd)
+    a.rename("/d/f", "g")          # same file_id: flush lands regardless
+    assert a.drain() == 0
+    assert lib.read_file("/d/g") == b"payload"
+    a.shutdown()
+
+
+def test_wb_flush_unaffected_by_dir_invalidation(cluster):
+    """§3.4 invalidations hit the cached namespace, not the data pipeline:
+    a chmod on the parent while writes are buffered must not disturb the
+    flush, and the revalidated walk still reads the flushed data."""
+    a, b = _wb_agent(cluster), BAgent(cluster)
+    al, bl_ = BLib(a), BLib(b)
+    al.makedirs("/d")
+    fd = a.open("/d/f", O_WRONLY | O_CREAT)
+    a.write(fd, b"across invalidation")
+    bl_.chmod("/d/f", 0o640)       # invalidates a's cached /d mid-buffer
+    a.close(fd)
+    assert a.drain() == 0
+    assert al.read_file("/d/f") == b"across invalidation"
+    a.shutdown()
+    b.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# fsync: durability barrier + latched-error sync point
+# ---------------------------------------------------------------------------
+
+def test_fsync_persists_across_crash_restart(cluster):
+    a = _wb_agent(cluster)   # cluster runs fsync_policy="none"
+    lib = BLib(a)
+    lib.makedirs("/d")
+    fd = a.open("/d/f", O_WRONLY | O_CREAT)
+    a.write(fd, b"survives the crash")
+    a.fsync(fd)              # drain + server-side FSYNC persists meta + data
+    a.close(fd)
+    assert a.drain() == 0
+    host = _file_host(a, "/d/f")
+    cluster.restart_server(host, crash=True)   # volatile state wiped
+    fresh = BAgent(cluster)
+    assert BLib(fresh).read_file("/d/f") == b"survives the crash"
+    fresh.shutdown()
+    a.shutdown()
+
+
+def test_flush_error_reraised_at_fsync_then_cleared(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"")
+    assert a.drain() == 0
+    trap = _WriteTrap(cluster, _file_host(a, "/d/f"),
+                      fail_with=errno.EIO, gated=True)
+    try:
+        fd = a.open("/d/f", O_WRONLY)
+        a.write(fd, b"never lands")
+        trap.gate.set()                      # release the failing flush
+        assert a.drain() == 0                # open handle: latched, not counted
+        with pytest.raises(FSError) as ei:
+            a.fsync(fd)                      # sync point: error re-raised
+        assert ei.value.errno == errno.EIO
+        trap.restore()
+        a.fsync(fd)                          # latched error was cleared
+        a.close(fd)
+        assert a.drain() == 0
+    finally:
+        trap.restore()
+        a.shutdown()
+
+
+def test_flush_error_reraised_at_next_write_and_close(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"")
+    lib.write_file("/d/g", b"")
+    assert a.drain() == 0
+    for path, sync_point in (("/d/f", "write"), ("/d/g", "close")):
+        trap = _WriteTrap(cluster, _file_host(a, path),
+                          fail_with=errno.EIO, gated=True)
+        try:
+            fd = a.open(path, O_WRONLY)
+            a.write(fd, b"x")
+            trap.gate.set()
+            a.drain()
+            trap.restore()
+            with pytest.raises(FSError):
+                if sync_point == "write":
+                    a.write(fd, b"y")
+                else:
+                    a.close(fd)
+            if sync_point == "write":
+                a.close(fd)
+        finally:
+            trap.restore()
+    assert a.drain() == 0
+    a.shutdown()
+
+
+def test_flush_error_after_close_counted_by_drain(cluster):
+    """A flush that fails after close() has nobody to re-raise to: it must
+    land in the per-agent async error counter returned by drain()."""
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"")
+    assert a.drain() == 0
+    trap = _WriteTrap(cluster, _file_host(a, "/d/f"),
+                      fail_with=errno.EIO, gated=True)
+    try:
+        fd = a.open("/d/f", O_WRONLY)
+        a.write(fd, b"lost")
+        a.close(fd)                # hand-off: flush still pending
+        trap.gate.set()            # now the flush fails, handle already gone
+        assert a.drain() == 1
+    finally:
+        trap.restore()
+        a.shutdown()
+
+
+def test_second_flush_failure_after_raising_close_counted(cluster):
+    """close() that re-raises a latched error while another flush cycle is
+    still in flight: the in-flight cycle's failure has nobody to latch onto
+    (the handle is dead) and must land in async_errors, not vanish."""
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"")
+    assert a.drain() == 0
+    host = _file_host(a, "/d/f")
+    addr = cluster.config.addr(host)
+    orig = cluster.servers[host].handle
+    gates = [threading.Event(), threading.Event()]
+    served = []
+
+    def failing(msg):
+        if msg.type in (MsgType.WRITE, MsgType.BATCH):
+            gate = gates[min(len(served), len(gates) - 1)]
+            served.append(msg.type)
+            gate.wait(10)
+            return wire_error(errno.EIO, "injected")
+        return orig(msg)
+
+    cluster.transport.serve(addr, failing)
+    try:
+        fd = a.open("/d/f", O_WRONLY)
+        a.write(fd, b"A" * 64)          # flush cycle 1 blocks on gates[0]
+        while not served:               # cycle 1 definitely in flight
+            time.sleep(0.005)
+        a.write(fd, b"B" * 64)          # buffered for cycle 2
+        gates[0].set()                  # cycle 1 fails -> latched on handle
+        while len(served) < 2:          # cycle 2 takes B, blocks on gates[1]
+            time.sleep(0.005)
+        with pytest.raises(FSError):
+            a.close(fd)                 # re-raises cycle 1's error
+        gates[1].set()                  # cycle 2 fails on the dead handle
+        assert a.drain() == 1           # ...and is counted, not lost
+    finally:
+        for g in gates:
+            g.set()
+        cluster.transport.serve(addr, orig)
+        a.shutdown()
+
+
+def test_failed_async_close_counted_by_drain(cluster):
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"x")
+    a.drain()
+    fd = a.open("/d/f", O_RDONLY)
+    a.read(fd)                     # records the deferred open server-side
+    host = _file_host(a, "/d/f")
+    cluster.kill_server(host)
+    a.close(fd)                    # async CLOSE hits a dead server
+    assert a.drain() == 1
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_blocks_writer_over_tiny_budget(cluster):
+    a = _wb_agent(cluster, dirty_budget=64)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    fd = a.open("/d/f", O_WRONLY | O_CREAT)
+    trap = _WriteTrap(cluster, _file_host(a, "/d/f"), gated=True)
+    try:
+        a.write(fd, b"a" * 64)     # fills the budget exactly: no block
+        done = threading.Event()
+
+        def second_write():
+            a.write(fd, b"b" * 64)  # exceeds the budget: must block
+            done.set()
+
+        t = threading.Thread(target=second_write, daemon=True)
+        t.start()
+        assert not done.wait(0.3), "writer was not backpressured"
+        trap.gate.set()            # flusher drains below the budget
+        assert done.wait(5), "writer never released"
+        t.join(5)
+        a.close(fd)
+        assert a.drain() == 0
+        assert lib.read_file("/d/f") == b"a" * 64 + b"b" * 64
+    finally:
+        trap.restore()
+        a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# opened-file list wrap-up + TCP end-to-end
+# ---------------------------------------------------------------------------
+
+def test_wb_close_wraps_up_opened_list(cluster):
+    a = _wb_agent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    fd = a.open("/d/f", O_WRONLY | O_CREAT)
+    a.write(fd, b"x")              # open record rides the flushed WRITE
+    a.close(fd)
+    assert a.drain() == 0
+    time.sleep(0.05)
+    assert cluster.total_opened() == 0
+    a.shutdown()
+
+
+def test_wb_over_tcp(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=2,
+                      transport=TCPTransport())
+    try:
+        a = _wb_agent(c)
+        lib = BLib(a)
+        lib.makedirs("/tcp")
+        paths = [f"/tcp/f{i:02d}" for i in range(16)]
+        for p in paths:
+            fd = a.open(p, O_WRONLY | O_CREAT)
+            for _ in range(3):
+                a.write(fd, p.encode())
+            a.close(fd)
+        assert a.drain() == 0
+        fresh = BAgent(c)
+        assert BLib(fresh).read_files(paths) == [p.encode() * 3
+                                                 for p in paths]
+        a.shutdown()
+        fresh.shutdown()
+    finally:
+        c.shutdown()
+
+
+def test_inproc_request_many_overlaps_rtt(tmp_path):
+    """The in-proc transport's request_many must pipeline: N requests cost
+    ~1 RTT + N service times, not N RTTs (mirrors TCP rid-pipelining)."""
+    from repro.core.transport import LatencyModel
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=1,
+                      latency=LatencyModel(rtt_us=50_000.0, per_mib_us=0.0,
+                                           service_us=0.0))
+    try:
+        t0 = time.perf_counter()
+        resps = c.transport.request_many(
+            c.config.addr(0), [Message(MsgType.PING) for _ in range(8)])
+        elapsed = time.perf_counter() - t0
+        assert all(r.type is MsgType.OK for r in resps)
+        assert elapsed < 8 * 0.05 * 0.8, \
+            f"request_many did not overlap RTTs: {elapsed:.3f}s"
+    finally:
+        c.shutdown()
