@@ -1,0 +1,115 @@
+"""Benchmark-regression gate: compare a fresh ``paper_bench.json`` against
+the committed RPC-count baseline.
+
+Only DETERMINISTIC metrics are gated — critical-path RPC counts, never
+wall-clock — so a loaded CI runner cannot flake the gate.  A run regresses
+when any gated metric exceeds its committed ceiling, or when a baselined
+metric disappears from the results (a benchmark silently dropped is a
+regression too).  Improvements are reported but never fail.
+
+The committed baseline is generated from (and applies to) ``--quick`` runs,
+which is what the CI bench-smoke job executes:
+
+    PYTHONPATH=src python -m benchmarks.run --quick
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --actual benchmarks/results/paper_bench.json \
+        --baseline benchmarks/results/rpc_baseline.json
+
+Regenerate the baseline after an intentional protocol change with
+``--update`` (then commit the new JSON alongside the change).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+# fewer matched metrics than this means the comparison is vacuous (wrong
+# mode, truncated results file): fail loudly instead of passing silently
+MIN_MATCHED = 10
+
+
+def extract(rows: List[dict]) -> Dict[str, float]:
+    """Flatten benchmark rows into gated metric keys -> RPC-count values."""
+    out: Dict[str, float] = {}
+    for r in rows:
+        bench = r.get("bench")
+        if bench == "fig3_latency":
+            key = f"fig3/{r['system']}/{r['size']}B/crit_per_access"
+            out[key] = r["critical_rpcs_per_access"]
+        elif bench == "fig5_batch":
+            bs = r.get("batch_size")
+            tag = "nobatch" if bs is None else f"bs{bs}"
+            key = f"fig5/{r['system']}/{tag}/n{r['n_files']}/critical_rpcs"
+            out[key] = r["critical_rpcs"]
+        elif bench == "fig6_write":
+            key = f"fig6/{r['system']}/n{r['n_files']}/crit_per_file"
+            out[key] = r["crit_rpcs_per_file"]
+        elif bench == "fig7_readcache":
+            key = f"fig7/{r['system']}/n{r['n_files']}"
+            out[key + "/warm_crit_per_read"] = r["warm_crit_per_read"]
+            out[key + "/cold_crit_per_read"] = r["cold_crit_per_read"]
+        elif bench == "rpc_table":
+            key = f"rpc/{r['system']}/{r['op']}"
+            out[key + "/warm_critical"] = r["warm_critical"]
+            out[key + "/cold_critical"] = r["cold_critical"]
+    return out
+
+
+def compare(actual: Dict[str, float], expected: Dict[str, float]) -> int:
+    failures: List[str] = []
+    matched = 0
+    for key in sorted(expected):
+        ceiling = expected[key]
+        got = actual.get(key)
+        if got is None:
+            failures.append(f"metric vanished from results: {key}")
+            continue
+        matched += 1
+        if got > ceiling + 1e-9:
+            failures.append(f"{key}: {got} > baseline {ceiling}")
+        elif got < ceiling - 1e-9:
+            print(f"improved: {key}: {got} < baseline {ceiling}")
+    for key in sorted(set(actual) - set(expected)):
+        print(f"unbaselined (ignored): {key} = {actual[key]}")
+    if matched < MIN_MATCHED:
+        failures.append(
+            f"only {matched} baselined metrics matched (< {MIN_MATCHED}): "
+            "wrong mode or truncated results?"
+        )
+    for f in failures:
+        print(f"REGRESSION: {f}", file=sys.stderr)
+    if not failures:
+        print(f"bench-regression gate: {matched} metrics within baseline")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--actual", default="benchmarks/results/paper_bench.json")
+    ap.add_argument("--baseline", default="benchmarks/results/rpc_baseline.json")
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the actual results instead",
+    )
+    args = ap.parse_args()
+
+    with open(args.actual) as f:
+        actual = extract(json.load(f))
+    if args.update:
+        blob = {"mode": "quick", "expected": actual}
+        with open(args.baseline, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baseline rewritten: {len(actual)} metrics -> {args.baseline}")
+        return
+    with open(args.baseline) as f:
+        expected = json.load(f)["expected"]
+    sys.exit(compare(actual, expected))
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,6 @@ PROTOCOL — the paper's variable.  Each test group regenerates its file set
 """
 from __future__ import annotations
 
-import os
 import shutil
 import tempfile
 import time
@@ -81,7 +80,6 @@ def mkfiles(cluster: BuffetCluster, n_files: int, size: int,
         oss_hosts = ([0] if system == "lustre-dom" or cluster.n_servers == 1
                      else list(range(1, cluster.n_servers)))
         osc = 0
-        root_fid = Inode.unpack(cluster.root_ino).file_id
         for d in range(n_dirs):
             dname = f"{prefix}/d{d:03d}"
             try:
@@ -115,6 +113,10 @@ def make_client(kind: str, cluster: BuffetCluster):
         return agent, agent
     if kind == "buffetfs-wb":
         agent = BAgent(cluster, write_behind=True)
+        return agent, agent
+    if kind == "buffetfs-cache":
+        # lease-consistent client page cache: warm reads cost zero RPCs
+        agent = BAgent(cluster, read_cache=True)
         return agent, agent
     if kind == "lustre-normal":
         c = LustreNormalClient(cluster)

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from .common import fresh_cluster, make_client, mkfiles, timeit_us
+from .common import fresh_cluster, mkfiles, timeit_us
 from repro.core import BAgent, BLib, Credentials
 from repro.core.perms import O_RDONLY
 

@@ -21,7 +21,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig3_latency, fig4_concurrency, fig5_batch,
-                            fig6_write, invalidation, rpc_table)
+                            fig6_write, fig7_readcache, invalidation,
+                            rpc_table)
 
     print("name,us_per_call,derived")
     rows = []
@@ -59,6 +60,15 @@ def main() -> None:
         print(f"fig6_{r['system']}_n{r['n_files']},{us_per_file},"
               f"total_s={r['seconds']} crit_per_file={r['crit_rpcs_per_file']}",
               flush=True)
+
+    # Figure 7 (extension): lease-consistent read cache, cold vs warm
+    for r in fig7_readcache.run(file_counts=(128,) if args.quick
+                                else fig7_readcache.FILE_COUNTS):
+        rows.append(r)
+        print(f"fig7_{r['system']}_n{r['n_files']},"
+              f"{round(r['warm_seconds'] * 1e6 / max(1, r['n_files'] * r['warm_passes']), 1)},"
+              f"warm_crit_per_read={r['warm_crit_per_read']} "
+              f"cold_crit_per_read={r['cold_crit_per_read']}", flush=True)
 
     # RPC table (the mechanism itself)
     for r in rpc_table.run():
@@ -115,6 +125,21 @@ def main() -> None:
             failures.append(
                 f"fig6 n={n}: write-behind {wb['crit_rpcs_per_file']} vs sync "
                 f"{sy['crit_rpcs_per_file']} critical RPCs/file (<3x reduction)")
+    f7 = [r for r in rows if r.get("bench") == "fig7_readcache"]
+    for n in sorted({r["n_files"] for r in f7}):
+        by = {r["system"]: r for r in f7 if r["n_files"] == n}
+        rc = by.get("buffetfs-cache")
+        if rc and rc["warm_crit_per_read"] > 0.01:
+            failures.append(
+                f"fig7 n={n}: cached warm read {rc['warm_crit_per_read']} "
+                f"critical RPCs/read (expected ~0: cache not serving)")
+        for sysname in ("buffetfs", "lustre-normal", "lustre-dom"):
+            o = by.get(sysname)
+            if o and o["warm_crit_per_read"] < 1:
+                failures.append(
+                    f"fig7 n={n}: {sysname} warm read "
+                    f"{o['warm_crit_per_read']} critical RPCs/read (<1: "
+                    f"the no-cache contrast lost its RPC)")
     if failures:
         for f in failures:
             print(f"VERDICT FAIL: {f}", file=sys.stderr)

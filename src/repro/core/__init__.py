@@ -6,7 +6,8 @@ per-entry permission records), deferring open-state recording onto the first
 data RPC, and executing close() asynchronously — plus the Lustre-Normal and
 Lustre-DoM baseline protocol simulations the paper evaluates against.
 """
-from .bagent import BAgent, TreeNode
+from .bagent import (BAgent, DEFAULT_CACHE_BLOCK, DEFAULT_CACHE_BUDGET,
+                     TreeNode)
 from .baselines import LustreDoMClient, LustreNormalClient
 from .blib import BLib, BuffetFile
 from .bserver import BServer
@@ -20,7 +21,8 @@ from .wire import (Message, MsgType, RpcStats, batch_status, pack_batch,
                    unpack_batch)
 
 __all__ = [
-    "BAgent", "TreeNode", "LustreDoMClient", "LustreNormalClient", "BLib",
+    "BAgent", "DEFAULT_CACHE_BLOCK", "DEFAULT_CACHE_BUDGET", "TreeNode",
+    "LustreDoMClient", "LustreNormalClient", "BLib",
     "BuffetFile", "BServer", "BuffetCluster", "ClusterConfig", "Inode",
     "Credentials", "FSError", "PermRecord", "access_ok",
     "O_CREAT", "O_RDONLY", "O_RDWR", "O_TRUNC", "O_WRONLY",

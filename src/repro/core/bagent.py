@@ -23,7 +23,18 @@ One BAgent per client process.  It maintains:
   errors are latched per handle and re-raised at the next write()/fsync()/
   close() (CannyFS-style optimistic completion); fsync() is the durability
   barrier (drain + server-side FSYNC), and reads/unlinks drain the affected
-  file first so ordering and read-your-writes are preserved.
+  file first so ordering and read-your-writes are preserved;
+* an optional **lease-consistent page cache** (``read_cache=True``): READ
+  responses fill a bounded per-agent LRU block cache and carry a read-lease
+  grant; warm read()/pread() are then served locally with ZERO critical-path
+  RPCs.  The server recalls leases over the callback channel
+  (REVOKE_LEASE) before acking any other client's write/truncate/unlink —
+  the data-plane twin of the §3.4 namespace invalidations — and a
+  revocation-generation check makes a READ response that crossed a revoke
+  on the wire uncacheable, so a stale block can never be served.  Under
+  write-behind, locally-buffered dirty extents SHADOW cached clean blocks
+  (read-your-writes without draining), and completed flushes patch the
+  cache in place.
 """
 from __future__ import annotations
 
@@ -31,7 +42,7 @@ import errno
 import itertools
 import queue
 import threading
-from collections import Counter
+from collections import Counter, OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -54,6 +65,11 @@ DEFAULT_BATCH = 256  # sub-messages per BATCH frame on the bulk paths
 # a host's pipeline
 DEFAULT_DIRTY_BUDGET = 8 * 1024 * 1024
 MAX_FLUSH_ENVELOPE_BYTES = 4 * 1024 * 1024
+
+# read-cache defaults: fixed block granularity and the total byte budget one
+# agent may pin across all files (LRU-evicted beyond it)
+DEFAULT_CACHE_BLOCK = 64 * 1024
+DEFAULT_CACHE_BUDGET = 32 * 1024 * 1024
 
 
 def _chunks(items: List, n: int) -> List[List]:
@@ -121,14 +137,247 @@ def _coalesce(extents: List[_Extent]) -> List[_Extent]:
     return out
 
 
+class _PageCache:
+    """Per-agent block cache with lease-gated consistency (bounded LRU).
+
+    Blocks are fixed-size (the tail block may be short) and keyed by
+    ``((host_id, file_id), block_index)``.  A file's blocks are served or
+    filled only while the agent holds that file's read lease; the
+    revocation generation (bumped by every REVOKE_LEASE callback) makes
+    fills atomic against a revoke crossing the wire: a READ response whose
+    pre-RPC generation snapshot no longer matches is discarded, so a
+    response that raced a revoke can never be cached — the same discipline
+    the namespace cache applies to LOOKUP_DIR vs INVALIDATE (§3.4), moved
+    to the data plane.  All state lives under one leaf lock and no method
+    blocks on I/O, so callback handlers call in freely."""
+
+    def __init__(self, block_size: int, budget: int) -> None:
+        self.block_size = max(1, block_size)
+        self.budget = max(0, budget)
+        self._lock = threading.Lock()
+        # (key, block_index) -> block bytes, LRU order (oldest first)
+        self._blocks: "OrderedDict[Tuple[Tuple[int, int], int], bytes]" = \
+            OrderedDict()
+        self._by_ino: Dict[Tuple[int, int], set] = {}
+        self._sizes: Dict[Tuple[int, int], int] = {}  # known object sizes
+        self._gen: Dict[Tuple[int, int], int] = {}    # revocation generations
+        self._leased: set = set()                     # keys with a live lease
+        # (server incarnation, server wseq) the cached state corresponds
+        # to.  serve() distrusts blocks from another incarnation (a restart
+        # wiped the server's lease table, so no revoke would ever come),
+        # and fill/patch discard responses older than the stamp — two acks
+        # processed out of order can never regress the cache.
+        self._stamp: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.revocations = 0
+
+    def gen(self, key: Tuple[int, int]) -> int:
+        with self._lock:
+            return self._gen.get(key, 0)
+
+    def revoke(self, key: Tuple[int, int]) -> None:
+        """Server recalled the lease: bump the generation (kills in-flight
+        fills), drop the grant and every cached block."""
+        with self._lock:
+            self._gen[key] = self._gen.get(key, 0) + 1
+            self._leased.discard(key)
+            self._drop_locked(key)
+            self.revocations += 1
+
+    def drop(self, key: Tuple[int, int]) -> None:
+        """Locally invalidate one file's blocks (own truncate or a failed
+        flush).  The lease itself stays valid: the next read refills
+        under it."""
+        with self._lock:
+            self._drop_locked(key)
+
+    def forget(self, key: Tuple[int, int]) -> None:
+        """Full cleanup for a file that no longer exists (we unlinked it):
+        blocks, size, lease grant and stamp all go.  The revocation
+        generation stays — it is the monotonic guard an in-flight fill is
+        checked against, and its entry is a single int."""
+        with self._lock:
+            self._drop_locked(key)
+            self._leased.discard(key)
+            self._stamp.pop(key, None)
+
+    def _drop_locked(self, key: Tuple[int, int]) -> None:
+        self._sizes.pop(key, None)
+        for b in self._by_ino.pop(key, ()):
+            blk = self._blocks.pop((key, b), None)
+            if blk is not None:
+                self._bytes -= len(blk)
+
+    def serve(self, key: Tuple[int, int], offset: int, length: int,
+              ver: int) -> Optional[Tuple[bytes, int]]:
+        """Assemble ``[offset, offset+length)`` clipped to EOF from cached
+        blocks.  Returns ``(data, object_size)``, or None on any miss — no
+        live lease, unknown size, a block not (fully) resident, or state
+        stamped by another server incarnation than `ver` (the restarted
+        server forgot our lease, so nothing would ever revoke us: distrust
+        everything and refetch)."""
+        bs = self.block_size
+        with self._lock:
+            st = self._stamp.get(key)
+            if st is not None and st[0] != ver:
+                self._drop_locked(key)
+                self._leased.discard(key)
+                self._stamp.pop(key, None)
+                self.misses += 1
+                return None
+            size = self._sizes.get(key) if key in self._leased else None
+            if size is None:
+                self.misses += 1
+                return None
+            end = min(offset + length, size)
+            if end <= offset:
+                self.hits += 1
+                return b"", size
+            first = offset // bs
+            parts: List[bytes] = []
+            for b in range(first, (end - 1) // bs + 1):
+                blk = self._blocks.get((key, b))
+                if blk is None or len(blk) < min(bs, size - b * bs):
+                    self.misses += 1
+                    return None
+                parts.append(blk)
+                self._blocks.move_to_end((key, b))
+            self.hits += 1
+            data = b"".join(parts)[offset - first * bs : end - first * bs]
+            return data, size
+
+    def fill(self, key: Tuple[int, int], gen: int, offset: int, data: bytes,
+             size: int, ver: int, wseq: int) -> None:
+        """Install a READ response, re-validating the lease generation
+        snapshotted before the RPC was issued.  `ver` is the server
+        incarnation the RPC was validated against, `wseq` the per-file
+        mutation sequence the response carries: a response older than what
+        the cache already holds (our own later write/truncate acked first)
+        is discarded rather than allowed to regress the cache."""
+        bs = self.block_size
+        with self._lock:
+            if self._gen.get(key, 0) != gen:
+                return  # a revoke crossed this response on the wire
+            st = self._stamp.get(key)
+            if st is not None and st[0] == ver and st[1] > wseq:
+                return  # stale response: the cache has newer acked state
+            if st is not None and st[0] != ver:
+                self._drop_locked(key)  # old-incarnation leftovers
+            self._stamp[key] = (ver, wseq if st is None or st[0] != ver
+                                else max(st[1], wseq))
+            self._leased.add(key)
+            self._sizes[key] = size
+            end = offset + len(data)
+            b = -(-offset // bs)  # first block starting inside the span
+            while b * bs < end:
+                bstart = b * bs
+                blk = data[bstart - offset : bstart - offset + bs]
+                # only fully-defined blocks are cacheable: a whole block,
+                # or a tail that runs to EOF
+                if blk and (len(blk) == bs or bstart + len(blk) >= size):
+                    self._insert(key, b, blk)
+                b += 1
+            self._evict()
+
+    def patch(self, key: Tuple[int, int], gen: int,
+              extents: List[Tuple[int, bytes]],
+              new_size: Optional[int], ver: int, wseq: int) -> None:
+        """Overlay locally-written bytes onto existing cached state after
+        the server acked them (sync write / completed flush).  Never
+        creates state from nothing: with no cached size there is no
+        lease-validated context to patch into, and the generation check
+        discards a patch that lost a race with another writer's revoke.
+        The (ver, wseq) stamp orders same-client patches: when two of our
+        own writes are acked out of order, the older one is discarded
+        instead of overwriting the newer (the server serialized them under
+        the file lock; wseq is that serialization made visible)."""
+        bs = self.block_size
+        with self._lock:
+            if self._gen.get(key, 0) != gen or key not in self._leased:
+                return
+            st = self._stamp.get(key)
+            if st is None or st[0] != ver or st[1] > wseq:
+                return
+            self._stamp[key] = (ver, max(st[1], wseq))
+            size = self._sizes.get(key)
+            if size is None:
+                return
+            if new_size is not None and new_size > size:
+                size = new_size
+                self._sizes[key] = size
+            for eoff, edata in extents:
+                eend = eoff + len(edata)
+                if eend <= eoff:
+                    continue
+                for b in range(eoff // bs, (eend - 1) // bs + 1):
+                    bstart = b * bs
+                    lo, hi = max(eoff, bstart), min(eend, bstart + bs)
+                    cur = self._blocks.get((key, b))
+                    if cur is None:
+                        if lo == bstart and (hi - bstart == bs or hi >= size):
+                            # the write alone fully defines this block
+                            self._insert(key, b, edata[lo - eoff : hi - eoff])
+                        continue
+                    nb = bytearray(cur)
+                    if len(nb) < hi - bstart:
+                        # file grew within this block: the gap is
+                        # zero-filled, exactly as the server materializes it
+                        nb.extend(bytes(hi - bstart - len(nb)))
+                    nb[lo - bstart : hi - bstart] = edata[lo - eoff : hi - eoff]
+                    self._insert(key, b, bytes(nb))
+            self._evict()
+
+    def note_mutation(self, key: Tuple[int, int], ver: int, wseq: int) -> None:
+        """Advance the stamp for a mutation we performed whose effect we do
+        NOT patch in (a truncate: we drop the blocks instead).  Without
+        this, a READ response already in flight when the truncate was
+        acked would carry an equal-or-older wseq and re-install the
+        pre-truncate bytes."""
+        with self._lock:
+            st = self._stamp.get(key)
+            if st is None or st[0] != ver or st[1] < wseq:
+                self._stamp[key] = (ver, wseq)
+
+    def _insert(self, key: Tuple[int, int], b: int, blk: bytes) -> None:
+        old = self._blocks.pop((key, b), None)
+        if old is not None:
+            self._bytes -= len(old)
+        self._blocks[(key, b)] = bytes(blk)
+        self._by_ino.setdefault(key, set()).add(b)
+        self._bytes += len(blk)
+
+    def _evict(self) -> None:
+        while self._bytes > self.budget and self._blocks:
+            (key, b), blk = self._blocks.popitem(last=False)
+            self._bytes -= len(blk)
+            s = self._by_ino.get(key)
+            if s is not None:
+                s.discard(b)
+                if not s:
+                    del self._by_ino[key]
+            self.evictions += 1
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "revocations": self.revocations,
+                    "cached_bytes": self._bytes,
+                    "cached_blocks": len(self._blocks),
+                    "leased_files": len(self._leased)}
+
+
 class _FlushJob:
     """One handle's unit of work in a write-behind flush cycle."""
 
     __slots__ = ("fh", "extents", "trunc", "io_h", "nbytes", "error",
-                 "first_sub_failed")
+                 "first_sub_failed", "gen", "ver", "new_size", "wseq")
 
     def __init__(self, fh: "FileHandle", extents: List[_Extent], trunc: bool,
-                 io_h: Dict) -> None:
+                 io_h: Dict, gen: int = 0, ver: int = 0) -> None:
         self.fh = fh
         self.extents = extents
         self.trunc = trunc
@@ -136,6 +385,10 @@ class _FlushJob:
         self.nbytes = sum(len(e.data) for e in extents)
         self.error: Optional[FSError] = None
         self.first_sub_failed = False  # the sub carrying trunc/open record
+        self.gen = gen                 # cache generation at snapshot time
+        self.ver = ver                 # server incarnation at snapshot time
+        self.new_size: Optional[int] = None  # max size acked by the server
+        self.wseq = 0                  # max mutation seq acked by the server
 
     @property
     def trunc_only(self) -> bool:
@@ -165,7 +418,10 @@ class BAgent:
                  pid: int = 1, client_id: Optional[str] = None,
                  hedge_delay_s: Optional[float] = None,
                  write_behind: bool = False,
-                 dirty_budget: int = DEFAULT_DIRTY_BUDGET) -> None:
+                 dirty_budget: int = DEFAULT_DIRTY_BUDGET,
+                 read_cache: bool = False,
+                 cache_block: int = DEFAULT_CACHE_BLOCK,
+                 cache_budget: int = DEFAULT_CACHE_BUDGET) -> None:
         self.cluster = cluster
         self.transport: Transport = cluster.transport
         self.config: ClusterConfig = cluster.config
@@ -176,7 +432,6 @@ class BAgent:
         self.stats = RpcStats()
         self.hedge_delay_s = hedge_delay_s
 
-        root_ino = Inode.unpack(cluster.root_ino)
         self.root = TreeNode("", cluster.root_ino,
                              PermRecord(0o040755, 0, 0), parent=None)
         self._tree_lock = threading.RLock()
@@ -214,12 +469,19 @@ class BAgent:
         self._wb_inflight = 0                       # handles being flushed
         self._wb_pending: Dict[int, Dict[int, FileHandle]] = {}  # host->fd->fh
         self._wb_by_ino: Dict[Tuple[int, int], set] = {}  # unflushed handles
+        # jobs snapshotted out of fh.dirty but not yet acked: their extents
+        # must keep shadowing cached clean blocks until the flush lands
+        self._wb_inflight_jobs: Dict[Tuple[int, int], List[_FlushJob]] = {}
         self._wb_flushers: Dict[int, threading.Thread] = {}
         self._wb_stop = False
         # asynchronous failures nobody could be told about synchronously:
         # failed async CLOSE RPCs + flush errors on already-closed handles.
         # drain() returns it so benchmarks/tests can assert clean shutdown.
         self.async_errors = 0
+
+        # lease-consistent page cache (None => every read RPCs as before)
+        self._cache: Optional[_PageCache] = (
+            _PageCache(cache_block, cache_budget) if read_cache else None)
 
         # invalidation callback endpoint (server -> client RPCs, §3.4)
         from .transport import TCPTransport
@@ -312,6 +574,14 @@ class BAgent:
                 node = self._node_index.get(key)
                 if node is not None:
                     node.valid = False
+            return ok()
+        if msg.type is MsgType.REVOKE_LEASE:
+            # the server blocks the mutating writer on this ack: once we
+            # return, no cached block for the file exists anywhere in this
+            # agent, so the write can be applied/acked without any client
+            # being able to serve the pre-mutation data
+            if self._cache is not None:
+                self._cache.revoke(_ino_key(msg.header["ino"]))
             return ok()
         return ok()
 
@@ -493,48 +763,180 @@ class BAgent:
         if not fh.pending_trunc:
             return
         ino = Inode.unpack(fh.ino)
-        h = {"file_id": ino.file_id, "size": 0, **self._io_header(fh)}
+        h = {"file_id": ino.file_id, "size": 0,
+             "client_id": self.client_id, **self._io_header(fh)}
+        ver = (self.config.version(ino.host_id)
+               if self._cache is not None else 0)
+        resp = None
         try:
-            self._rpc(ino.host_id, Message(MsgType.TRUNCATE, h))
+            resp = self._rpc(ino.host_id, Message(MsgType.TRUNCATE, h))
         except FSError as e:
             if not (ignore_enoent and e.errno == errno.ENOENT):
                 raise
         fh.pending_trunc = False
+        if self._cache is not None:  # pre-truncation blocks are dead
+            key = _ino_key(fh.ino)
+            self._cache.drop(key)
+            if resp is not None:
+                # stamp past the truncate so an in-flight pre-truncate READ
+                # response cannot re-install the dropped bytes
+                self._cache.note_mutation(key, ver,
+                                          resp.header.get("wseq", 0))
 
+    # ------------------------------------------------------------------
+    # the read path: ONE code path for cached, write-behind-shadowed and
+    # uncached reads
+    # ------------------------------------------------------------------
     def read(self, fd: int, n: int = -1) -> bytes:
         fh = self._fh(fd)
-        self._wb_drain_key(_ino_key(fh.ino))  # read-your-writes barrier
-        self._flush_trunc(fh)
-        ino = Inode.unpack(fh.ino)
-        length = n if n >= 0 else (1 << 31)
-        h = {"file_id": ino.file_id, "offset": fh.offset, "length": length,
-             **self._io_header(fh)}
-        resp = self._rpc(ino.host_id, Message(MsgType.READ, h))
-        fh.offset += len(resp.payload)
-        return resp.payload
+        data = self._read_span(fh, fh.offset, n)
+        fh.offset += len(data)
+        return data
 
     def pread(self, fd: int, n: int, offset: int) -> bytes:
-        fh = self._fh(fd)
-        self._wb_drain_key(_ino_key(fh.ino))  # read-your-writes barrier
+        return self._read_span(self._fh(fd), offset, n)
+
+    def _read_span(self, fh: FileHandle, offset: int, n: int) -> bytes:
+        """Serve ``[offset, offset+n)`` (n<0 => to EOF).  Warm path: the
+        lease-gated page cache, with locally-buffered dirty extents
+        shadowing the clean blocks — zero RPCs, no drain.  Cold path:
+        drain the file's buffered writes (read-your-writes), flush any
+        deferred O_TRUNC, then one READ RPC whose response refills the
+        cache under the lease granted with it."""
+        length = n if n >= 0 else (1 << 31)
+        if self._cache is not None:
+            data = self._cached_read(fh, offset, length)
+            if data is not None:
+                return data
+        key = _ino_key(fh.ino)
+        self._wb_drain_key(key)  # read-your-writes barrier
         self._flush_trunc(fh)
         ino = Inode.unpack(fh.ino)
-        h = {"file_id": ino.file_id, "offset": offset, "length": n,
+        h = {"file_id": ino.file_id, "offset": offset, "length": length,
              **self._io_header(fh)}
+        gen, ver = self._lease_request(key, ino.host_id, h)
         resp = self._rpc(ino.host_id, Message(MsgType.READ, h))
+        if self._cache is not None and resp.header.get("lease"):
+            self._cache.fill(key, gen, offset, resp.payload,
+                             resp.header.get("size",
+                                             offset + len(resp.payload)),
+                             ver, resp.header.get("wseq", 0))
         return resp.payload
+
+    def _lease_request(self, key: Tuple[int, int], host_id: int,
+                       h: Dict) -> Tuple[int, int]:
+        """Ask for a read lease on this READ; snapshot the revocation
+        generation and the server incarnation FIRST — fill() discards the
+        response if the generation moved, and a pre-RPC incarnation
+        snapshot means a restart racing the RPC yields a conservative
+        stale stamp (one wasted refetch) rather than trusted-stale data."""
+        if self._cache is None:
+            return 0, 0
+        h["lease"] = {"client_id": self.client_id, "cb_addr": self.cb_addr}
+        return self._cache.gen(key), self.config.version(host_id)
+
+    def _cached_read(self, fh: FileHandle, offset: int, length: int
+                     ) -> Optional[bytes]:
+        """Try to serve a read locally.  None => fall back to the RPC path.
+        Clean base blocks come from the page cache (valid lease required,
+        stamped by the server incarnation the config currently names);
+        this agent's buffered/in-flight write-behind extents are overlaid
+        on top, newest last, so read-your-writes holds WITHOUT draining."""
+        if fh.pending_trunc:
+            return None  # deferred O_TRUNC must reach the server first
+        ino = Inode.unpack(fh.ino)
+        key = _ino_key(fh.ino)
+        shadow = self._shadow_extents(key, offset, length)
+        if shadow is None:
+            return None  # a buffered deferred-truncate is not overlayable
+        extents, shadow_end = shadow
+        base = self._cache.serve(key, offset, length,
+                                 self.config.version(ino.host_id))
+        if base is None:
+            return None
+        data, size = base
+        if not shadow_end:
+            return data
+        eff_end = max(size, shadow_end)
+        want_end = min(offset + length, eff_end)
+        if want_end <= offset:
+            return b""
+        buf = bytearray(want_end - offset)  # holes read as zeros
+        buf[: len(data)] = data
+        for eoff, edata in extents:
+            hi = min(eoff + len(edata), want_end)
+            if hi > eoff:
+                buf[eoff - offset : hi - offset] = edata[: hi - eoff]
+        return bytes(buf)
+
+    def _shadow_extents(self, key: Tuple[int, int], offset: int, length: int
+                        ) -> Optional[Tuple[List[Tuple[int, bytes]], int]]:
+        """Snapshot this agent's unacked write-behind data for one file in
+        overlay order (in-flight flush jobs first, then still-buffered
+        extents, which are newer), clipped to the requested span so a small
+        read never copies a large dirty buffer.  Returns (extents,
+        max_buffered_end) — max_buffered_end covers ALL buffered data, not
+        just the span, so EOF extension is visible to reads near the end;
+        0 means the file is clean.  None => state not overlayable (a handle
+        owes a deferred O_TRUNC), use the drain path."""
+        if not self.write_behind:
+            return [], 0
+        out: List[Tuple[int, bytes]] = []
+        max_end = 0
+        span_end = offset + length
+        with self._wb_cond:
+            handles = self._wb_by_ino.get(key)
+            jobs = self._wb_inflight_jobs.get(key)
+            if not handles and not jobs:
+                return out, 0
+            runs: List[_Extent] = []
+            for j in jobs or ():
+                if j.trunc:
+                    return None
+                runs.extend(j.extents)
+            for fh2 in sorted(handles or (), key=lambda f: f.fd):
+                if fh2.pending_trunc:
+                    return None
+                runs.extend(fh2.dirty)
+            for e in runs:
+                if e.end > max_end:
+                    max_end = e.end
+                lo, hi = max(e.offset, offset), min(e.end, span_end)
+                if lo < hi:
+                    out.append((lo, bytes(e.data[lo - e.offset
+                                                 : hi - e.offset])))
+        return out, max_end
 
     def write(self, fd: int, data: bytes) -> int:
         fh = self._fh(fd)
         if self.write_behind:
             return self._wb_write(fh, data)
         ino = Inode.unpack(fh.ino)
-        h = {"file_id": ino.file_id, "offset": fh.offset, **self._io_header(fh)}
-        if fh.pending_trunc:
+        key = _ino_key(fh.ino)
+        offset = fh.offset
+        h = {"file_id": ino.file_id, "offset": offset,
+             "client_id": self.client_id, **self._io_header(fh)}
+        trunc = fh.pending_trunc
+        if trunc:
             h["truncate"] = True
+        if self._cache is not None:
+            gen, ver = self._cache.gen(key), self.config.version(ino.host_id)
         resp = self._rpc(ino.host_id, Message(MsgType.WRITE, h, data))
         # cleared only on success: a failed WRITE must not silently drop the
         # deferred O_TRUNC (the retry or the eventual close still owes it)
         fh.pending_trunc = False
+        if self._cache is not None:
+            wseq = resp.header.get("wseq", 0)
+            if trunc:
+                self._cache.drop(key)  # pre-truncation blocks are dead
+                self._cache.note_mutation(key, ver, wseq)
+            else:
+                # our write is the newest acked data for this range (the
+                # server excluded our lease from its revoke fan-out); a
+                # racing writer's revoke moves the generation, and wseq
+                # orders it against our own concurrent writes
+                self._cache.patch(key, gen, [(offset, bytes(data))],
+                                  resp.header.get("size"), ver, wseq)
         fh.offset += resp.header["written"]
         return resp.header["written"]
 
@@ -720,8 +1122,17 @@ class BAgent:
                     extents, fh.dirty = _coalesce(fh.dirty), []
                     fh.wb_inflight = True
                     self._wb_inflight += 1
-                    jobs.append(_FlushJob(fh, extents, fh.pending_trunc,
-                                          self._io_header(fh)))
+                    key = _ino_key(fh.ino)
+                    gen = ver = 0
+                    if self._cache is not None:
+                        gen = self._cache.gen(key)
+                        ver = self.config.version(host)
+                    job = _FlushJob(fh, extents, fh.pending_trunc,
+                                    self._io_header(fh), gen, ver)
+                    # keep the snapshotted extents visible to readers until
+                    # the flush lands (dirty-extent shadowing)
+                    self._wb_inflight_jobs.setdefault(key, []).append(job)
+                    jobs.append(job)
             self._flush_jobs(host, jobs)
 
     def _flush_jobs(self, host: int, jobs: List[_FlushJob]) -> None:
@@ -736,7 +1147,8 @@ class BAgent:
                 subs: List[Message] = []
                 if j.extents:
                     for i, e in enumerate(j.extents):
-                        h: Dict = {"file_id": ino.file_id, "offset": e.offset}
+                        h: Dict = {"file_id": ino.file_id, "offset": e.offset,
+                                   "client_id": self.client_id}
                         if i == 0:
                             h.update(j.io_h)
                             if j.trunc:
@@ -744,7 +1156,8 @@ class BAgent:
                         subs.append(Message(MsgType.WRITE, h, bytes(e.data)))
                 elif j.trunc:
                     subs.append(Message(MsgType.TRUNCATE, {
-                        "file_id": ino.file_id, "size": 0, **j.io_h}))
+                        "file_id": ino.file_id, "size": 0,
+                        "client_id": self.client_id, **j.io_h}))
                 per_job.append(subs)
             chunks: List[List[int]] = [[]]
             n_sub = size = 0
@@ -810,6 +1223,10 @@ class BAgent:
                                   r.header.get("msg", j.fh.path))
                     j.first_sub_failed = (k == 0)
                     break
+                s = r.header.get("size")
+                if s is not None and (j.new_size is None or s > j.new_size):
+                    j.new_size = s  # acked object size: cache-patch input
+                j.wseq = max(j.wseq, r.header.get("wseq", 0))
             pos += n
 
     def _complete_jobs(self, jobs: List[_FlushJob]) -> None:
@@ -822,6 +1239,32 @@ class BAgent:
                 fh.wb_inflight = False
                 self._wb_inflight -= 1
                 self._wb_dirty_bytes -= j.nbytes
+                key = _ino_key(fh.ino)
+                lst = self._wb_inflight_jobs.get(key)
+                if lst is not None:
+                    try:
+                        lst.remove(j)
+                    except ValueError:
+                        pass
+                    if not lst:
+                        del self._wb_inflight_jobs[key]
+                if self._cache is not None:
+                    if j.error is not None or j.trunc:
+                        # failed flush => server state unknown; flushed
+                        # truncate => pre-trunc blocks dead.  Either way the
+                        # cached clean blocks are no longer trustworthy.
+                        self._cache.drop(key)
+                        if j.error is None:
+                            self._cache.note_mutation(key, j.ver, j.wseq)
+                    elif j.extents:
+                        # flushed bytes are now acked clean data: patch them
+                        # into the cache so the shadow they stop providing
+                        # is replaced by clean blocks (generation- and
+                        # wseq-checked)
+                        self._cache.patch(
+                            key, j.gen,
+                            [(x.offset, bytes(x.data)) for x in j.extents],
+                            j.new_size, j.ver, j.wseq)
                 e = j.error
                 if e is not None and j.trunc_only and e.errno == errno.ENOENT:
                     # closing-handle deferred O_TRUNC after the file was
@@ -914,6 +1357,10 @@ class BAgent:
         pino = Inode.unpack(parent.ino)
         self._rpc(pino.host_id, Message(MsgType.UNLINK, {
             "parent": pino.file_id, "name": name, "client_id": self.client_id}))
+        if target is not None and self._cache is not None:
+            # the server dropped its whole lease table for the dead file;
+            # forget our side too (blocks, grant, stamp)
+            self._cache.forget(_ino_key(target.ino))
         with self._tree_lock:
             if parent.children:
                 dropped = parent.children.pop(name, None)
@@ -964,6 +1411,11 @@ class BAgent:
         node, _ = self._walk(path)
         if node.perm.is_dir:
             self._ensure_children(node)
+
+    def cache_stats(self) -> Optional[Dict[str, int]]:
+        """Page-cache counters (hits/misses/evictions/revocations/bytes),
+        or None when the agent runs without a read cache."""
+        return None if self._cache is None else self._cache.stats()
 
     # ------------------------------------------------------------------
     # bulk paths: batched RPCs + bulk namespace prefetch
@@ -1118,7 +1570,9 @@ class BAgent:
                   *, batch_size: int = DEFAULT_BATCH) -> List[bytes]:
         """Bulk read(): one BATCH frame per (host, batch_size) chunk instead
         of one READ RPC per fd.  Deferred open records (§3.3) piggyback on
-        the sub-messages exactly as they would on individual READs."""
+        the sub-messages exactly as they would on individual READs.  With
+        the page cache enabled, warm fds are served locally and only the
+        misses ride the batch; their responses refill the cache."""
         length = n if n >= 0 else (1 << 31)
         results: List[bytes] = [b""] * len(fds)
         # a duplicated fd needs offset chaining (read #2 starts where #1
@@ -1126,33 +1580,48 @@ class BAgent:
         # read(); distinct fds batch freely
         dup_fds = {fd for fd, c in Counter(fds).items() if c > 1}
         fhs: Dict[int, FileHandle] = {}
-        by_host: Dict[int, List[Tuple[int, Message]]] = {}
-        for i, fd in enumerate(fds):
-            if fd in dup_fds:
-                continue
-            fh = self._fh(fd)
-            self._wb_drain_key(_ino_key(fh.ino))
-            self._flush_trunc(fh)
-            fhs[i] = fh
-            ino = Inode.unpack(fh.ino)
-            h = {"file_id": ino.file_id, "offset": fh.offset,
-                 "length": length, **self._io_header(fh)}
-            by_host.setdefault(ino.host_id, []).append(
-                (i, Message(MsgType.READ, h)))
+        # per miss: (result slot, (gen, incarnation) snapshot, ino key, msg)
+        by_host: Dict[int, List[Tuple[int, Tuple[int, int], Tuple[int, int],
+                                      Message]]] = {}
         # two-phase so a failure leaves NO offset advanced: gather every
         # sub-response first, then apply results + offsets only if the
         # whole bulk read succeeded — otherwise a caller retrying after the
         # raise would silently skip the chunks that had already landed
         gathered: List[Tuple[int, bytes]] = []
         gather_lock = threading.Lock()
+        for i, fd in enumerate(fds):
+            if fd in dup_fds:
+                continue
+            fh = self._fh(fd)
+            fhs[i] = fh
+            if self._cache is not None:
+                data = self._cached_read(fh, fh.offset, length)
+                if data is not None:
+                    gathered.append((i, data))  # cache install not needed
+                    continue
+            key = _ino_key(fh.ino)
+            self._wb_drain_key(key)
+            self._flush_trunc(fh)
+            ino = Inode.unpack(fh.ino)
+            h = {"file_id": ino.file_id, "offset": fh.offset,
+                 "length": length, **self._io_header(fh)}
+            snap = self._lease_request(key, ino.host_id, h)
+            by_host.setdefault(ino.host_id, []).append(
+                (i, snap, key, Message(MsgType.READ, h)))
 
-        def drain_host(host: int, items: List[Tuple[int, Message]]) -> None:
+        def drain_host(host: int, items) -> None:
             for chunk in _chunks(items, batch_size):
-                resps = self._rpc_batch(host, [m for _, m in chunk])
-                for (i, _), r in zip(chunk, resps):
+                resps = self._rpc_batch(host, [m for _, _, _, m in chunk])
+                for (i, snap, key, m), r in zip(chunk, resps):
                     if r.type is MsgType.ERROR:
                         raise err(r.header.get("errno", errno.EIO),
                                   r.header.get("msg", ""))
+                    if self._cache is not None and r.header.get("lease"):
+                        off = m.header["offset"]
+                        self._cache.fill(key, snap[0], off, r.payload,
+                                         r.header.get("size",
+                                                      off + len(r.payload)),
+                                         snap[1], r.header.get("wseq", 0))
                     with gather_lock:
                         gathered.append((i, r.payload))
 

@@ -19,6 +19,13 @@ paper's experimental comparison:
 Clients cache dentries after access (the paper notes Lustre keeps valid
 directory entries client-side), so path resolution costs are identical to
 BuffetFS — isolating the open()-RPC difference.
+
+Neither baseline caches file DATA client-side: every read() pays at least
+one RPC no matter how recently the file was read (DoM's inline payload is
+bound to one open(), not a coherent cache — a warm re-open still costs the
+READ_INLINE round trip).  This is the deliberate contrast to BuffetFS's
+lease-consistent page cache, where a warm read is served locally with zero
+critical-path RPCs (`benchmarks/fig7_readcache.py`).
 """
 from __future__ import annotations
 
@@ -30,9 +37,9 @@ import threading
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
-from .cluster import BuffetCluster, stable_hash
+from .cluster import BuffetCluster
 from .inode import Inode
-from .perms import (Credentials, O_CREAT, O_TRUNC, PermRecord, W_OK, X_OK,
+from .perms import (Credentials, O_CREAT, O_TRUNC, PermRecord, X_OK,
                     access_ok, err, flags_to_access)
 from .service import SERVER_OPS
 from .wire import Message, MsgType, RpcStats, error, ok

@@ -75,8 +75,16 @@ class BLib:
 
     # --- whole-file helpers (the framework's hot path) --------------------
     def read_file(self, path: str) -> bytes:
+        """Whole-file read.  On an agent with the lease-consistent page
+        cache (``BAgent(read_cache=True)``) a warm re-read costs ZERO
+        critical-path RPCs — open() checks permissions locally, the data
+        comes from cached blocks, and close() never touched the server."""
         with self.open(path, "rb") as f:
             return f.read()
+
+    def cache_stats(self) -> Optional[dict]:
+        """Page-cache counters of the underlying agent (None if disabled)."""
+        return self.agent.cache_stats()
 
     def read_files(self, paths: List[str]) -> List[bytes]:
         """Bulk whole-file read over the agent's batched open/read path:

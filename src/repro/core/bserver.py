@@ -52,6 +52,13 @@ class FileMeta:
     mtime: float = 0.0
     ctime: float = 0.0
     xattrs: Dict[str, str] = field(default_factory=dict)  # front-end metadata mirror
+    # per-file mutation sequence, bumped under the file lock by every
+    # WRITE/TRUNCATE and echoed in READ/WRITE/TRUNCATE responses: clients
+    # order their cache fills/patches by it, so two acks processed out of
+    # order can never regress the cache.  Volatile on purpose (not
+    # persisted): a restart resets it together with the lease table, and
+    # clients key their stamps by (incarnation, wseq).
+    wseq: int = 0
 
 
 @dataclass
@@ -103,6 +110,17 @@ class BServer:
         self._opened: Dict[int, Set[Tuple[str, int, int]]] = {}
         # per-directory caching clients: dir_file_id -> {client_id: callback_addr}
         self._watchers: Dict[int, Dict[str, str]] = {}
+        # read leases (data-plane twin of _watchers): file_id ->
+        # {client_id: callback_addr}.  Granted on READ, recalled with a
+        # blocking REVOKE_LEASE fan-out before any data mutation is acked.
+        self._leases: Dict[int, Dict[str, str]] = {}
+        # revokes that completed WITHOUT an ack (client unreachable or too
+        # slow): the mutation proceeded anyway — availability over blocking
+        # every writer on one dead client, the same escape hatch the §3.4
+        # watcher fan-out takes.  Nonzero means a stale serve was possible;
+        # TTL-bounded leases (wait out the grant instead of trusting the
+        # drop) are the strengthening, tracked in ROADMAP.md.
+        self.lease_breaks_forced = 0
         self._stopped = False
 
         if os.path.exists(self._meta_path):
@@ -193,6 +211,7 @@ class BServer:
             self.version += 1
             self._opened.clear()
             self._watchers.clear()
+            self._leases.clear()
             if os.path.exists(self._meta_path):
                 self._load_meta()
             self._stopped = False
@@ -257,8 +276,44 @@ class BServer:
                 with self._lock:
                     self._watchers.get(dir_file_id, {}).pop(client_id, None)
 
+    def _revoke_leases(self, file_id: int,
+                       exclude_client: Optional[str] = None) -> None:
+        """Recall every read lease on a file, BLOCKING until each holder
+        acks (or proves unreachable) — only then may the caller apply (or,
+        for unlink, acknowledge) the data mutation.  This ordering is what
+        makes a client page-cache hit indistinguishable from a read RPC:
+        a stale block can never be served after the mutation returns.
+
+        The writer's own lease survives (`exclude_client`): its agent
+        patches its cache from the write path, and revoking it would only
+        thrash the cache it is about to update."""
+        with self._lock:
+            holders = dict(self._leases.get(file_id, {}))
+        for client_id, cb_addr in holders.items():
+            if client_id == exclude_client:
+                continue
+            resp = self.transport.request(
+                cb_addr,
+                Message(MsgType.REVOKE_LEASE, {"ino": self._inode(file_id)}),
+                critical=True)
+            # acked or unreachable: either way the entry is dropped and the
+            # mutation proceeds.  For an ACKED revoke that is airtight; for
+            # an unreachable/timed-out holder it is the availability choice
+            # (don't block every writer on one dead client) — counted so
+            # tests/monitoring can see that the strong guarantee was
+            # forfeited on this file
+            with self._lock:
+                if resp.type is not MsgType.OK:
+                    self.lease_breaks_forced += 1
+                tbl = self._leases.get(file_id)
+                if tbl is not None:
+                    tbl.pop(client_id, None)
+                    if not tbl:
+                        del self._leases[file_id]
+
     def _two_phase(self, parent: int, names: List[str], check, apply,
-                   exclude_client: Optional[str] = None) -> Message:
+                   exclude_client: Optional[str] = None,
+                   post_apply=None) -> Message:
         """§3.4 two-phase scaffold shared by every namespace mutation.
 
         Under the directory's mutation mutex: (1) `check` runs under the
@@ -266,7 +321,13 @@ class BServer:
         invalidated yet, so a refused mutation costs the watchers nothing;
         (2) the invalidation fan-out BLOCKS until every watcher acks;
         (3) only then does `apply` run, under the meta lock.  The mutex
-        also serializes directory reads against the (2)-(3) window."""
+        also serializes directory reads against the (2)-(3) window.
+
+        `post_apply` (if given) runs after a successful apply, outside the
+        meta lock but still inside the mutex — unlink uses it to recall
+        read leases on the removed file before the client is acked (once
+        apply removed the object, no NEW lease can be granted, so
+        revoke-after-apply-before-ack leaves no stale-grant window)."""
         with self._dir_mutex(parent):
             with self._lock:
                 refusal = check()
@@ -275,7 +336,10 @@ class BServer:
             self._invalidate_watchers(parent, names,
                                       exclude_client=exclude_client)
             with self._lock:
-                return apply()
+                resp = apply()
+            if post_apply is not None and resp.type is not MsgType.ERROR:
+                post_apply()
+            return resp
 
     # ------------------------------------------------------------------
     # request dispatch — through the shared service-layer registry; the
@@ -381,9 +445,10 @@ class BServer:
         return self._two_phase(parent, [name], check, apply,
                                exclude_client=h.get("client_id"))
 
-    @SERVER_OPS.register(MsgType.UNLINK, mutating=True)
+    @SERVER_OPS.register(MsgType.UNLINK, mutating=True, breaks_lease=True)
     def _op_unlink(self, h: Dict, _p: bytes) -> Message:
         parent, name = h["parent"], h["name"]
+        unlinked: List[int] = []  # local file_id whose leases must be recalled
 
         def check() -> Optional[Message]:
             e = self._dirs[parent].get(name)
@@ -398,6 +463,7 @@ class BServer:
             ino = Inode.unpack(e.ino)
             if ino.host_id == self.host_id:
                 self._meta.pop(ino.file_id, None)
+                unlinked.append(ino.file_id)
                 try:
                     os.unlink(self._obj_path(ino.file_id))
                 except FileNotFoundError:
@@ -405,8 +471,25 @@ class BServer:
             self._persist()
             return ok()
 
+        def post_apply() -> None:
+            # revoke-after-apply-before-ack: the object is already gone, so
+            # no new lease can be granted (READ now fails ENOENT), and every
+            # pre-apply lease is recalled before the unlinker gets its OK —
+            # no client can serve stale blocks for a path whose unlink
+            # completed.  (A cross-host object keeps its data unchanged
+            # until GC'd, so its leases are not stale and stay untouched.)
+            for fid in unlinked:
+                self._revoke_leases(fid,
+                                    exclude_client=h.get("client_id"))
+                # the file_id is dead and never reused: drop the whole
+                # table (the excluded unlinker's entry would otherwise
+                # leak forever — no later mutation will ever touch it)
+                with self._lock:
+                    self._leases.pop(fid, None)
+
         return self._two_phase(parent, [name], check, apply,
-                               exclude_client=h.get("client_id"))
+                               exclude_client=h.get("client_id"),
+                               post_apply=post_apply)
 
     @SERVER_OPS.register(MsgType.RMDIR, mutating=True)
     def _op_rmdir(self, h: Dict, _p: bytes) -> Message:
@@ -566,7 +649,7 @@ class BServer:
                 self._opened.setdefault(io_h["file_id"], set()).add(
                     (rec["client_id"], rec["pid"], rec["fd"]))
 
-    @SERVER_OPS.register(MsgType.READ)
+    @SERVER_OPS.register(MsgType.READ, grants_lease=True)
     def _op_read(self, h: Dict, _p: bytes) -> Message:
         fid, off, ln = h["file_id"], h["offset"], h["length"]
         self._record_open(h)
@@ -574,6 +657,18 @@ class BServer:
             with self._lock:
                 m = self._meta[fid]
                 m.atime = time.time()
+                wseq = m.wseq  # stable: writers hold the file lock we hold
+                # read-lease grant: registration is atomic with the
+                # existence check above, and the surrounding file lock
+                # serializes it against a writer's revoke+apply window —
+                # a lease granted here is either revoked by that writer's
+                # fan-out or sees the post-apply data, never neither.
+                rec = h.get("lease")
+                granted = bool(rec and rec.get("client_id")
+                               and rec.get("cb_addr"))
+                if granted:
+                    self._leases.setdefault(fid, {})[rec["client_id"]] = \
+                        rec["cb_addr"]
             # size comes from the backing file itself, under the file lock:
             # race-free against concurrent WRITEs (the old code read m.size
             # unlocked for the eof flag) and correct even when a crash left
@@ -587,9 +682,13 @@ class BServer:
                     data = f.read(min(ln, max(0, size - off)))
             except FileNotFoundError:
                 size, data = 0, b""
-        return ok({"eof": off + len(data) >= size}, data)
+        hdr: Dict = {"eof": off + len(data) >= size, "size": size,
+                     "wseq": wseq}
+        if granted:
+            hdr["lease"] = True
+        return ok(hdr, data)
 
-    @SERVER_OPS.register(MsgType.WRITE, mutating=True)
+    @SERVER_OPS.register(MsgType.WRITE, mutating=True, breaks_lease=True)
     def _op_write(self, h: Dict, p: bytes) -> Message:
         fid, off = h["file_id"], h["offset"]
         with self._lock:
@@ -597,6 +696,12 @@ class BServer:
                 return error(errno.ENOENT, "no such object")
         self._record_open(h)
         with self._file_lock(fid):
+            # revoke-before-apply, the data-plane twin of the §3.4
+            # invalidate-watchers-then-apply path: the file lock spans both
+            # the recall and the mutation, and READ grants its lease under
+            # the same lock, so no lease can slip in between — by the time
+            # this WRITE is acked, no client caches the pre-write block.
+            self._revoke_leases(fid, exclude_client=h.get("client_id"))
             path = self._obj_path(fid)
             # "wb" fallback is legitimate re-materialization while metadata
             # exists (e.g. object lost in a crash); the unlinked-file case
@@ -623,10 +728,11 @@ class BServer:
                 end = (off + len(p)) if not h.get("truncate") else len(p)
                 m.size = max(0 if h.get("truncate") else m.size, end)
                 m.mtime = time.time()
-                size = m.size
-        return ok({"written": len(p), "size": size})
+                m.wseq += 1
+                size, wseq = m.size, m.wseq
+        return ok({"written": len(p), "size": size, "wseq": wseq})
 
-    @SERVER_OPS.register(MsgType.TRUNCATE, mutating=True)
+    @SERVER_OPS.register(MsgType.TRUNCATE, mutating=True, breaks_lease=True)
     def _op_truncate(self, h: Dict, _p: bytes) -> Message:
         fid = h["file_id"]
         with self._lock:
@@ -634,6 +740,8 @@ class BServer:
                 return error(errno.ENOENT, "no such object")
         self._record_open(h)
         with self._file_lock(fid):
+            # same revoke-before-apply ordering as _op_write
+            self._revoke_leases(fid, exclude_client=h.get("client_id"))
             path = self._obj_path(fid)
             # mirror _op_write: re-materialize a crash-lost object while
             # metadata exists; the unlinked-race case is handled by the
@@ -651,7 +759,9 @@ class BServer:
                     return error(errno.ENOENT, "unlinked during truncate")
                 m.size = h["size"]
                 m.mtime = time.time()
-        return ok()
+                m.wseq += 1
+                wseq = m.wseq
+        return ok({"wseq": wseq})
 
     @SERVER_OPS.register(MsgType.FSYNC, barrier=True)
     def _op_fsync(self, h: Dict, _p: bytes) -> Message:
@@ -742,3 +852,7 @@ class BServer:
     def watcher_count(self) -> int:
         with self._lock:
             return sum(len(w) for w in self._watchers.values())
+
+    def lease_count(self) -> int:
+        with self._lock:
+            return sum(len(t) for t in self._leases.values())

@@ -24,7 +24,6 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from .bserver import BServer
-from .inode import Inode
 from .transport import InProcTransport, LatencyModel, Transport
 from .wire import Message, MsgType
 

@@ -8,9 +8,8 @@ fault-tolerance validation and straggler-mitigation benchmarks.
 from __future__ import annotations
 
 import contextlib
-import threading
 import time
-from typing import Iterator, Optional
+from typing import Iterator
 
 from .cluster import BuffetCluster
 from .transport import InProcTransport

@@ -19,6 +19,14 @@ An `Operation` entry also carries a `mutating` flag so generic machinery
 handler bodies, and a `barrier` flag marking durability barriers (FSYNC):
 a replication/journaling layer must not acknowledge a barrier verb until
 every previously-applied mutation for the same object is stable.
+
+Lease bookkeeping is a registry concern too: `grants_lease` marks verbs
+whose response may carry a read-lease grant (READ), and `breaks_lease`
+marks verbs that must recall outstanding read leases before their mutation
+is acknowledged (WRITE, TRUNCATE, UNLINK) — the revoke-before-ack ordering
+that makes the client page cache strongly consistent.  FSYNC is a barrier
+but NOT lease-breaking: it changes durability, never contents, so cached
+blocks stay valid across it.
 """
 from __future__ import annotations
 
@@ -46,6 +54,8 @@ class Operation:
     handler: Handler
     mutating: bool = False
     barrier: bool = False  # durability barrier: orders behind prior mutations
+    grants_lease: bool = False  # response may carry a read-lease grant
+    breaks_lease: bool = False  # must revoke read leases before acking
 
 
 class OperationRegistry:
@@ -61,16 +71,23 @@ class OperationRegistry:
         self._ops: Dict[MsgType, Operation] = {}
 
     def register(self, msg_type: MsgType, *, mutating: bool = False,
-                 barrier: bool = False) -> Callable[[Handler], Handler]:
+                 barrier: bool = False, grants_lease: bool = False,
+                 breaks_lease: bool = False) -> Callable[[Handler], Handler]:
         def deco(fn: Handler) -> Handler:
             if msg_type in self._ops:
                 raise ValueError(f"duplicate handler for {msg_type.name}")
-            self._ops[msg_type] = Operation(msg_type, fn, mutating, barrier)
+            self._ops[msg_type] = Operation(msg_type, fn, mutating, barrier,
+                                            grants_lease, breaks_lease)
             return fn
         return deco
 
     def types(self) -> Iterable[MsgType]:
         return sorted(self._ops, key=int)
+
+    def lease_breaking_types(self) -> Iterable[MsgType]:
+        """The verbs that recall read leases before acking — what a client
+        cache may be invalidated by (tests/doc tooling classify off this)."""
+        return [t for t in self.types() if self._ops[t].breaks_lease]
 
     def operation(self, msg_type: MsgType) -> Optional[Operation]:
         return self._ops.get(msg_type)

@@ -50,6 +50,13 @@ class MsgType(IntEnum):
     FSYNC = 21          # durability barrier: flush object data + metadata to disk
     # --- server -> client (callback channel) ---
     INVALIDATE = 32     # server asks client to invalidate cached tree nodes
+    REVOKE_LEASE = 33   # server recalls a read lease before applying a data
+                        # mutation (write/truncate/unlink) — the data-plane
+                        # twin of INVALIDATE.  A READ carrying a "lease"
+                        # record in its header is granted one ("lease": true
+                        # in the response); the grant entitles the client to
+                        # serve that file's blocks from its local page cache
+                        # with zero RPCs until revoked.
     # --- generic ---
     OK = 64
     ERROR = 65

@@ -2,10 +2,9 @@
 roofline (§Roofline correctness matters as much as model correctness)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.analysis.hlo import analyze, parse_module, shape_info
+from repro.analysis.hlo import analyze, shape_info
 from repro.analysis.model_math import model_flops, param_counts
 from repro.configs import TRAIN_4K, get_config
 

@@ -7,11 +7,10 @@ import time
 
 import pytest
 
-from repro.core import (BAgent, BLib, BuffetCluster, Credentials, Inode,
+from repro.core import (BAgent, BLib, BuffetCluster, Inode,
                         LustreNormalClient, Message, MsgType, O_CREAT,
                         O_RDONLY, O_TRUNC, O_WRONLY, SERVER_OPS, TCPTransport,
                         batch_status, pack_batch, unpack_batch)
-from repro.core.perms import FSError
 from repro.core.wire import error, ok
 
 
@@ -136,7 +135,7 @@ def test_warm_tree_bounded_rpcs_then_zero_rpc_opens(cluster):
     # every subsequent open is now fully local
     fresh.stats.reset()
     for p in paths:
-        fd = fresh.open(p, O_RDONLY)
+        fresh.open(p, O_RDONLY)
     assert fresh.stats.snapshot()["total"] == 0
     fresh.shutdown()
 

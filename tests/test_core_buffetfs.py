@@ -7,9 +7,8 @@ import time
 import pytest
 
 from repro.core import (BAgent, BLib, BuffetCluster, Credentials, Inode,
-                        LustreDoMClient, LustreNormalClient, MsgType,
-                        O_CREAT, O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY,
-                        PermRecord, access_ok, R_OK, W_OK, X_OK)
+                        LustreDoMClient, LustreNormalClient,
+                        O_RDONLY, O_WRONLY, PermRecord)
 from repro.core.perms import FSError, PERM_BYTES
 
 

@@ -7,7 +7,6 @@ P2  strong consistency (§3.4): after chmod() returns, NO client ever makes
     an access decision with the old permission;
 P3  inode pack/unpack is a bijection on the documented ranges.
 """
-import errno
 import os
 import threading
 
@@ -17,7 +16,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (BAgent, BLib, BuffetCluster, Credentials, Inode,
-                        O_RDONLY, PermRecord, access_ok, R_OK, W_OK, X_OK)
+                        O_RDONLY, PermRecord, access_ok, X_OK)
 from repro.core.bserver import BServer
 from repro.core.perms import FSError, S_IFDIR, S_IFREG
 from repro.core.transport import TCPTransport

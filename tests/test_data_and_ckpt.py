@@ -1,5 +1,4 @@
 """Data pipeline + checkpoint layer tests over a live BuffetFS cluster."""
-import threading
 import time
 
 import numpy as np
@@ -114,9 +113,7 @@ def test_hedged_read_beats_straggler(cluster):
     shard_host = Inode.unpack(agent.stat_cached(f"{ds.base}/shard_0000")["ino"]).host_id
     with slow_server(cluster, shard_host, extra_delay_s=0.2):
         it = iter(pipe)
-        t0 = time.monotonic()
         batch = next(it)
-        dt = time.monotonic() - t0
     pipe.stop()
     assert batch["tokens"].shape == (4, 16)
     assert pipe.stats.hedged >= 1  # hedging actually fired

@@ -7,8 +7,7 @@ import pytest
 
 from repro.kernels.decode_attention import decode_attention, decode_attention_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.flash_attention.kernel import (flash_attention_bwd,
-                                                  flash_attention_fwd)
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import lse_ref
 from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
 from repro.kernels.ssd_scan import ssd_ref, ssd_scan

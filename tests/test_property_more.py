@@ -107,5 +107,4 @@ def test_int8_quantization_error_bound(scale, seed):
     back = np.asarray(_dequantize(q, s, g.shape, jnp.float32))
     # error bounded by half a quantization step per block
     step = np.asarray(s).reshape(-1)
-    err = np.abs(back - g).reshape(-1, 256 if g.size % 256 == 0 else g.size)
     assert np.abs(back - g).max() <= np.max(step) * 0.5 + 1e-6

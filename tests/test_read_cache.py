@@ -1,0 +1,546 @@
+"""Lease-consistent page-cache tests: zero-RPC warm reads, server-driven
+REVOKE_LEASE recalls (write/truncate/unlink, including inside BATCH
+envelopes), LRU eviction under the byte budget, read-your-writes through
+dirty-extent shadowing, the revocation-generation race (a READ response
+crossing a revoke must not be cached), and restart distrust.
+"""
+
+import errno
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    BAgent,
+    BLib,
+    BuffetCluster,
+    Inode,
+    Message,
+    MsgType,
+    O_CREAT,
+    O_RDONLY,
+    O_RDWR,
+    O_TRUNC,
+    O_WRONLY,
+    SERVER_OPS,
+    TCPTransport,
+)
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4)
+    yield c
+    c.shutdown()
+
+
+def _cache_agent(cluster, **kw) -> BAgent:
+    return BAgent(cluster, read_cache=True, **kw)
+
+
+def _file_host(agent: BAgent, path: str) -> int:
+    return Inode.unpack(agent.stat_cached(path)["ino"]).host_id
+
+
+def _file_id(agent: BAgent, path: str) -> int:
+    return Inode.unpack(agent.stat_cached(path)["ino"]).file_id
+
+
+def _seed(cluster, files) -> None:
+    a = BAgent(cluster)
+    lib = BLib(a)
+    lib.makedirs("/d")
+    for path, data in files.items():
+        lib.write_file(path, data)
+    a.drain()
+    a.shutdown()
+
+
+class _Gate:
+    """Intercepts one host's frames, blocking chosen message types on an
+    event — lets tests order flushes/reads deterministically."""
+
+    def __init__(self, cluster, host, types, times=-1):
+        self.cluster = cluster
+        self.addr = cluster.config.addr(host)
+        self.orig = cluster.servers[host].handle
+        self.types = types
+        self.times = times  # how many frames to gate; -1 => all
+        self.gate = threading.Event()
+        self.seen = 0
+        cluster.transport.serve(self.addr, self._handle)
+
+    def _handle(self, msg: Message) -> Message:
+        if msg.type in self.types and self.times != 0:
+            if self.times > 0:
+                self.times -= 1
+            self.seen += 1
+            resp = self.orig(msg)  # serve first: no server lock held while
+            self.gate.wait(10)  # ...the response is parked at the gate
+            return resp
+        return self.orig(msg)
+
+    def restore(self):
+        self.cluster.transport.serve(self.addr, self.orig)
+        self.gate.set()
+
+
+# ---------------------------------------------------------------------------
+# registry classification: lease bookkeeping is a service-layer concern
+# ---------------------------------------------------------------------------
+
+
+def test_lease_flags_registered():
+    assert SERVER_OPS.operation(MsgType.READ).grants_lease
+    for t in (MsgType.WRITE, MsgType.TRUNCATE, MsgType.UNLINK):
+        assert SERVER_OPS.operation(t).breaks_lease, t.name
+    fsync = SERVER_OPS.operation(MsgType.FSYNC)
+    assert fsync.barrier and not fsync.breaks_lease  # durability, not data
+    assert list(SERVER_OPS.lease_breaking_types()) == [
+        MsgType.WRITE,
+        MsgType.UNLINK,
+        MsgType.TRUNCATE,
+    ]
+
+
+# ---------------------------------------------------------------------------
+# the warm path: zero critical RPCs
+# ---------------------------------------------------------------------------
+
+
+def test_warm_read_zero_critical_rpcs(cluster):
+    _seed(cluster, {"/d/f": b"hello" * 200})
+    a = _cache_agent(cluster)
+    lib = BLib(a)
+    assert lib.read_file("/d/f") == b"hello" * 200  # cold: fills + lease
+    host = _file_host(a, "/d/f")
+    assert cluster.servers[host].lease_count() == 1
+    a.stats.reset()
+    for _ in range(5):
+        assert lib.read_file("/d/f") == b"hello" * 200
+    snap = a.stats.snapshot()
+    assert snap["critical_path"] == 0
+    assert snap["total"] == 0  # not even async RPCs: close never opened
+    assert a.cache_stats()["hits"] >= 5
+    a.shutdown()
+
+
+def test_pread_block_assembly_and_eof(cluster):
+    data = bytes(range(256)) * 4  # 1 KiB, spans many 64-byte blocks
+    _seed(cluster, {"/d/f": data})
+    a = _cache_agent(cluster, cache_block=64)
+    fd = a.open("/d/f", O_RDONLY)
+    assert a.read(fd) == data  # cold whole-file read
+    a.stats.reset()
+    assert a.pread(fd, 10, 0) == data[:10]
+    assert a.pread(fd, 100, 60) == data[60:160]  # crosses block boundaries
+    assert a.pread(fd, 50, 1000) == data[1000:1024]  # clipped at EOF
+    assert a.pread(fd, 10, 5000) == b""  # beyond EOF
+    assert a.stats.snapshot()["critical_path"] == 0
+    a.close(fd)
+    a.shutdown()
+
+
+def test_read_many_served_from_cache(cluster):
+    files = {f"/d/f{i}": f"payload-{i}".encode() * 32 for i in range(8)}
+    _seed(cluster, files)
+    a = _cache_agent(cluster)
+    lib = BLib(a)
+    paths = sorted(files)
+    assert lib.read_files(paths) == [files[p] for p in paths]
+    a.stats.reset()
+    assert lib.read_files(paths) == [files[p] for p in paths]
+    assert a.stats.snapshot()["critical_path"] == 0
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# revocation: another client's write/truncate/unlink recalls the lease
+# ---------------------------------------------------------------------------
+
+
+def test_other_writer_revokes_and_read_refreshes(cluster):
+    _seed(cluster, {"/d/f": b"OLD-CONTENT"})
+    a, b = _cache_agent(cluster), BAgent(cluster)
+    al, bl_ = BLib(a), BLib(b)
+    assert al.read_file("/d/f") == b"OLD-CONTENT"
+    bl_.write_file("/d/f", b"NEW")
+    # by the time b's write returned, a's lease was recalled: the next read
+    # must RPC and see the new bytes, never the cached old block
+    assert al.read_file("/d/f") == b"NEW"
+    assert a.cache_stats()["revocations"] >= 1
+    a.shutdown()
+    b.shutdown()
+
+
+def test_concurrent_writer_never_yields_stale_read(cluster):
+    """A reader hammering the cache while a writer rewrites the file: every
+    observed version must be monotonically non-decreasing, and no read may
+    return a version older than the last acknowledged write."""
+    size = 2048
+    _seed(cluster, {"/d/f": b"\x00" * size})
+    reader, writer = _cache_agent(cluster), BAgent(cluster)
+    fd = reader.open("/d/f", O_RDONLY)
+    reader.pread(fd, size, 0)  # grab the lease
+    stop = threading.Event()
+    seen = []
+    errors = []
+
+    def read_loop():
+        try:
+            while not stop.is_set():
+                blob = reader.pread(fd, size, 0)
+                assert len(set(blob)) == 1, "torn read"
+                seen.append(blob[0])
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    t = threading.Thread(target=read_loop)
+    t.start()
+    acked = 0
+    try:
+        wfd = writer.open("/d/f", O_WRONLY)
+        for gen in range(1, 9):
+            writer.write(wfd, bytes([gen]) * size)
+            writer._fh(wfd).offset = 0  # rewrite in place
+            acked = gen
+            # a read AFTER the ack must observe at least this version
+            blob = reader.pread(fd, size, 0)
+            assert blob[0] >= acked, (blob[0], acked)
+        writer.close(wfd)
+    finally:
+        stop.set()
+        t.join(10)
+    assert not errors, errors
+    assert seen == sorted(seen), "reader observed a version rollback"
+    reader.shutdown()
+    writer.shutdown()
+
+
+def test_truncate_by_other_client_revokes(cluster):
+    _seed(cluster, {"/d/f": b"long-old-content"})
+    a, b = _cache_agent(cluster), BAgent(cluster)
+    al, bl_ = BLib(a), BLib(b)
+    assert al.read_file("/d/f") == b"long-old-content"
+    bl_.write_file("/d/f", b"x")  # O_TRUNC via mode "wb": truncate + write
+    assert al.read_file("/d/f") == b"x"
+    a.shutdown()
+    b.shutdown()
+
+
+def test_unlink_by_other_client_revokes(cluster):
+    _seed(cluster, {"/d/f": b"doomed"})
+    a, b = _cache_agent(cluster), BAgent(cluster)
+    al, bl_ = BLib(a), BLib(b)
+    fd = a.open("/d/f", O_RDONLY)
+    assert a.read(fd) == b"doomed"
+    bl_.unlink("/d/f")
+    # the open fd must not serve the stale cached block after the unlink
+    # was acknowledged: the object is gone server-side (this FS reclaims
+    # eagerly, no nlink deferral), so the read surfaces ENOENT — never
+    # the cached pre-unlink bytes
+    with pytest.raises(OSError) as ei:
+        a.pread(fd, 100, 0)
+    assert ei.value.errno == errno.ENOENT
+    assert a.cache_stats()["revocations"] >= 1
+    a.close(fd)
+    a.shutdown()
+    b.shutdown()
+
+
+def test_unlink_by_lease_holder_leaves_no_server_entry(cluster):
+    """The unlinker's own lease entry must not leak: the file_id is dead
+    and never reused, so nothing would ever clean it up later."""
+    _seed(cluster, {"/d/f": b"read-then-deleted"})
+    a = _cache_agent(cluster)
+    lib = BLib(a)
+    assert lib.read_file("/d/f") == b"read-then-deleted"
+    host = _file_host(a, "/d/f")
+    assert cluster.servers[host].lease_count() == 1
+    lib.unlink("/d/f")
+    assert cluster.servers[host].lease_count() == 0
+    assert a.cache_stats()["leased_files"] == 0
+    assert a.cache_stats()["cached_blocks"] == 0
+    a.shutdown()
+
+
+def test_revoke_ordering_inside_batch_envelope(cluster):
+    """WRITE sub-messages inside a BATCH envelope keep per-op revoke
+    semantics: by the time the envelope is acked, every touched file's
+    lease holders have been recalled."""
+    _seed(cluster, {"/d/f1": b"old-1", "/d/f2": b"old-2"})
+    a, w = _cache_agent(cluster), BAgent(cluster)
+    al = BLib(a)
+    assert al.read_file("/d/f1") == b"old-1"
+    assert al.read_file("/d/f2") == b"old-2"
+    by_host = {}
+    for path, payload in (("/d/f1", b"NEW-1"), ("/d/f2", b"NEW-2")):
+        w.warm("/d")
+        host = _file_host(w, path)
+        msg = Message(
+            MsgType.WRITE,
+            {
+                "file_id": _file_id(w, path),
+                "offset": 0,
+                "truncate": True,
+                "client_id": w.client_id,
+            },
+            payload,
+        )
+        by_host.setdefault(host, []).append(msg)
+    for host, msgs in by_host.items():
+        resps = w._rpc_batch(host, msgs)
+        assert all(r.type is not MsgType.ERROR for r in resps)
+    assert al.read_file("/d/f1") == b"NEW-1"
+    assert al.read_file("/d/f2") == b"NEW-2"
+    assert a.cache_stats()["revocations"] >= 2
+    a.shutdown()
+    w.shutdown()
+
+
+def test_read_response_crossing_revoke_is_not_cached(cluster):
+    """The generation check: a READ response that was already composed when
+    another client's write revoked the lease must NOT be installed — else
+    the cache would serve pre-write data forever."""
+    _seed(cluster, {"/d/f": b"OLD" * 100})
+    a, b = _cache_agent(cluster), BAgent(cluster)
+    a.warm("/d")
+    host = _file_host(a, "/d/f")
+    gate = _Gate(cluster, host, (MsgType.READ,), times=1)
+    got = []
+    try:
+        t = threading.Thread(
+            target=lambda: got.append(a.pread(a.open("/d/f", O_RDONLY), 300, 0))
+        )
+        t.start()
+        while gate.seen == 0:  # the READ is parked at the gate
+            time.sleep(0.005)
+        BLib(b).write_file("/d/f", b"FRESH")  # revokes (a holds no block yet)
+        gate.restore()
+        t.join(10)
+    finally:
+        gate.restore()
+    assert got == [b"OLD" * 100]  # concurrent read: old data is legal...
+    a.stats.reset()
+    assert BLib(a).read_file("/d/f") == b"FRESH"  # ...but must not stick
+    assert a.stats.snapshot()["critical_path"] >= 1  # refetched, not served
+    a.shutdown()
+    b.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# eviction under the byte budget
+# ---------------------------------------------------------------------------
+
+
+def test_lru_eviction_bounds_cached_bytes(cluster):
+    files = {f"/d/e{i}": bytes([i]) * 4096 for i in range(6)}
+    _seed(cluster, files)
+    a = _cache_agent(cluster, cache_budget=3 * 4096)
+    lib = BLib(a)
+    for path, data in sorted(files.items()):
+        assert lib.read_file(path) == data
+    st = a.cache_stats()
+    assert st["cached_bytes"] <= 3 * 4096
+    assert st["evictions"] >= 3
+    # evicted files refetch (and still read correctly); resident ones don't
+    a.stats.reset()
+    assert lib.read_file("/d/e0") == b"\x00" * 4096  # LRU-evicted: RPC
+    assert a.stats.snapshot()["critical_path"] >= 1
+    a.stats.reset()
+    assert lib.read_file("/d/e5") == b"\x05" * 4096  # newest: cache hit
+    assert a.stats.snapshot()["critical_path"] == 0
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# write-behind integration: dirty extents shadow clean blocks
+# ---------------------------------------------------------------------------
+
+
+def test_dirty_extents_shadow_cached_blocks_zero_rpcs(cluster):
+    _seed(cluster, {"/d/f": b"0123456789"})
+    a = _cache_agent(cluster, write_behind=True)
+    fd = a.open("/d/f", O_RDWR)
+    assert a.read(fd) == b"0123456789"  # cold fill
+    gate = _Gate(cluster, _file_host(a, "/d/f"), (MsgType.WRITE, MsgType.BATCH))
+    try:
+        a.stats.reset()
+        wfd = a.open("/d/f", O_WRONLY)
+        a.write(wfd, b"AB")  # buffered; flush parks at the gate
+        # read-your-writes WITHOUT a drain: buffered bytes shadow the
+        # cached clean blocks, so this costs zero RPCs even mid-flush
+        assert a.pread(fd, 10, 0) == b"AB23456789"
+        assert a.stats.snapshot()["critical_path"] == 0
+    finally:
+        gate.restore()
+    a.close(wfd)
+    assert a.drain() == 0
+    # flushed extents were patched into the cache: still zero-RPC, new data
+    a.stats.reset()
+    assert a.pread(fd, 10, 0) == b"AB23456789"
+    assert a.stats.snapshot()["critical_path"] == 0
+    a.close(fd)
+    a.shutdown()
+
+
+def test_shadow_extends_beyond_cached_eof(cluster):
+    _seed(cluster, {"/d/f": b"base"})
+    a = _cache_agent(cluster, write_behind=True)
+    fd = a.open("/d/f", O_RDWR)
+    assert a.read(fd) == b"base"
+    wfd = a.open("/d/f", O_WRONLY)
+    a._fh(wfd).offset = 4
+    a.stats.reset()
+    a.write(wfd, b"-appended")
+    assert a.pread(fd, 100, 0) == b"base-appended"
+    assert a.stats.snapshot()["critical_path"] == 0
+    a.close(wfd)
+    assert a.drain() == 0
+    assert BLib(a).read_file("/d/f") == b"base-appended"
+    a.close(fd)
+    a.shutdown()
+
+
+def test_sync_write_patches_cache_in_place(cluster):
+    _seed(cluster, {"/d/f": b"0123456789"})
+    a = _cache_agent(cluster)  # synchronous writes
+    fd = a.open("/d/f", O_RDWR)
+    assert a.read(fd) == b"0123456789"
+    a.write(fd, b"XY")  # offset 10: appends (server acks size 12)
+    a.stats.reset()
+    assert a.pread(fd, 20, 0) == b"0123456789XY"
+    assert a.stats.snapshot()["critical_path"] == 0  # patched, not refetched
+    a.close(fd)
+    a.shutdown()
+
+
+def test_own_trunc_drops_cache(cluster):
+    _seed(cluster, {"/d/f": b"much-longer-old-content"})
+    a = _cache_agent(cluster)
+    lib = BLib(a)
+    assert lib.read_file("/d/f") == b"much-longer-old-content"
+    lib.write_file("/d/f", b"new")  # O_TRUNC path
+    assert lib.read_file("/d/f") == b"new"
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# restart distrust + TCP end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_restart_invalidates_cached_incarnation(cluster):
+    _seed(cluster, {"/d/f": b"survivor"})
+    a = _cache_agent(cluster)
+    lib = BLib(a)
+    assert lib.read_file("/d/f") == b"survivor"
+    host = _file_host(a, "/d/f")
+    cluster.restart_server(host)  # lease table wiped, config version bumped
+    a.stats.reset()
+    # the cached incarnation no longer matches the config: the agent must
+    # distrust its blocks and go back to the server
+    assert lib.read_file("/d/f") == b"survivor"
+    assert a.stats.snapshot()["critical_path"] >= 1
+    a.shutdown()
+
+
+def test_restart_then_other_writer_never_stale(cluster):
+    """The nasty restart case: the restarted server forgot our lease, so a
+    later write by another client triggers NO revoke.  The cache must
+    distrust blocks stamped by the dead incarnation on its own."""
+    _seed(cluster, {"/d/f": b"before-restart"})
+    a, b = _cache_agent(cluster), BAgent(cluster)
+    al, bl_ = BLib(a), BLib(b)
+    assert al.read_file("/d/f") == b"before-restart"
+    host = _file_host(a, "/d/f")
+    cluster.restart_server(host)  # lease table wiped
+    bl_.write_file("/d/f", b"after-restart")  # no revoke reaches a
+    assert al.read_file("/d/f") == b"after-restart"
+    a.shutdown()
+    b.shutdown()
+
+
+def test_stamp_orders_out_of_order_acks():
+    """Unit-level: fills/patches older than the cache's (incarnation,
+    wseq) stamp are discarded, so two of our own acks processed in the
+    inverse of the server's apply order cannot regress the cache."""
+    from repro.core.bagent import _PageCache
+
+    key = (1, 7)
+    c = _PageCache(block_size=4, budget=1 << 20)
+    c.fill(key, 0, 0, b"AAAA", 4, ver=0, wseq=1)
+    assert c.serve(key, 0, 4, 0) == (b"AAAA", 4)
+    # the server applied wseq=2 then wseq=3; acks arrive inverted
+    c.patch(key, 0, [(0, b"CCCC")], 4, ver=0, wseq=3)
+    c.patch(key, 0, [(0, b"BBBB")], 4, ver=0, wseq=2)  # stale: discarded
+    assert c.serve(key, 0, 4, 0) == (b"CCCC", 4)
+    # a READ response composed before wseq=3 cannot re-install old bytes
+    c.fill(key, 0, 0, b"BBBB", 4, ver=0, wseq=2)
+    assert c.serve(key, 0, 4, 0) == (b"CCCC", 4)
+    # an incarnation bump invalidates everything stamped by the old one
+    assert c.serve(key, 0, 4, 1) is None
+    assert c.stats()["cached_blocks"] == 0
+
+
+def test_note_mutation_blocks_stale_refill():
+    """After our own truncate (blocks dropped, nothing patched back), a
+    pre-truncate READ response still in flight must not refill the cache."""
+    from repro.core.bagent import _PageCache
+
+    key = (2, 9)
+    c = _PageCache(block_size=4, budget=1 << 20)
+    c.fill(key, 0, 0, b"OLD!", 4, ver=0, wseq=5)
+    c.drop(key)
+    c.note_mutation(key, 0, 6)  # the truncate was acked at wseq=6
+    c.fill(key, 0, 0, b"OLD!", 4, ver=0, wseq=5)  # in-flight stale READ
+    assert c.serve(key, 0, 4, 0) is None
+    c.fill(key, 0, 0, b"", 0, ver=0, wseq=6)  # post-truncate READ
+    assert c.serve(key, 0, 4, 0) == (b"", 0)
+
+
+def test_cache_over_tcp_with_revoke(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=2, transport=TCPTransport())
+    try:
+        seed = BAgent(c)
+        sl = BLib(seed)
+        sl.makedirs("/t")
+        sl.write_file("/t/f", b"tcp-old")
+        seed.drain()
+        a, b = BAgent(c, read_cache=True), BAgent(c)
+        al, bl_ = BLib(a), BLib(b)
+        assert al.read_file("/t/f") == b"tcp-old"
+        a.stats.reset()
+        assert al.read_file("/t/f") == b"tcp-old"
+        assert a.stats.snapshot()["critical_path"] == 0
+        bl_.write_file("/t/f", b"tcp-new")  # REVOKE_LEASE over a real socket
+        assert al.read_file("/t/f") == b"tcp-new"
+        for agent in (seed, a, b):
+            agent.shutdown()
+    finally:
+        c.shutdown()
+
+
+def test_open_trunc_not_served_from_cache(cluster):
+    """An O_TRUNC handle owes the server a truncate before any read: the
+    cache must not short-circuit it into serving pre-truncation bytes."""
+    _seed(cluster, {"/d/f": b"pre-truncation-content"})
+    a = _cache_agent(cluster)
+    assert BLib(a).read_file("/d/f") == b"pre-truncation-content"
+    fd = a.open("/d/f", O_RDWR | O_TRUNC)
+    assert a.read(fd) == b""
+    a.close(fd)
+    assert BLib(a).read_file("/d/f") == b""
+    a.shutdown()
+
+
+def test_created_file_write_then_read(cluster):
+    _seed(cluster, {"/d/f": b"x"})  # ensures /d exists
+    a = _cache_agent(cluster, write_behind=True)
+    fd = a.open("/d/new", O_WRONLY | O_CREAT)
+    a.write(fd, b"fresh-file")
+    a.close(fd)
+    assert BLib(a).read_file("/d/new") == b"fresh-file"
+    assert a.drain() == 0
+    a.shutdown()

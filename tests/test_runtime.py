@@ -1,13 +1,10 @@
 """Runtime tests: sharding rules, optimizer, compression, pipeline-parallel,
 elastic restore, end-to-end trainer convergence + crash/restart."""
-import os
-import tempfile
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import TRAIN_4K, get_config
 from repro.optim import AdamWConfig, adamw_update, init_opt_state, lr_at
@@ -30,7 +27,8 @@ def test_adamw_converges_quadratic():
                       total_steps=200)
     params = {"w": jnp.array([5.0, -3.0])}
     opt = init_opt_state(params, cfg)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     for _ in range(150):
         g = jax.grad(loss)(params)
         params, opt, _ = adamw_update(g, opt, params, cfg)
@@ -124,7 +122,8 @@ def test_pipeline_forward_matches_sequential():
     ws = jax.random.normal(key, (s_stages, d, d)) * 0.1
     x = jax.random.normal(jax.random.PRNGKey(1), (b, d))
 
-    layer_fn = lambda w, h: jnp.tanh(h @ w)
+    def layer_fn(w, h):
+        return jnp.tanh(h @ w)
     ref = x
     for i in range(s_stages):
         ref = layer_fn(ws[i], ref)

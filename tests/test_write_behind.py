@@ -13,7 +13,7 @@ from repro.core import (BAgent, BLib, BuffetCluster, Inode, Message, MsgType,
                         O_CREAT, O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY,
                         SERVER_OPS, TCPTransport)
 from repro.core.perms import FSError
-from repro.core.wire import error as wire_error, ok
+from repro.core.wire import error as wire_error
 
 
 @pytest.fixture()
