@@ -51,6 +51,14 @@ def extract(rows: List[dict]) -> Dict[str, float]:
             key = f"fig7/{r['system']}/n{r['n_files']}"
             out[key + "/warm_crit_per_read"] = r["warm_crit_per_read"]
             out[key + "/cold_crit_per_read"] = r["cold_crit_per_read"]
+        elif bench == "fig8_stripe" and r.get("mode") == "streaming":
+            key = f"fig8/{r['system']}/h{r['hosts']}/streaming"
+            out[key + "/crit_per_pass"] = r["crit_rpcs_per_pass"]
+            # gated as a DEFICIT (4 - hosts touched) because regressions
+            # here point down: fewer hosts reached means the scatter-gather
+            # quietly collapsed onto fewer servers, and the gate only fails
+            # on values ABOVE the committed ceiling
+            out[key + "/fanout_deficit"] = 4 - r["fanout_hosts"]
         elif bench == "rpc_table":
             key = f"rpc/{r['system']}/{r['op']}"
             out[key + "/warm_critical"] = r["warm_critical"]

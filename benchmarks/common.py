@@ -28,11 +28,13 @@ DEFAULT_LATENCY = LatencyModel(rtt_us=1500.0, per_mib_us=2000.0,
 
 
 @contextmanager
-def fresh_cluster(n_servers: int = 4, latency: LatencyModel = DEFAULT_LATENCY
+def fresh_cluster(n_servers: int = 4, latency: LatencyModel = DEFAULT_LATENCY,
+                  stripe_count: int = 1, stripe_size: int = 1 << 20
                   ) -> Iterator[BuffetCluster]:
     root = tempfile.mkdtemp(prefix="buffet_bench_")
     cluster = BuffetCluster(root_dir=root, n_servers=n_servers,
-                            latency=latency)
+                            latency=latency, stripe_count=stripe_count,
+                            stripe_size=stripe_size)
     try:
         yield cluster
     finally:
@@ -117,6 +119,12 @@ def make_client(kind: str, cluster: BuffetCluster):
     if kind == "buffetfs-cache":
         # lease-consistent client page cache: warm reads cost zero RPCs
         agent = BAgent(cluster, read_cache=True)
+        return agent, agent
+    if kind == "buffetfs-ra":
+        # page cache + sequential-read detector issuing async readahead
+        agent = BAgent(cluster, read_cache=True, readahead=True,
+                       cache_budget=64 * 1024 * 1024,
+                       readahead_window=4 * 1024 * 1024)
         return agent, agent
     if kind == "lustre-normal":
         c = LustreNormalClient(cluster)

@@ -1,0 +1,297 @@
+"""Figure 8 (extension): striped file objects — streaming bandwidth and
+hot-file concurrency vs host count, BuffetFS vs Lustre-Normal.
+
+Until this extension every BuffetFS file lived whole on its home host, so
+large-file bandwidth and hot-file service rate were capped by ONE server
+while the Lustre-Normal baseline already spread data objects across its
+OSSes.  With striping, CREATE allocates a layout (stripe_size + ordered
+host list, hosts[0] = the coherence home) that rides in the dentry; reads
+and writes split at stripe boundaries and fan out to the stripe hosts in
+parallel (~1 RTT + max-per-host service instead of a serial sum), while
+the home host keeps serving size/wseq/leases — and the stripe-0 bytes —
+in the same single RPC as before.
+
+Measured units:
+
+  streaming   whole-file read of one large file, repeated warm (namespace
+              cached, no data cache): wall-clock MB/s, critical RPCs per
+              pass, and the number of hosts actually touched (fan-out).
+              Swept over stripe host counts; 1 host == the old single-host
+              placement.  Lustre-Normal reads the same file whole from the
+              one OSS that stores it (its striping is per-file, so a
+              single file cannot exceed one server).
+  hotfile     N concurrent readers of the SAME file: aggregate MB/s.  The
+              per-server service serialization that caps a single host is
+              spread across the stripe hosts.
+  readahead   informational: block-wise sequential streaming through a
+              page-cache agent with the sequential-read detector on; the
+              async readahead fills the cache off the critical path.
+
+Acceptance (verdict lines): 4-host striped streaming >= 3x the single-host
+bandwidth, and >= Lustre-Normal's.  Warm small-file behavior is fig7's
+job and must be unchanged.
+
+    PYTHONPATH=src python -m benchmarks.fig8_stripe [--quick]
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Sequence
+
+from repro.core import BAgent, BLib
+from repro.core.transport import LatencyModel
+
+from .common import fresh_cluster, make_client, mkfiles
+
+# rtt/service match the other paper benchmarks (common.py); the per-MiB
+# transfer rate is calibrated to the paper's HDD-RAID6-backed servers
+# (~50 MB/s sustained per server under the shared-array access pattern a
+# busy cluster presents) rather than the IB line rate — for LARGE
+# transfers the storage backend, not the link, is what a single server
+# can sustain, and it is exactly the per-server ceiling striping exists
+# to break.  The InProc transport serializes transfer time per server
+# (one NIC/disk), so this number is a real per-server resource, not just
+# client-side latency.
+FIG8_LATENCY = LatencyModel(rtt_us=1500.0, per_mib_us=20000.0,
+                            service_us=800.0)
+
+FILE_MB = 32
+STRIPE_SIZE = 4 * 1024 * 1024
+HOST_COUNTS = (1, 2, 4)   # stripe hosts used by the buffetfs sweeps
+N_SERVERS = 4             # cluster size is constant; only the layout varies
+STREAM_PASSES = 3
+HOTFILE_WORKERS = 6
+PATH = "/bench/big"
+
+
+def _mkbig(cluster, system: str) -> bytes:
+    """Create the large benchmark file through a zero-latency admin path."""
+    lat = cluster.transport.latency
+    cluster.transport.latency = LatencyModel(0, 0, 0)
+    blob = (b"\x5a" * (1024 * 1024)) * FILE_MB
+    if system == "buffetfs":
+        agent = BAgent(cluster)
+        BLib(agent).makedirs("/bench")
+        BLib(agent).write_file(PATH, blob)
+        agent.drain()
+        agent.shutdown()
+    else:
+        mkfiles(cluster, n_files=0, size=0, system=system)  # just /bench
+        import errno as _errno
+        from repro.core import LustreNormalClient
+        from repro.core.inode import Inode
+        from repro.core.wire import Message, MsgType
+        c = LustreNormalClient(cluster)
+        parent_fid, _ = c._resolve_parent(PATH)
+        oss = 1 if cluster.n_servers > 1 else 0
+        r1 = c._rpc(oss, Message(MsgType.MKNOD_OBJ, {
+            "is_dir": False, "mode": 0o644, "uid": 0, "gid": 0}))
+        c._rpc(0, Message(MsgType.LINK_DENTRY, {
+            "parent": parent_fid, "name": PATH.rsplit("/", 1)[1],
+            "ino": r1.header["ino"], "perm": r1.header["perm"]}))
+        fid = Inode.unpack(r1.header["ino"]).file_id
+        c._rpc(oss, Message(MsgType.WRITE, {"file_id": fid, "offset": 0},
+                            blob))
+        c.drain()
+        c.shutdown()
+    cluster.transport.latency = lat
+    return blob
+
+
+def _stream_row(system: str, hosts: int, client, owner, passes: int) -> Dict:
+    # warm-up: namespace cached + deferred open record delivered
+    fd = client.open(PATH)
+    client.read(fd)
+    client.close(fd)
+    owner.stats.reset()
+    times = []
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        fd = client.open(PATH)
+        client.read(fd)
+        client.close(fd)
+        times.append(time.perf_counter() - t0)
+    # best-of-passes: scheduler wakeups and GIL queueing only ever ADD
+    # time to a fan-out of many short sleeps, so the minimum is the
+    # cleanest estimate of the protocol cost (same argument as the
+    # median in common.timeit_us)
+    best = min(times)
+    snap = owner.stats.snapshot()
+    return {
+        "bench": "fig8_stripe", "mode": "streaming", "system": system,
+        "hosts": hosts, "mb": FILE_MB, "passes": passes,
+        "pass_seconds": round(best, 4),
+        "mb_per_s": round(FILE_MB / best, 1),
+        "crit_rpcs_per_pass": round(snap["critical_path"] / passes, 4),
+        "fanout_hosts": len(snap["by_host"]),
+    }
+
+
+def _hotfile_row(system: str, hosts: int, cluster, workers: int) -> Dict:
+    client, owner = make_client(
+        "buffetfs" if system == "buffetfs" else system, cluster)
+    fd = client.open(PATH)  # warm the namespace once
+    client.read(fd)
+    client.close(fd)
+    owner.stats.reset()
+    failures: List[BaseException] = []
+
+    def reader() -> None:
+        try:
+            f = client.open(PATH)
+            client.read(f)
+            client.close(f)
+        except BaseException as e:
+            failures.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    if failures:
+        raise failures[0]
+    snap = owner.stats.snapshot()
+    if hasattr(client, "shutdown"):
+        client.shutdown()
+    return {
+        "bench": "fig8_stripe", "mode": "hotfile", "system": system,
+        "hosts": hosts, "mb": FILE_MB, "workers": workers,
+        "total_seconds": round(dt, 4),
+        "agg_mb_per_s": round(FILE_MB * workers / dt, 1),
+        "fanout_hosts": len(snap["by_host"]),
+    }
+
+
+def _readahead_row(cluster, hosts: int) -> Dict:
+    """Informational: 1 MiB sequential reads through the page-cache agent
+    with the readahead detector on — prefetch fills the cache off the
+    critical path, so some demand reads turn into local hits."""
+    client, owner = make_client("buffetfs-ra", cluster)
+    step = 1024 * 1024
+    fd = client.open(PATH)
+    client.pread(fd, 1, 0)  # lease + size established
+    owner.stats.reset()
+    t0 = time.perf_counter()
+    total = 0
+    while True:
+        d = client.read(fd, step)
+        if not d:
+            break
+        total += len(d)
+    dt = time.perf_counter() - t0
+    client.close(fd)
+    client.drain()
+    snap = owner.stats.snapshot()
+    cache = client.cache_stats()
+    client.shutdown()
+    return {
+        "bench": "fig8_stripe", "mode": "readahead", "system": "buffetfs-ra",
+        "hosts": hosts, "mb": FILE_MB,
+        "pass_seconds": round(dt, 4),
+        "mb_per_s": round(total / (1024 * 1024) / dt, 1),
+        "crit_rpcs": snap["critical_path"],
+        "async_rpcs": snap["async_offpath"],
+        "readaheads": cache["readaheads"],
+        "cache_hits": cache["hits"],
+    }
+
+
+def run(host_counts: Sequence[int] = HOST_COUNTS,
+        latency: LatencyModel = FIG8_LATENCY,
+        passes: int = STREAM_PASSES,
+        hotfile_workers: int = HOTFILE_WORKERS,
+        with_readahead: bool = True) -> List[Dict]:
+    rows: List[Dict] = []
+    for hosts in host_counts:
+        with fresh_cluster(n_servers=N_SERVERS, latency=latency,
+                           stripe_count=hosts,
+                           stripe_size=STRIPE_SIZE) as cluster:
+            _mkbig(cluster, "buffetfs")
+            client, owner = make_client("buffetfs", cluster)
+            rows.append(_stream_row("buffetfs", hosts, client, owner, passes))
+            client.shutdown()
+            if hotfile_workers:
+                rows.append(_hotfile_row("buffetfs", hosts, cluster,
+                                         hotfile_workers))
+            if with_readahead and hosts == max(host_counts):
+                rows.append(_readahead_row(cluster, hosts))
+    with fresh_cluster(n_servers=N_SERVERS, latency=latency) as cluster:
+        _mkbig(cluster, "lustre-normal")
+        client, owner = make_client("lustre-normal", cluster)
+        rows.append(_stream_row("lustre-normal", 1, client, owner, passes))
+        client.shutdown()
+        if hotfile_workers:
+            rows.append(_hotfile_row("lustre-normal", 1, cluster,
+                                     hotfile_workers))
+    return rows
+
+
+def verdict(rows: List[Dict]) -> List[str]:
+    """Acceptance: 4-host striped streaming >= 3x single-host bandwidth
+    and >= Lustre-Normal; the scatter-gather really fanned out."""
+    stream = {(r["system"], r["hosts"]): r for r in rows
+              if r["mode"] == "streaming"}
+    lines: List[str] = []
+    s1 = stream.get(("buffetfs", 1))
+    s4 = stream.get(("buffetfs", 4))
+    ln = stream.get(("lustre-normal", 1))
+    if s1 and s4:
+        ratio = s4["mb_per_s"] / max(s1["mb_per_s"], 1e-9)
+        ok = ratio >= 3.0
+        lines.append(
+            f"streaming: 4-host {s4['mb_per_s']}MB/s vs 1-host "
+            f"{s1['mb_per_s']}MB/s = {ratio:.1f}x "
+            f"({'PASS' if ok else 'FAIL'} >=3x)")
+        ok = s4["fanout_hosts"] >= 4
+        lines.append(
+            f"streaming: 4-host read touched {s4['fanout_hosts']} hosts "
+            f"({'PASS' if ok else 'FAIL'} fan-out=4)")
+    if s4 and ln:
+        ok = s4["mb_per_s"] >= ln["mb_per_s"]
+        lines.append(
+            f"streaming: buffetfs-striped {s4['mb_per_s']}MB/s vs "
+            f"lustre-normal {ln['mb_per_s']}MB/s "
+            f"({'PASS' if ok else 'FAIL'} >= baseline)")
+    hot = {(r["system"], r["hosts"]): r for r in rows
+           if r["mode"] == "hotfile"}
+    h1, h4 = hot.get(("buffetfs", 1)), hot.get(("buffetfs", 4))
+    if h1 and h4:
+        ok = h4["agg_mb_per_s"] > h1["agg_mb_per_s"]
+        lines.append(
+            f"hotfile: 4-host {h4['agg_mb_per_s']}MB/s aggregate vs "
+            f"1-host {h1['agg_mb_per_s']}MB/s "
+            f"({'PASS' if ok else 'FAIL'} concurrency scales)")
+    return lines
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    rows = run(passes=2 if args.quick else STREAM_PASSES,
+               hotfile_workers=0 if args.quick else HOTFILE_WORKERS)
+    for r in rows:
+        if r["mode"] == "streaming":
+            print(f"fig8,streaming,{r['system']},h{r['hosts']},"
+                  f"{r['mb_per_s']}MB/s,{r['pass_seconds']}s/pass,"
+                  f"crit={r['crit_rpcs_per_pass']},fanout={r['fanout_hosts']}")
+        elif r["mode"] == "hotfile":
+            print(f"fig8,hotfile,{r['system']},h{r['hosts']},"
+                  f"{r['agg_mb_per_s']}MB/s,w={r['workers']}")
+        else:
+            print(f"fig8,readahead,h{r['hosts']},{r['mb_per_s']}MB/s,"
+                  f"ra={r['readaheads']},hits={r['cache_hits']},"
+                  f"crit={r['crit_rpcs']},async={r['async_rpcs']}")
+    for line in verdict(rows):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,8 +21,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig3_latency, fig4_concurrency, fig5_batch,
-                            fig6_write, fig7_readcache, invalidation,
-                            rpc_table)
+                            fig6_write, fig7_readcache, fig8_stripe,
+                            invalidation, rpc_table)
 
     print("name,us_per_call,derived")
     rows = []
@@ -69,6 +69,26 @@ def main() -> None:
               f"{round(r['warm_seconds'] * 1e6 / max(1, r['n_files'] * r['warm_passes']), 1)},"
               f"warm_crit_per_read={r['warm_crit_per_read']} "
               f"cold_crit_per_read={r['cold_crit_per_read']}", flush=True)
+
+    # Figure 8 (extension): striped file objects, scatter-gather I/O
+    for r in fig8_stripe.run(passes=2 if args.quick else
+                             fig8_stripe.STREAM_PASSES,
+                             hotfile_workers=0 if args.quick
+                             else fig8_stripe.HOTFILE_WORKERS):
+        rows.append(r)
+        if r["mode"] == "streaming":
+            print(f"fig8_{r['system']}_h{r['hosts']}_stream,"
+                  f"{r['mb_per_s']}MBps,"
+                  f"crit_per_pass={r['crit_rpcs_per_pass']} "
+                  f"fanout={r['fanout_hosts']}", flush=True)
+        elif r["mode"] == "hotfile":
+            print(f"fig8_{r['system']}_h{r['hosts']}_hotfile,"
+                  f"{r['agg_mb_per_s']}MBps,workers={r['workers']}",
+                  flush=True)
+        else:
+            print(f"fig8_readahead_h{r['hosts']},{r['mb_per_s']}MBps,"
+                  f"ra={r['readaheads']} hits={r['cache_hits']} "
+                  f"crit={r['crit_rpcs']}", flush=True)
 
     # RPC table (the mechanism itself)
     for r in rpc_table.run():
@@ -140,6 +160,21 @@ def main() -> None:
                     f"fig7 n={n}: {sysname} warm read "
                     f"{o['warm_crit_per_read']} critical RPCs/read (<1: "
                     f"the no-cache contrast lost its RPC)")
+    f8 = [r for r in rows if r.get("bench") == "fig8_stripe"
+          and r.get("mode") == "streaming"]
+    s4 = next((r for r in f8 if r["system"] == "buffetfs"
+               and r["hosts"] == 4), None)
+    if s4 and s4["fanout_hosts"] < 4:
+        failures.append(
+            f"fig8: 4-host striped read touched only {s4['fanout_hosts']} "
+            f"hosts (scatter-gather lost its fan-out)")
+    s1 = next((r for r in f8 if r["system"] == "buffetfs"
+               and r["hosts"] == 1), None)
+    if s1 and s1["crit_rpcs_per_pass"] > 1:
+        failures.append(
+            f"fig8: single-host streaming read cost "
+            f"{s1['crit_rpcs_per_pass']} critical RPCs (expected 1: the "
+            f"unstriped fast path regressed)")
     if failures:
         for f in failures:
             print(f"VERDICT FAIL: {f}", file=sys.stderr)

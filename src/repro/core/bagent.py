@@ -53,7 +53,7 @@ from .perms import (Credentials, FSError, O_CREAT, PermRecord, R_OK, W_OK,
 from .service import MAX_TREE_DEPTH
 from .transport import Transport
 from .wire import (Message, MsgType, RpcStats, error as wire_error, ok,
-                   pack_batch, unpack_batch)
+                   pack_batch, stripe_spans, unpack_batch)
 
 _agent_counter = itertools.count()
 
@@ -71,6 +71,10 @@ MAX_FLUSH_ENVELOPE_BYTES = 4 * 1024 * 1024
 DEFAULT_CACHE_BLOCK = 64 * 1024
 DEFAULT_CACHE_BUDGET = 32 * 1024 * 1024
 
+# readahead default: how far past the current offset the sequential-read
+# detector prefetches into the page cache (clipped to EOF)
+DEFAULT_READAHEAD_WINDOW = 512 * 1024
+
 
 def _chunks(items: List, n: int) -> List[List]:
     n = max(1, n)  # a non-positive batch size must not silently drop work
@@ -86,14 +90,20 @@ def _ino_key(ino: int) -> Tuple[int, int]:
 class TreeNode:
     """Node of the client-cached partial directory tree."""
 
-    __slots__ = ("name", "ino", "perm", "children", "valid", "parent")
+    __slots__ = ("name", "ino", "perm", "children", "valid", "parent",
+                 "layout")
 
     def __init__(self, name: str, ino: int, perm: PermRecord,
-                 parent: Optional["TreeNode"] = None) -> None:
+                 parent: Optional["TreeNode"] = None,
+                 layout: Optional[Dict] = None) -> None:
         self.name = name
         self.ino = ino
         self.perm = perm
         self.parent = parent
+        # stripe layout from the dentry (None => unstriped): like the
+        # 10-byte perm record, it lets the client plan a striped
+        # scatter-gather with zero metadata RPCs
+        self.layout = layout
         # None => directory data not fetched (or not a directory)
         self.children: Optional[Dict[str, TreeNode]] = None
         self.valid = True  # False => server invalidated; must REVALIDATE
@@ -177,6 +187,13 @@ class _PageCache:
     def gen(self, key: Tuple[int, int]) -> int:
         with self._lock:
             return self._gen.get(key, 0)
+
+    def known_size(self, key: Tuple[int, int]) -> Optional[int]:
+        """Lease-validated object size, or None.  Counter-neutral on
+        purpose: the readahead detector polls this and must not skew the
+        hit/miss accounting the benchmarks assert on."""
+        with self._lock:
+            return self._sizes.get(key) if key in self._leased else None
 
     def revoke(self, key: Tuple[int, int]) -> None:
         """Server recalled the lease: bump the generation (kills in-flight
@@ -404,6 +421,12 @@ class FileHandle:
     offset: int = 0
     incomplete_open: bool = True   # deferred open step-2 not yet done
     pending_trunc: bool = False
+    layout: Optional[Dict] = None  # stripe layout from the dentry (or None)
+    # sequential-read detector state (readahead): the offset the next read
+    # must start at to count as sequential, and the high-water mark up to
+    # which readahead has already been scheduled for this handle
+    ra_next: int = -1
+    ra_sched: int = 0
     # --- write-behind state (all guarded by the agent's _wb_cond) ---
     dirty: List[_Extent] = field(default_factory=list)
     wb_inflight: bool = False      # a flusher is carrying this handle's data
@@ -421,7 +444,9 @@ class BAgent:
                  dirty_budget: int = DEFAULT_DIRTY_BUDGET,
                  read_cache: bool = False,
                  cache_block: int = DEFAULT_CACHE_BLOCK,
-                 cache_budget: int = DEFAULT_CACHE_BUDGET) -> None:
+                 cache_budget: int = DEFAULT_CACHE_BUDGET,
+                 readahead: bool = False,
+                 readahead_window: int = DEFAULT_READAHEAD_WINDOW) -> None:
         self.cluster = cluster
         self.transport: Transport = cluster.transport
         self.config: ClusterConfig = cluster.config
@@ -482,6 +507,22 @@ class BAgent:
         # lease-consistent page cache (None => every read RPCs as before)
         self._cache: Optional[_PageCache] = (
             _PageCache(cache_block, cache_budget) if read_cache else None)
+
+        # asynchronous readahead (requires the page cache: the prefetched
+        # blocks land there under the same lease/generation discipline as
+        # any demand fill, so coherence is untouched).  A single daemon
+        # worker keeps readahead RPCs strictly off the critical path.
+        self.readahead_window = readahead_window
+        self._ra_q: Optional["queue.Queue"] = (
+            queue.Queue() if (readahead and read_cache) else None)
+        # in-flight prefetch windows: (key, lo, hi) -> completion event, so
+        # a demand read that lands inside one WAITS for the fill instead of
+        # duplicating the RPCs it is about to satisfy
+        self._ra_inflight: Dict[Tuple, threading.Event] = {}
+        self._ra_lock = threading.Lock()
+        self.readaheads = 0  # windows issued (monotonic, informational)
+        if self._ra_q is not None:
+            threading.Thread(target=self._ra_worker, daemon=True).start()
 
         # invalidation callback endpoint (server -> client RPCs, §3.4)
         from .transport import TCPTransport
@@ -636,15 +677,17 @@ class BAgent:
                 if child is None or _ino_key(child.ino) != _ino_key(e["ino"]):
                     # unseen name, or the name now points at a different
                     # object: start a fresh node
-                    child = TreeNode(e["name"], e["ino"], perm, parent=node)
+                    child = TreeNode(e["name"], e["ino"], perm, parent=node,
+                                     layout=e.get("layout"))
                     self._node_index[_ino_key(child.ino)] = child
                 else:
                     # refresh what the parent's entries carry (ino version,
-                    # perm) but do NOT touch child.valid: that flag covers
-                    # the child's OWN listing, whose invalidations arrive
-                    # separately — re-marking it valid here would resurrect
-                    # a stale child dentry cache (§3.4 violation)
+                    # perm, layout) but do NOT touch child.valid: that flag
+                    # covers the child's OWN listing, whose invalidations
+                    # arrive separately — re-marking it valid here would
+                    # resurrect a stale child dentry cache (§3.4 violation)
                     child.ino, child.perm = e["ino"], perm
+                    child.layout = e.get("layout")
                 fresh[e["name"]] = child
             for name, old_child in old.items():
                 if fresh.get(name) is not old_child:
@@ -721,21 +764,31 @@ class BAgent:
             fd = self._next_fd
             self._next_fd += 1
             self._fds[fd] = FileHandle(fd=fd, ino=node.ino, flags=flags, path=path,
-                                       pending_trunc=bool(flags & O_TRUNC))
+                                       pending_trunc=bool(flags & O_TRUNC),
+                                       layout=node.layout)
         return fd
 
-    def _create_msg(self, pino: Inode, name: str, mode: int) -> Message:
-        return Message(MsgType.CREATE, {
-            "parent": pino.file_id, "name": name, "mode": mode,
-            "uid": self.cred.uid, "gid": self.cred.gid,
-            "client_id": self.client_id})
+    def _create_msg(self, pino: Inode, name: str, mode: int,
+                    path: str) -> Message:
+        h = {"parent": pino.file_id, "name": name, "mode": mode,
+             "uid": self.cred.uid, "gid": self.cred.gid,
+             "client_id": self.client_id}
+        # stripe layout is allocated CLIENT-side from the local cluster
+        # config (rotating placement; the parent's host stays hosts[0], the
+        # coherence home) and travels in the CREATE — the server stores it
+        # in the dentry and FileMeta.  None while striping is disabled.
+        layout = self.cluster.place_stripes(path, pino.host_id)
+        if layout is not None:
+            h["layout"] = layout
+        return Message(MsgType.CREATE, h)
 
     def _install_child(self, parent: TreeNode, name: str, header: Dict
                        ) -> TreeNode:
         """Install a CREATE/MKNOD response's (ino, perm) into the tree."""
         perm = PermRecord.unpack(bytes.fromhex(header["perm"]))
         with self._tree_lock:
-            node = TreeNode(name, header["ino"], perm, parent=parent)
+            node = TreeNode(name, header["ino"], perm, parent=parent,
+                            layout=header.get("layout"))
             self._node_index[_ino_key(node.ino)] = node
             if parent.children is not None:
                 parent.children[name] = node
@@ -743,7 +796,9 @@ class BAgent:
 
     def _create(self, parent: TreeNode, name: str, mode: int) -> TreeNode:
         pino = Inode.unpack(parent.ino)
-        resp = self._rpc(pino.host_id, self._create_msg(pino, name, mode))
+        path = parent.path().rstrip("/") + "/" + name
+        resp = self._rpc(pino.host_id, self._create_msg(pino, name, mode,
+                                                        path))
         return self._install_child(parent, name, resp.header)
 
     def _io_header(self, fh: FileHandle) -> Dict:
@@ -789,8 +844,11 @@ class BAgent:
     # ------------------------------------------------------------------
     def read(self, fd: int, n: int = -1) -> bytes:
         fh = self._fh(fd)
-        data = self._read_span(fh, fh.offset, n)
+        start = fh.offset
+        data = self._read_span(fh, start, n)
         fh.offset += len(data)
+        if self._ra_q is not None and data:
+            self._maybe_readahead(fh, start)
         return data
 
     def pread(self, fd: int, n: int, offset: int) -> bytes:
@@ -801,27 +859,231 @@ class BAgent:
         lease-gated page cache, with locally-buffered dirty extents
         shadowing the clean blocks — zero RPCs, no drain.  Cold path:
         drain the file's buffered writes (read-your-writes), flush any
-        deferred O_TRUNC, then one READ RPC whose response refills the
-        cache under the lease granted with it."""
+        deferred O_TRUNC, then fetch — one READ RPC for an unstriped
+        file; for a striped file the home host's READ supplies size/wseq/
+        lease (plus whatever prefix lives in its own chunks) and the rest
+        is gathered from the stripe hosts in parallel.  Either way the
+        result refills the cache under the lease granted with it."""
         length = n if n >= 0 else (1 << 31)
         if self._cache is not None:
             data = self._cached_read(fh, offset, length)
             if data is not None:
                 return data
-        key = _ino_key(fh.ino)
-        self._wb_drain_key(key)  # read-your-writes barrier
+            # a prefetch already racing toward this offset?  Wait for its
+            # fill and retry the cache rather than duplicating its RPCs.
+            ev = self._ra_covering(_ino_key(fh.ino), offset)
+            if ev is not None and ev.wait(5.0):
+                data = self._cached_read(fh, offset, length)
+                if data is not None:
+                    return data
+        self._wb_drain_key(_ino_key(fh.ino))  # read-your-writes barrier
         self._flush_trunc(fh)
+        return self._fetch_span(fh, offset, length)
+
+    def _ra_covering(self, key: Tuple[int, int], offset: int
+                     ) -> Optional[threading.Event]:
+        if self._ra_q is None:
+            return None
+        with self._ra_lock:
+            for (k, lo, hi), ev in self._ra_inflight.items():
+                if k == key and lo <= offset < hi:
+                    return ev
+        return None
+
+    def _fetch_span(self, fh: FileHandle, offset: int, length: int, *,
+                    critical: bool = True, record_open: bool = True) -> bytes:
+        """The RPC half of a read: home-host READ (lease grant + size +
+        wseq + any local-chunk prefix), then — for striped files — a
+        parallel CHUNK_READ scatter-gather across the stripe hosts
+        (~1 RTT + max-per-host service instead of a serial sum).  Fills
+        the page cache under the pre-RPC generation snapshot.  Readahead
+        reuses this path with ``critical=False, record_open=False`` (a
+        prefetch RPC must neither block accounting nor consume the
+        deferred-open record)."""
+        key = _ino_key(fh.ino)
         ino = Inode.unpack(fh.ino)
-        h = {"file_id": ino.file_id, "offset": offset, "length": length,
-             **self._io_header(fh)}
+        h = {"file_id": ino.file_id, "offset": offset, "length": length}
+        if record_open:
+            h.update(self._io_header(fh))
         gen, ver = self._lease_request(key, ino.host_id, h)
-        resp = self._rpc(ino.host_id, Message(MsgType.READ, h))
+        resp = self._rpc(ino.host_id, Message(MsgType.READ, h),
+                         critical=critical)
+        size = resp.header.get("size", offset + len(resp.payload))
+        if fh.layout is None:
+            data = resp.payload
+        else:
+            end = min(offset + length, size)
+            if end <= offset:
+                data = b""
+            else:
+                # the home host serves the span inline only when it covers
+                # it entirely (all-home small files: zero extra copies);
+                # otherwise the payload is empty (the server's
+                # _read_local_span is all-or-nothing) and the whole span
+                # is gathered from the stripe hosts
+                if len(resp.payload) >= end - offset:
+                    data = (resp.payload
+                            if len(resp.payload) == end - offset
+                            else resp.payload[: end - offset])
+                else:
+                    data = self._gather_chunks(ino, fh.layout, offset, end,
+                                               critical=critical)
         if self._cache is not None and resp.header.get("lease"):
-            self._cache.fill(key, gen, offset, resp.payload,
-                             resp.header.get("size",
-                                             offset + len(resp.payload)),
-                             ver, resp.header.get("wseq", 0))
-        return resp.payload
+            self._cache.fill(key, gen, offset, data, size, ver,
+                             resp.header.get("wseq", 0))
+        return data
+
+    # ------------------------------------------------------------------
+    # striped scatter-gather fan-out
+    # ------------------------------------------------------------------
+    def _fanout_hosts(self, per_host: Dict[int, List], fn) -> None:
+        """Run ``fn(host, items)`` for every host concurrently (first host
+        on the calling thread, the rest on short-lived threads — the
+        per-host pipelining inside fn is where the real parallelism is).
+        The first failure is re-raised on the caller."""
+        items = list(per_host.items())
+        if not items:
+            return
+        if len(items) == 1:
+            fn(*items[0])
+            return
+        failures: List[BaseException] = []
+
+        def runner(host: int, msgs) -> None:
+            try:
+                fn(host, msgs)
+            except BaseException as e:
+                failures.append(e)
+
+        threads = [threading.Thread(target=runner, args=(h, it))
+                   for h, it in items[1:]]
+        for t in threads:
+            t.start()
+        runner(*items[0])
+        for t in threads:
+            t.join()
+        if failures:
+            raise failures[0]
+
+    def _gather_chunks(self, ino: Inode, layout: Dict, start: int, end: int,
+                       *, critical: bool) -> bytes:
+        """Gather [start, end) of a striped file: split at stripe
+        boundaries, group by stripe host, pipeline each host's
+        CHUNK_READs and run the hosts concurrently.  Payloads land in
+        their file-order slots (zero-padded to the span length — a short
+        response is a hole) and ONE join produces the result: on a
+        GIL-bound client, minimizing memcpy passes matters as much as
+        overlapping the RPCs."""
+        n_spans = 0
+        per_host: Dict[int, List[Tuple[int, Message]]] = {}
+        for idx, host, coff, clen in stripe_spans(layout, start, end):
+            per_host.setdefault(host, []).append(
+                (n_spans, Message(MsgType.CHUNK_READ, {
+                    "home": ino.host_id, "file_id": ino.file_id,
+                    "index": idx, "offset": coff, "length": clen})))
+            n_spans += 1
+        parts: List[Optional[bytes]] = [None] * n_spans
+
+        def fetch(host: int, items) -> None:
+            resps = self._rpc_many(host, [m for _, m in items],
+                                   critical=critical)
+            for (slot, m), r in zip(items, resps):
+                if r.type is MsgType.ERROR:
+                    raise err(r.header.get("errno", errno.EIO),
+                              r.header.get("msg", "chunk read failed"))
+                clen = m.header["length"]
+                p = r.payload
+                parts[slot] = p if len(p) == clen \
+                    else p + bytes(clen - len(p))
+
+        self._fanout_hosts(per_host, fetch)
+        if len(parts) == 1:
+            return parts[0]  # single-chunk span: no copy at all
+        return b"".join(parts)  # type: ignore[arg-type]
+
+    def _scatter_chunks(self, ino: Inode, layout: Dict,
+                        extents: List[Tuple[int, bytes]], *,
+                        critical: bool) -> None:
+        """Scatter write extents to the stripe hosts' chunk objects:
+        split at stripe boundaries, pipeline per host, hosts concurrent.
+        The commit WRITE to the home host is the mutation: size/wseq
+        advance and leases revoke there, under the file lock, so nothing
+        STALE can be cached after the write is acked.  Visibility caveat:
+        an in-place overwrite mutates existing chunk bytes before the
+        commit, so a read racing the scatter can return a mix of old and
+        new bytes within one call — concurrent unsynchronized read/write
+        is unordered (the unstriped path's per-call atomicity is a
+        single-server artifact striping gives up), but such a torn gather
+        can never be SERVED later: the commit's revoke bumps the reader's
+        generation, so its fill is discarded."""
+        per_host: Dict[int, List[Message]] = {}
+        for eoff, edata in extents:
+            for idx, host, coff, clen in stripe_spans(layout, eoff,
+                                                      eoff + len(edata)):
+                pos = idx * layout["ss"] + coff
+                per_host.setdefault(host, []).append(Message(
+                    MsgType.CHUNK_WRITE,
+                    {"home": ino.host_id, "file_id": ino.file_id,
+                     "index": idx, "offset": coff},
+                    bytes(edata[pos - eoff : pos - eoff + clen])))
+
+        def send(host: int, msgs) -> None:
+            for r in self._rpc_many(host, msgs, critical=critical):
+                if r.type is MsgType.ERROR:
+                    raise err(r.header.get("errno", errno.EIO),
+                              r.header.get("msg", "chunk write failed"))
+
+        self._fanout_hosts(per_host, send)
+
+    # ------------------------------------------------------------------
+    # readahead: sequential-read detection + async cache prefill
+    # ------------------------------------------------------------------
+    def _maybe_readahead(self, fh: FileHandle, start: int) -> None:
+        """Called after every read(): when two consecutive reads were
+        sequential, schedule an asynchronous prefetch of the next window
+        into the page cache.  The worker's fill is generation- and
+        wseq-checked like any demand fill, so a prefetch racing a writer's
+        revoke is discarded, never served."""
+        sequential = start == fh.ra_next and start > 0
+        fh.ra_next = fh.offset
+        if not sequential:
+            fh.ra_sched = fh.offset
+            return
+        size = self._cache.known_size(_ino_key(fh.ino))
+        if size is None or fh.offset >= size:
+            return
+        if fh.ra_sched - fh.offset > self.readahead_window // 2:
+            return  # pipeline is far enough ahead; don't fragment windows
+        lo = max(fh.offset, fh.ra_sched)
+        hi = min(lo + self.readahead_window, size)
+        if lo >= hi:
+            return
+        fh.ra_sched = hi
+        token = (_ino_key(fh.ino), lo, hi)
+        with self._ra_lock:
+            if token in self._ra_inflight:
+                return
+            self._ra_inflight[token] = threading.Event()
+            self.readaheads += 1
+        self._ra_q.put((fh, lo, hi - lo, token))
+
+    def _ra_worker(self) -> None:
+        while True:
+            item = self._ra_q.get()
+            if item is None:
+                return
+            fh, off, ln, token = item
+            try:
+                if not fh.pending_trunc:  # never trigger a trunc from ra
+                    self._fetch_span(fh, off, ln, critical=False,
+                                     record_open=False)
+            except Exception:
+                pass  # prefetch is best-effort; the demand read will RPC
+            finally:
+                with self._ra_lock:
+                    ev = self._ra_inflight.pop(token, None)
+                if ev is not None:
+                    ev.set()  # wake demand reads parked on this window
 
     def _lease_request(self, key: Tuple[int, int], host_id: int,
                        h: Dict) -> Tuple[int, int]:
@@ -911,6 +1173,8 @@ class BAgent:
         fh = self._fh(fd)
         if self.write_behind:
             return self._wb_write(fh, data)
+        if fh.layout is not None:
+            return self._striped_write(fh, data)
         ino = Inode.unpack(fh.ino)
         key = _ino_key(fh.ino)
         offset = fh.offset
@@ -937,6 +1201,37 @@ class BAgent:
                 # orders it against our own concurrent writes
                 self._cache.patch(key, gen, [(offset, bytes(data))],
                                   resp.header.get("size"), ver, wseq)
+        fh.offset += resp.header["written"]
+        return resp.header["written"]
+
+    def _striped_write(self, fh: FileHandle, data: bytes) -> int:
+        """Synchronous striped write: scatter the bytes to the stripe
+        hosts' chunk objects in parallel, then publish them with ONE
+        commit WRITE to the home host — which revokes other holders'
+        leases and advances size/wseq under the file lock, exactly like an
+        ordinary WRITE, so every page-cache invariant carries over.  A
+        deferred O_TRUNC is flushed as an explicit TRUNCATE first: the
+        home host must clip the old chunks on their stripe hosts before
+        new bytes land, or a reclaimed range could resurface as garbage
+        under a later hole."""
+        self._flush_trunc(fh)
+        ino = Inode.unpack(fh.ino)
+        key = _ino_key(fh.ino)
+        offset = fh.offset
+        gen = ver = 0
+        if self._cache is not None:
+            gen, ver = self._cache.gen(key), self.config.version(ino.host_id)
+        if data:
+            self._scatter_chunks(ino, fh.layout, [(offset, data)],
+                                 critical=True)
+        h = {"file_id": ino.file_id, "client_id": self.client_id,
+             "offset": offset, "commit": [[offset, len(data)]],
+             **self._io_header(fh)}
+        resp = self._rpc(ino.host_id, Message(MsgType.WRITE, h))
+        if self._cache is not None:
+            self._cache.patch(key, gen, [(offset, bytes(data))],
+                              resp.header.get("size"), ver,
+                              resp.header.get("wseq", 0))
         fh.offset += resp.header["written"]
         return resp.header["written"]
 
@@ -1136,63 +1431,18 @@ class BAgent:
             self._flush_jobs(host, jobs)
 
     def _flush_jobs(self, host: int, jobs: List[_FlushJob]) -> None:
-        """Build WRITE/TRUNCATE sub-messages for each job, pack them into
-        BATCH envelopes (never splitting one handle's run across envelopes —
-        pipelined frames may be serviced out of order, an envelope executes
-        in order), send, and map failures back to individual handles."""
+        """Flush one cycle's jobs for one (home) host: striped handles
+        scatter-gather to the stripe hosts then commit at the home host;
+        unstriped handles ride the existing per-host BATCH envelopes.
+        Either way, failures map back to individual handles and every job
+        is settled exactly once."""
+        striped = [j for j in jobs if j.fh.layout is not None]
+        plain = [j for j in jobs if j.fh.layout is None]
         try:
-            per_job: List[List[Message]] = []
-            for j in jobs:
-                ino = Inode.unpack(j.fh.ino)
-                subs: List[Message] = []
-                if j.extents:
-                    for i, e in enumerate(j.extents):
-                        h: Dict = {"file_id": ino.file_id, "offset": e.offset,
-                                   "client_id": self.client_id}
-                        if i == 0:
-                            h.update(j.io_h)
-                            if j.trunc:
-                                h["truncate"] = True
-                        subs.append(Message(MsgType.WRITE, h, bytes(e.data)))
-                elif j.trunc:
-                    subs.append(Message(MsgType.TRUNCATE, {
-                        "file_id": ino.file_id, "size": 0,
-                        "client_id": self.client_id, **j.io_h}))
-                per_job.append(subs)
-            chunks: List[List[int]] = [[]]
-            n_sub = size = 0
-            for idx, subs in enumerate(per_job):
-                jb = sum(len(m.payload) for m in subs)
-                if chunks[-1] and (n_sub + len(subs) > DEFAULT_BATCH
-                                   or size + jb > MAX_FLUSH_ENVELOPE_BYTES):
-                    chunks.append([])
-                    n_sub = size = 0
-                chunks[-1].append(idx)
-                n_sub += len(subs)
-                size += jb
-            sends = [(c, [m for idx in c for m in per_job[idx]])
-                     for c in chunks]
-            sends = [(c, flat) for c, flat in sends if flat]
-            if len(sends) == 1:
-                c, flat = sends[0]
-                try:
-                    resps = self._rpc_batch(host, flat, critical=False)
-                except FSError as e:
-                    self._fail_chunk(jobs, c, e)
-                else:
-                    self._apply_flush_resps(jobs, c, per_job, resps)
-            elif sends:
-                env_resps = self._rpc_many(
-                    host, [pack_batch(flat) for _, flat in sends],
-                    critical=False)
-                for (c, _), er in zip(sends, env_resps):
-                    if er.type is MsgType.ERROR:
-                        self._fail_chunk(jobs, c, err(
-                            er.header.get("errno", errno.EIO),
-                            er.header.get("msg", "")))
-                    else:
-                        self._apply_flush_resps(jobs, c, per_job,
-                                                unpack_batch(er))
+            if striped:
+                self._flush_striped_jobs(host, striped)
+            if plain:
+                self._flush_plain_jobs(host, plain)
         except Exception as e:  # refresh_host, malformed response, ...
             fb = e if isinstance(e, FSError) else err(errno.EIO,
                                                       f"flush failed: {e}")
@@ -1201,6 +1451,153 @@ class BAgent:
                     j.error, j.first_sub_failed = fb, True
         finally:
             self._complete_jobs(jobs)
+
+    def _flush_striped_jobs(self, host: int, jobs: List[_FlushJob]) -> None:
+        """Striped write-behind flush.  Per job: (1) a deferred O_TRUNC
+        goes to the home host as an explicit TRUNCATE (which clips the
+        chunk objects on their stripe hosts under the file lock); (2) the
+        job's coalesced extents are scattered to the stripe hosts with
+        per-host pipelined CHUNK_WRITE fan-outs running concurrently
+        across hosts; (3) one commit WRITE per job publishes size/wseq at
+        the home host — all commits of the cycle ride one BATCH envelope.
+        Ordering: the flusher's cycles are sequential per home host, and
+        within a cycle each job's scatter completes before its commit is
+        sent, so one file's writes stay ordered exactly as on the
+        unstriped path."""
+        prepped: List[Optional[Tuple[_FlushJob, Message]]] = [None] * len(jobs)
+
+        def prep(slot: int, j: _FlushJob) -> None:
+            ino = Inode.unpack(j.fh.ino)
+            try:
+                if j.trunc:
+                    resp = self._rpc(host, Message(MsgType.TRUNCATE, {
+                        "file_id": ino.file_id, "size": 0,
+                        "client_id": self.client_id, **j.io_h}),
+                        critical=False)
+                    j.io_h = {}  # the open record rode the TRUNCATE
+                    j.wseq = max(j.wseq, resp.header.get("wseq", 0))
+                if j.extents:
+                    self._scatter_chunks(
+                        ino, j.fh.layout,
+                        [(e.offset, bytes(e.data)) for e in j.extents],
+                        critical=False)
+                    prepped[slot] = (j, Message(MsgType.WRITE, {
+                        "file_id": ino.file_id, "client_id": self.client_id,
+                        "offset": j.extents[0].offset,
+                        "commit": [[e.offset, len(e.data)]
+                                   for e in j.extents],
+                        **j.io_h}))
+            except FSError as e:
+                j.error = e
+                # restore-the-open-record semantics: failed before the
+                # message carrying io_h could land
+                j.first_sub_failed = bool(j.io_h)
+            except Exception as e:
+                # non-FSError (refresh_host ConnectionError, malformed
+                # response, ...) on a prep THREAD would otherwise vanish
+                # with the thread — and a job with no error and no commit
+                # settles as flushed: silent acknowledged data loss
+                j.error = err(errno.EIO, f"striped flush failed: {e}")
+                j.first_sub_failed = bool(j.io_h)
+
+        # independent files overlap their truncate+scatter sequences in
+        # bounded waves; jobs on the SAME file stay in one group and run
+        # in order (two handles' scatters must not interleave — fd order
+        # decides overlaps, as the plain path's in-envelope order does).
+        # Commits still follow every prep.
+        groups: Dict[Tuple[int, int], List[Tuple[int, _FlushJob]]] = {}
+        for slot, j in enumerate(jobs):
+            groups.setdefault(_ino_key(j.fh.ino), []).append((slot, j))
+
+        def prep_group(items: List[Tuple[int, _FlushJob]]) -> None:
+            for slot, j in items:
+                prep(slot, j)
+
+        glist = list(groups.values())
+        for base in range(0, len(glist), 8):
+            wave = glist[base : base + 8]
+            if len(wave) == 1:
+                prep_group(wave[0])
+            else:
+                threads = [threading.Thread(target=prep_group, args=(g,))
+                           for g in wave]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+        commits = [c for c in prepped if c is not None]
+        if not commits:
+            return
+        resps = self._rpc_batch(host, [m for _, m in commits],
+                                critical=False)
+        for (j, _), r in zip(commits, resps):
+            if r.type is MsgType.ERROR:
+                j.error = err(r.header.get("errno", errno.EIO),
+                              r.header.get("msg", j.fh.path))
+                j.first_sub_failed = bool(j.io_h)
+            else:
+                s = r.header.get("size")
+                if s is not None and (j.new_size is None or s > j.new_size):
+                    j.new_size = s
+                j.wseq = max(j.wseq, r.header.get("wseq", 0))
+
+    def _flush_plain_jobs(self, host: int, jobs: List[_FlushJob]) -> None:
+        """Build WRITE/TRUNCATE sub-messages for each job, pack them into
+        BATCH envelopes (never splitting one handle's run across envelopes —
+        pipelined frames may be serviced out of order, an envelope executes
+        in order), send, and map failures back to individual handles."""
+        per_job: List[List[Message]] = []
+        for j in jobs:
+            ino = Inode.unpack(j.fh.ino)
+            subs: List[Message] = []
+            if j.extents:
+                for i, e in enumerate(j.extents):
+                    h: Dict = {"file_id": ino.file_id, "offset": e.offset,
+                               "client_id": self.client_id}
+                    if i == 0:
+                        h.update(j.io_h)
+                        if j.trunc:
+                            h["truncate"] = True
+                    subs.append(Message(MsgType.WRITE, h, bytes(e.data)))
+            elif j.trunc:
+                subs.append(Message(MsgType.TRUNCATE, {
+                    "file_id": ino.file_id, "size": 0,
+                    "client_id": self.client_id, **j.io_h}))
+            per_job.append(subs)
+        chunks: List[List[int]] = [[]]
+        n_sub = size = 0
+        for idx, subs in enumerate(per_job):
+            jb = sum(len(m.payload) for m in subs)
+            if chunks[-1] and (n_sub + len(subs) > DEFAULT_BATCH
+                               or size + jb > MAX_FLUSH_ENVELOPE_BYTES):
+                chunks.append([])
+                n_sub = size = 0
+            chunks[-1].append(idx)
+            n_sub += len(subs)
+            size += jb
+        sends = [(c, [m for idx in c for m in per_job[idx]])
+                 for c in chunks]
+        sends = [(c, flat) for c, flat in sends if flat]
+        if len(sends) == 1:
+            c, flat = sends[0]
+            try:
+                resps = self._rpc_batch(host, flat, critical=False)
+            except FSError as e:
+                self._fail_chunk(jobs, c, e)
+            else:
+                self._apply_flush_resps(jobs, c, per_job, resps)
+        elif sends:
+            env_resps = self._rpc_many(
+                host, [pack_batch(flat) for _, flat in sends],
+                critical=False)
+            for (c, _), er in zip(sends, env_resps):
+                if er.type is MsgType.ERROR:
+                    self._fail_chunk(jobs, c, err(
+                        er.header.get("errno", errno.EIO),
+                        er.header.get("msg", "")))
+                else:
+                    self._apply_flush_resps(jobs, c, per_job,
+                                            unpack_batch(er))
 
     @staticmethod
     def _fail_chunk(jobs: List[_FlushJob], idxs: List[int], e: FSError) -> None:
@@ -1414,8 +1811,13 @@ class BAgent:
 
     def cache_stats(self) -> Optional[Dict[str, int]]:
         """Page-cache counters (hits/misses/evictions/revocations/bytes),
-        or None when the agent runs without a read cache."""
-        return None if self._cache is None else self._cache.stats()
+        plus the readahead windows issued, or None when the agent runs
+        without a read cache."""
+        if self._cache is None:
+            return None
+        s = self._cache.stats()
+        s["readaheads"] = self.readaheads
+        return s
 
     # ------------------------------------------------------------------
     # bulk paths: batched RPCs + bulk namespace prefetch
@@ -1556,7 +1958,7 @@ class BAgent:
                 raise err(errno.EACCES, f"cannot create in {parent.path()}")
             pino = Inode.unpack(parent.ino)
             by_host.setdefault(pino.host_id, []).append(
-                (parent, name, self._create_msg(pino, name, mode)))
+                (parent, name, self._create_msg(pino, name, mode, p)))
         for host, items in by_host.items():
             for chunk in _chunks(items, batch_size):
                 resps = self._rpc_batch(host, [m for _, _, m in chunk])
@@ -1589,6 +1991,7 @@ class BAgent:
         # raise would silently skip the chunks that had already landed
         gathered: List[Tuple[int, bytes]] = []
         gather_lock = threading.Lock()
+        striped_misses: List[Tuple[int, FileHandle]] = []
         for i, fd in enumerate(fds):
             if fd in dup_fds:
                 continue
@@ -1602,6 +2005,13 @@ class BAgent:
             key = _ino_key(fh.ino)
             self._wb_drain_key(key)
             self._flush_trunc(fh)
+            if fh.layout is not None:
+                # striped files carry their own multi-host fan-out: they
+                # go through the single fetch path (which still fills the
+                # cache), collected here and run concurrently below — one
+                # at a time would serialize k full fan-out latencies
+                striped_misses.append((i, fh))
+                continue
             ino = Inode.unpack(fh.ino)
             h = {"file_id": ino.file_id, "offset": fh.offset,
                  "length": length, **self._io_header(fh)}
@@ -1625,28 +2035,35 @@ class BAgent:
                     with gather_lock:
                         gathered.append((i, r.payload))
 
-        if len(by_host) == 1:
-            host, items = next(iter(by_host.items()))
-            drain_host(host, items)
-        else:
-            # hosts are independent servers: drain them concurrently (each
-            # fd belongs to exactly one host, so no slot is shared)
-            failures: List[BaseException] = []
+        # hosts are independent servers: drain them concurrently (each fd
+        # belongs to exactly one host, so no slot is shared)
+        self._fanout_hosts(by_host, drain_host)
+        if striped_misses:
+            # striped files' per-file fan-outs overlap in bounded waves,
+            # mirroring the unstriped hosts' concurrent drains above
+            fails: List[BaseException] = []
 
-            def runner(host: int, items) -> None:
+            def fetch_striped(i: int, fh: FileHandle) -> None:
                 try:
-                    drain_host(host, items)
-                except BaseException as e:  # re-raised on the caller thread
-                    failures.append(e)
+                    data = self._fetch_span(fh, fh.offset, length)
+                    with gather_lock:
+                        gathered.append((i, data))
+                except BaseException as e:
+                    fails.append(e)
 
-            threads = [threading.Thread(target=runner, args=(h, it))
-                       for h, it in by_host.items()]
-            for t in threads:
-                t.start()
-            for t in threads:
-                t.join()
-            if failures:
-                raise failures[0]
+            for base in range(0, len(striped_misses), 8):
+                wave = striped_misses[base : base + 8]
+                if len(wave) == 1:
+                    fetch_striped(*wave[0])
+                else:
+                    ts = [threading.Thread(target=fetch_striped,
+                                           args=(i, fh)) for i, fh in wave]
+                    for t in ts:
+                        t.start()
+                    for t in ts:
+                        t.join()
+            if fails:
+                raise fails[0]
         # duplicated fds: chained preads (no offset mutation) gathered
         # BEFORE anything is applied, so a raise anywhere leaves every
         # offset untouched
@@ -1679,4 +2096,6 @@ class BAgent:
             self._wb_stop = True
             self._wb_cond.notify_all()
         self._close_q.put(None)
+        if self._ra_q is not None:
+            self._ra_q.put(None)
         self.transport.shutdown(self.cb_addr)

@@ -147,6 +147,18 @@ class BLib:
         except OSError:
             return False
 
+    def layout(self, path: str) -> Optional[dict]:
+        """The file's stripe layout ({"ss": stripe_size, "hosts": [...]})
+        straight from the cached dentry — zero RPCs — or None for a
+        single-host file.  hosts[0] is the coherence home."""
+        node, _ = self.agent._walk(path)
+        return node.layout
+
+    def io_stats(self) -> dict:
+        """RPC counters of the underlying agent (critical path, per-type,
+        per-host fan-out) — what the paper benchmarks report on."""
+        return self.agent.stats.snapshot()
+
     def stat(self, path: str) -> dict:
         return self.agent.stat(path)
 

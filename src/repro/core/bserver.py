@@ -39,7 +39,7 @@ from .inode import Inode, ROOT_FILE_ID
 from .perms import PermRecord, S_IFDIR, S_IFREG
 from .service import MAX_TREE_DEPTH, SERVER_OPS
 from .transport import Transport
-from .wire import Message, MsgType, error, ok
+from .wire import Message, MsgType, error, ok, stripe_spans
 
 
 @dataclass
@@ -59,6 +59,11 @@ class FileMeta:
     # persisted): a restart resets it together with the lease table, and
     # clients key their stamps by (incarnation, wseq).
     wseq: int = 0
+    # stripe layout ({"ss": stripe_size, "hosts": [...]}) for striped
+    # files; None for whole-file-on-home placement.  Immutable after
+    # CREATE.  The home host (hosts[0] == this server) keeps size/wseq/
+    # leases authoritative here even though chunk data is scattered.
+    layout: Optional[Dict] = None
 
 
 @dataclass
@@ -66,6 +71,11 @@ class DirEntry:
     name: str
     ino: int          # packed Inode (may point to another host)
     perm: PermRecord  # the ten extra bytes (paper §3.2)
+    # stripe layout rides in the dentry next to the perm record, so a
+    # client that cached the directory can plan a striped read/write with
+    # zero metadata RPCs — the same trick the 10 permission bytes pull for
+    # open()
+    layout: Optional[Dict] = None
 
 
 class BServer:
@@ -81,6 +91,11 @@ class BServer:
         self.addr = addr
         self.fsync_policy = fsync_policy
         self.dom_limit = dom_limit  # Lustre-DoM small-file threshold
+        # (hostID, version) -> addr map shared with the clients (the paper's
+        # "local configuration file"), injected by BuffetCluster after all
+        # servers exist: the home host uses it to orchestrate chunk objects
+        # on stripe hosts for truncate/unlink/fsync of striped files.
+        self.peers = None  # Optional[ClusterConfig]
 
         # the Lustre baseline verbs live in repro.core.baselines and join
         # SERVER_OPS on import; import it here so every constructed BServer
@@ -157,11 +172,13 @@ class BServer:
                     "size": m.size, "is_dir": m.is_dir, "nlink": m.nlink,
                     "atime": m.atime, "mtime": m.mtime, "ctime": m.ctime,
                     "xattrs": m.xattrs,
+                    **({"layout": m.layout} if m.layout else {}),
                 } for fid, m in self._meta.items()
             },
             "dirs": {
                 str(fid): {
-                    name: {"ino": e.ino, "perm": e.perm.pack().hex()}
+                    name: {"ino": e.ino, "perm": e.perm.pack().hex(),
+                           **({"layout": e.layout} if e.layout else {})}
                     for name, e in entries.items()
                 } for fid, entries in self._dirs.items()
             },
@@ -181,12 +198,15 @@ class BServer:
             int(fid): FileMeta(
                 perm=PermRecord(d["mode"], d["uid"], d["gid"]), size=d["size"],
                 is_dir=d["is_dir"], nlink=d["nlink"], atime=d["atime"],
-                mtime=d["mtime"], ctime=d["ctime"], xattrs=d.get("xattrs", {}))
+                mtime=d["mtime"], ctime=d["ctime"], xattrs=d.get("xattrs", {}),
+                layout=d.get("layout"))
             for fid, d in blob["meta"].items()
         }
         self._dirs = {
             int(fid): {
-                name: DirEntry(name, e["ino"], PermRecord.unpack(bytes.fromhex(e["perm"])))
+                name: DirEntry(name, e["ino"],
+                               PermRecord.unpack(bytes.fromhex(e["perm"])),
+                               layout=e.get("layout"))
                 for name, e in entries.items()
             } for fid, entries in blob["dirs"].items()
         }
@@ -222,6 +242,80 @@ class BServer:
     # ------------------------------------------------------------------
     def _obj_path(self, file_id: int) -> str:
         return os.path.join(self._objs, f"{file_id:016x}")
+
+    def _chunk_path(self, home: int, file_id: int, index: int) -> str:
+        """Chunk objects live in the same ext4-backed object store, keyed
+        by (home_host, file_id, stripe_index) — the `c` prefix and the
+        home-host component keep them disjoint from this server's own
+        file_id namespace."""
+        return os.path.join(self._objs, f"c{home:03x}_{file_id:016x}_{index:08x}")
+
+    def _chunk_lock(self, home: int, file_id: int, index: int
+                    ) -> threading.Lock:
+        with self._lock:
+            key = -(((home << 40) ^ file_id) * 1048576 + index + 1)
+            lk = self._file_locks.get(key)
+            if lk is None:
+                lk = self._file_locks[key] = threading.Lock()
+            return lk
+
+    def _fanout_chunks(self, by_host: Dict[int, Message]) -> int:
+        """Home-host orchestration hop: send one chunk RPC to each stripe
+        host.  Sequential on purpose — this handler may itself be running
+        on a transport pool worker, so fanning out through the pool could
+        exhaust the workers it waits on.  Returns the number of host
+        fan-outs that FAILED (unreachable, errored, or unroutable): the
+        truncate/unlink callers treat failures as best-effort orphans (the
+        same availability escape the §3.4 watcher fan-out and lease
+        revocation take), but a durability barrier (fsync) must refuse to
+        ack on them."""
+        failed = 0
+        for host, msg in by_host.items():
+            if host == self.host_id:
+                resp = SERVER_OPS.dispatch(self, msg)  # local: no self-RPC
+            elif self.peers is None:
+                failed += 1
+                continue
+            else:
+                try:
+                    resp = self.transport.request(self.peers.addr(host), msg,
+                                                  critical=True)
+                except Exception:
+                    failed += 1
+                    continue
+            if resp.type is MsgType.ERROR:
+                failed += 1
+        return failed
+
+    @staticmethod
+    def _chunk_trunc_plan(layout: Dict, old_size: int, new_size: int
+                          ) -> Dict[int, List[List[int]]]:
+        """Per-stripe-host clip/delete plan for a truncate: chunks wholly
+        beyond the new size are deleted (len -1), the chunk containing the
+        new EOF is clipped, chunks below it are untouched.  Physical
+        clipping matters: a later extend-write must read the reclaimed
+        range as zeros, not as resurrected pre-truncate bytes."""
+        ss, hosts = layout["ss"], layout["hosts"]
+        plan: Dict[int, List[List[int]]] = {}
+        for idx in range((old_size + ss - 1) // ss):
+            start = idx * ss
+            if start >= new_size:
+                op = [idx, -1]
+            elif start + ss > new_size:
+                op = [idx, new_size - start]
+            else:
+                continue
+            plan.setdefault(hosts[idx % len(hosts)], []).append(op)
+        return plan
+
+    @staticmethod
+    def _chunk_indices_by_host(layout: Dict, size: int
+                               ) -> Dict[int, List[int]]:
+        ss, hosts = layout["ss"], layout["hosts"]
+        out: Dict[int, List[int]] = {}
+        for idx in range((size + ss - 1) // ss):
+            out.setdefault(hosts[idx % len(hosts)], []).append(idx)
+        return out
 
     def _inode(self, file_id: int) -> int:
         return Inode(self.host_id, self.version, file_id).pack()
@@ -368,7 +462,8 @@ class BServer:
                 if not meta.is_dir:
                     return error(errno.ENOTDIR, "not a directory")
                 entries = [
-                    {"name": e.name, "ino": e.ino, "perm": e.perm.pack().hex()}
+                    {"name": e.name, "ino": e.ino, "perm": e.perm.pack().hex(),
+                     **({"layout": e.layout} if e.layout else {})}
                     for e in self._dirs[fid].values()
                 ]
                 if "client_id" in h and h.get("cb_addr"):
@@ -390,6 +485,7 @@ class BServer:
     def _op_create(self, h: Dict, _p: bytes) -> Message:
         parent, name = h["parent"], h["name"]
         perm = PermRecord(S_IFREG | (h["mode"] & 0o777), h["uid"], h["gid"])
+        layout = h.get("layout")  # stripe layout allocated client-side
 
         # a batched CREATE burst goes through here per sub-message, so the
         # §3.4 ordering holds for batches exactly as for single RPCs
@@ -399,23 +495,29 @@ class BServer:
                 return None
             if h.get("excl"):
                 return error(errno.EEXIST, name)
-            return ok({"ino": e.ino, "perm": e.perm.pack().hex(),
-                       "existed": True})
+            hdr = {"ino": e.ino, "perm": e.perm.pack().hex(),
+                   "existed": True}
+            if e.layout:  # the EXISTING layout wins: layouts are immutable
+                hdr["layout"] = e.layout
+            return ok(hdr)
 
         def apply() -> Message:
             pdir = self._dirs.get(parent)
             if pdir is None:  # parent rmdir'd during the fan-out: allocate
                 return error(errno.ENOENT, name)  # nothing, leak nothing
             fid = self._alloc(FileMeta(perm=perm, ctime=time.time(),
-                                       mtime=time.time()))
+                                       mtime=time.time(), layout=layout))
             ino = self._inode(fid)
-            pdir[name] = DirEntry(name, ino, perm)
+            pdir[name] = DirEntry(name, ino, perm, layout=layout)
             # front-end metadata mirrored into xattrs of the file (§3.2)
             self._meta[fid].xattrs["buffet.ino"] = str(ino)
-            open(self._obj_path(fid), "wb").close()
+            if layout is None:
+                open(self._obj_path(fid), "wb").close()
             self._persist()
-            return ok({"ino": ino, "perm": perm.pack().hex(),
-                       "existed": False})
+            hdr = {"ino": ino, "perm": perm.pack().hex(), "existed": False}
+            if layout:
+                hdr["layout"] = layout
+            return ok(hdr)
 
         return self._two_phase(parent, [name], check, apply,
                                exclude_client=h.get("client_id"))
@@ -448,7 +550,8 @@ class BServer:
     @SERVER_OPS.register(MsgType.UNLINK, mutating=True, breaks_lease=True)
     def _op_unlink(self, h: Dict, _p: bytes) -> Message:
         parent, name = h["parent"], h["name"]
-        unlinked: List[int] = []  # local file_id whose leases must be recalled
+        # local (file_id, layout, size) whose leases/chunks must be reaped
+        unlinked: List[Tuple[int, Optional[Dict], int]] = []
 
         def check() -> Optional[Message]:
             e = self._dirs[parent].get(name)
@@ -462,8 +565,10 @@ class BServer:
             e = self._dirs[parent].pop(name)
             ino = Inode.unpack(e.ino)
             if ino.host_id == self.host_id:
-                self._meta.pop(ino.file_id, None)
-                unlinked.append(ino.file_id)
+                m = self._meta.pop(ino.file_id, None)
+                unlinked.append((ino.file_id,
+                                 m.layout if m else None,
+                                 m.size if m else 0))
                 try:
                     os.unlink(self._obj_path(ino.file_id))
                 except FileNotFoundError:
@@ -478,7 +583,7 @@ class BServer:
             # no client can serve stale blocks for a path whose unlink
             # completed.  (A cross-host object keeps its data unchanged
             # until GC'd, so its leases are not stale and stay untouched.)
-            for fid in unlinked:
+            for fid, layout, size in unlinked:
                 self._revoke_leases(fid,
                                     exclude_client=h.get("client_id"))
                 # the file_id is dead and never reused: drop the whole
@@ -486,6 +591,16 @@ class BServer:
                 # leak forever — no later mutation will ever touch it)
                 with self._lock:
                     self._leases.pop(fid, None)
+                if layout is not None:
+                    # reap the dead file's chunk objects on their stripe
+                    # hosts (best-effort, like the revokes above: an
+                    # unreachable host leaves orphans, never blocks unlink)
+                    self._fanout_chunks({
+                        host: Message(MsgType.CHUNK_UNLINK,
+                                      {"home": self.host_id, "file_id": fid,
+                                       "indices": idxs})
+                        for host, idxs in
+                        self._chunk_indices_by_host(layout, size).items()})
 
         return self._two_phase(parent, [name], check, apply,
                                exclude_client=h.get("client_id"),
@@ -538,7 +653,10 @@ class BServer:
         def apply() -> Message:
             pdir = self._dirs[parent]
             e = pdir.pop(old)
-            pdir[new] = DirEntry(new, e.ino, e.perm)
+            # the layout travels WITH the dentry: dropping it here would
+            # turn a renamed striped file into an unreadable one for every
+            # client that resolves the new name
+            pdir[new] = DirEntry(new, e.ino, e.perm, layout=e.layout)
             self._persist()
             return ok()
 
@@ -567,7 +685,8 @@ class BServer:
             pdir = self._dirs[parent]
             e = pdir[name]
             new_perm = f(e.perm)
-            pdir[name] = DirEntry(name, e.ino, new_perm)
+            # preserve the stripe layout riding in the dentry (see rename)
+            pdir[name] = DirEntry(name, e.ino, new_perm, layout=e.layout)
             ino = Inode.unpack(e.ino)
             if ino.host_id == self.host_id and ino.file_id in self._meta:
                 self._meta[ino.file_id].perm = new_perm
@@ -621,8 +740,11 @@ class BServer:
                     # below must not re-parse every entry's hex perm
                     subdirs: List[Tuple[int, bool]] = []
                     for e in children.values():
-                        entries.append({"name": e.name, "ino": e.ino,
-                                        "perm": e.perm.pack().hex()})
+                        rec = {"name": e.name, "ino": e.ino,
+                               "perm": e.perm.pack().hex()}
+                        if e.layout:
+                            rec["layout"] = e.layout
+                        entries.append(rec)
                         if e.perm.is_dir:
                             ci = Inode.unpack(e.ino)
                             subdirs.append((e.ino,
@@ -658,6 +780,8 @@ class BServer:
                 m = self._meta[fid]
                 m.atime = time.time()
                 wseq = m.wseq  # stable: writers hold the file lock we hold
+                layout = m.layout
+                msize = m.size
                 # read-lease grant: registration is atomic with the
                 # existence check above, and the surrounding file lock
                 # serializes it against a writer's revoke+apply window —
@@ -669,32 +793,92 @@ class BServer:
                 if granted:
                     self._leases.setdefault(fid, {})[rec["client_id"]] = \
                         rec["cb_addr"]
-            # size comes from the backing file itself, under the file lock:
-            # race-free against concurrent WRITEs (the old code read m.size
-            # unlocked for the eof flag) and correct even when a crash left
-            # meta.json behind the fsynced object data.  Clamping the "read
-            # to EOF" sentinel (2 GiB) also avoids BufferedReader's ~0.4ms
-            # of buffer setup per huge read() call.
-            try:
-                with open(self._obj_path(fid), "rb") as f:
-                    size = os.fstat(f.fileno()).st_size
-                    f.seek(off)
-                    data = f.read(min(ln, max(0, size - off)))
-            except FileNotFoundError:
-                size, data = 0, b""
+            if layout is not None:
+                # striped file: this (home) host is the coherence authority
+                # — size/wseq/lease all come from here in ONE RPC — and it
+                # serves the span inline IF it lies entirely in its OWN
+                # chunk objects, so a file no larger than one stripe still
+                # reads in exactly one critical-path RPC.  A span that
+                # crosses onto other hosts returns metadata only: shipping
+                # a partial prefix would serialize one host's transfer in
+                # front of the client's parallel gather (which fetches
+                # home-resident chunks by CHUNK_READ like any other).
+                size = msize  # commit-acked size is authoritative
+                data = self._read_local_span(fid, layout, off,
+                                             min(off + ln, size))
+            else:
+                # size comes from the backing file itself, under the file
+                # lock: race-free against concurrent WRITEs (the old code
+                # read m.size unlocked for the eof flag) and correct even
+                # when a crash left meta.json behind the fsynced object
+                # data.  Clamping the "read to EOF" sentinel (2 GiB) also
+                # avoids BufferedReader's ~0.4ms of buffer setup per huge
+                # read() call.
+                try:
+                    with open(self._obj_path(fid), "rb") as f:
+                        size = os.fstat(f.fileno()).st_size
+                        f.seek(off)
+                        data = f.read(min(ln, max(0, size - off)))
+                except FileNotFoundError:
+                    size, data = 0, b""
         hdr: Dict = {"eof": off + len(data) >= size, "size": size,
                      "wseq": wseq}
         if granted:
             hdr["lease"] = True
         return ok(hdr, data)
 
+    def _read_local_span(self, fid: int, layout: Dict, off: int, end: int
+                         ) -> bytes:
+        """[off, end) when it lies ENTIRELY in local chunk objects; b""
+        otherwise (the client gathers cross-host spans itself, including
+        the home-resident chunks, so a partial prefix would only be
+        re-fetched — and would have cost a wasted multi-MiB disk read
+        here).  The all-or-nothing check is pure layout arithmetic: no
+        chunk file is opened unless its bytes will be returned.  A short
+        local chunk (a hole) also returns b"": the client's fan-out
+        zero-fills holes uniformly."""
+        if end <= off:
+            return b""
+        ss, hosts = layout["ss"], layout["hosts"]
+        for idx in range(off // ss, (end - 1) // ss + 1):
+            if hosts[idx % len(hosts)] != self.host_id:
+                return b""
+        parts: List[bytes] = []
+        pos = off
+        while pos < end:
+            idx = pos // ss
+            lo = pos - idx * ss
+            hi = min(end - idx * ss, ss)
+            try:
+                with open(self._chunk_path(self.host_id, fid, idx), "rb") as f:
+                    f.seek(lo)
+                    got = f.read(hi - lo)
+            except FileNotFoundError:
+                got = b""
+            if len(got) < hi - lo:
+                return b""  # hole: let the gather path zero-fill it
+            parts.append(got)
+            pos = idx * ss + hi
+        # the common single-chunk case returns the read() bytes unCOPIED —
+        # multi-MiB memcpys, not RPCs, dominate a striped read once the
+        # fan-out overlaps
+        if len(parts) == 1:
+            return parts[0]
+        return b"".join(parts)
+
     @SERVER_OPS.register(MsgType.WRITE, mutating=True, breaks_lease=True)
     def _op_write(self, h: Dict, p: bytes) -> Message:
         fid, off = h["file_id"], h["offset"]
         with self._lock:
-            if fid not in self._meta:
+            meta = self._meta.get(fid)
+            if meta is None:
                 return error(errno.ENOENT, "no such object")
+            striped = meta.layout is not None
         self._record_open(h)
+        if striped:
+            return self._striped_commit(h, fid)
+        if h.get("commit") is not None:
+            return error(errno.EINVAL, "commit on unstriped file")
         with self._file_lock(fid):
             # revoke-before-apply, the data-plane twin of the §3.4
             # invalidate-watchers-then-apply path: the file lock spans both
@@ -725,37 +909,103 @@ class BServer:
                     except FileNotFoundError:
                         pass
                     return error(errno.ENOENT, "unlinked during write")
-                end = (off + len(p)) if not h.get("truncate") else len(p)
-                m.size = max(0 if h.get("truncate") else m.size, end)
+                # an empty write is a no-op for size (seek past EOF without
+                # bytes extends nothing); O_TRUNC still applies
+                base = 0 if h.get("truncate") else m.size
+                m.size = max(base, off + len(p)) if p else base
                 m.mtime = time.time()
                 m.wseq += 1
                 size, wseq = m.size, m.wseq
         return ok({"written": len(p), "size": size, "wseq": wseq})
 
+    def _striped_commit(self, h: Dict, fid: int) -> Message:
+        """WRITE on a striped file: the client already scattered the bytes
+        to the stripe hosts' chunk objects (CHUNK_WRITE fan-out); this
+        request publishes the result — under the same file lock and with
+        the same revoke-before-apply lease recall as an ordinary WRITE, so
+        the page-cache coherence argument is untouched.  ``commit`` is the
+        list of [offset, length] extents that were scattered.  A striped
+        file never defers O_TRUNC onto its first WRITE: the client sends
+        an explicit TRUNCATE first (the home host must clip chunks on the
+        stripe hosts before new data lands, or reclaimed ranges could
+        resurface as garbage in later holes)."""
+        commit = h.get("commit")
+        if commit is None:
+            return error(errno.EINVAL,
+                         "payload WRITE on striped file (scatter + commit)")
+        with self._file_lock(fid):
+            self._revoke_leases(fid, exclude_client=h.get("client_id"))
+            with self._lock:
+                m = self._meta.get(fid)
+                if m is None:
+                    return error(errno.ENOENT, "unlinked during write")
+                # zero-length extents don't extend: write(fd, b"") at an
+                # offset past EOF is a POSIX no-op, not a size change
+                end = max((o + ln for o, ln in commit if ln > 0), default=0)
+                m.size = max(m.size, end)
+                m.mtime = time.time()
+                m.wseq += 1
+                size, wseq = m.size, m.wseq
+        return ok({"written": sum(ln for _, ln in commit), "size": size,
+                   "wseq": wseq})
+
     @SERVER_OPS.register(MsgType.TRUNCATE, mutating=True, breaks_lease=True)
     def _op_truncate(self, h: Dict, _p: bytes) -> Message:
         fid = h["file_id"]
         with self._lock:
-            if fid not in self._meta:
+            meta = self._meta.get(fid)
+            if meta is None:
                 return error(errno.ENOENT, "no such object")
+            layout = meta.layout
         self._record_open(h)
         with self._file_lock(fid):
             # same revoke-before-apply ordering as _op_write
             self._revoke_leases(fid, exclude_client=h.get("client_id"))
-            path = self._obj_path(fid)
-            # mirror _op_write: re-materialize a crash-lost object while
-            # metadata exists; the unlinked-race case is handled by the
-            # post-mutation meta re-check below, never by leaking an orphan
-            mode = "r+b" if os.path.exists(path) else "wb"
-            with open(path, mode) as f:
-                f.truncate(h["size"])
+            if layout is not None:
+                # home-host orchestration: physically clip/delete chunk
+                # objects on their stripe hosts under the file lock, BEFORE
+                # the new size is published and the truncate acked — a
+                # later extend-write must find zeros in the reclaimed
+                # range, not resurrected pre-truncate bytes.  The size the
+                # plan covers is read UNDER the file lock: a commit racing
+                # in before we acquired it may have grown the file, and a
+                # plan built from a stale snapshot would leave its chunks
+                # unclipped (resurrectable).
+                with self._lock:
+                    m = self._meta.get(fid)
+                    old_size = m.size if m is not None else 0
+                plan = self._chunk_trunc_plan(layout, old_size, h["size"])
+                failed = self._fanout_chunks({
+                    host: Message(MsgType.CHUNK_TRUNC,
+                                  {"home": self.host_id, "file_id": fid,
+                                   "ops": ops})
+                    for host, ops in plan.items()})
+                if failed:
+                    # unlike unlink's reap (dead file_id, orphans are only
+                    # garbage) an unclipped chunk on a LIVE file would
+                    # resurface as data under a later extend — refuse the
+                    # truncate rather than publish a size the chunk store
+                    # contradicts (partial clips are holes: they read
+                    # zeros, same as a crash mid-truncate)
+                    return error(errno.EIO,
+                                 f"{failed} stripe host(s) failed to clip")
+            else:
+                path = self._obj_path(fid)
+                # mirror _op_write: re-materialize a crash-lost object while
+                # metadata exists; the unlinked-race case is handled by the
+                # post-mutation meta re-check below, never by leaking an
+                # orphan
+                mode = "r+b" if os.path.exists(path) else "wb"
+                with open(path, mode) as f:
+                    f.truncate(h["size"])
             with self._lock:
                 m = self._meta.get(fid)
                 if m is None:
-                    try:
-                        os.unlink(path)
-                    except FileNotFoundError:
-                        pass
+                    if layout is None:
+                        try:
+                            os.unlink(self._obj_path(fid))
+                        except FileNotFoundError:
+                            pass
                     return error(errno.ENOENT, "unlinked during truncate")
                 m.size = h["size"]
                 m.mtime = time.time()
@@ -772,15 +1022,34 @@ class BServer:
         contract the client-side write-behind pipeline builds on."""
         fid = h["file_id"]
         with self._lock:
-            if fid not in self._meta:
+            meta = self._meta.get(fid)
+            if meta is None:
                 return error(errno.ENOENT, "no such object")
+            layout, size = meta.layout, meta.size
         self._record_open(h)
         with self._file_lock(fid):
-            try:
-                with open(self._obj_path(fid), "rb") as f:
-                    os.fsync(f.fileno())
-            except FileNotFoundError:
-                pass  # zero-write file: nothing but metadata to make durable
+            if layout is not None:
+                # striped: the barrier must cover every chunk object, so
+                # the home host fans CHUNK_FSYNCs out to the stripe hosts
+                # before persisting its own metadata and acking.  Unlike
+                # the truncate/unlink reaps this is NOT best-effort: an
+                # unreachable stripe host means the durability contract
+                # cannot be honored, and the client must hear that.
+                failed = self._fanout_chunks({
+                    host: Message(MsgType.CHUNK_FSYNC,
+                                  {"home": self.host_id, "file_id": fid,
+                                   "indices": idxs})
+                    for host, idxs in
+                    self._chunk_indices_by_host(layout, size).items()})
+                if failed:
+                    return error(errno.EIO,
+                                 f"{failed} stripe host(s) failed to fsync")
+            else:
+                try:
+                    with open(self._obj_path(fid), "rb") as f:
+                        os.fsync(f.fileno())
+                except FileNotFoundError:
+                    pass  # zero-write file: only metadata to make durable
         with self._lock:
             if fid not in self._meta:
                 return error(errno.ENOENT, "unlinked during fsync")
@@ -806,17 +1075,22 @@ class BServer:
         is_dir = bool(h["is_dir"])
         perm = PermRecord((S_IFDIR if is_dir else S_IFREG) | (h["mode"] & 0o777),
                           h["uid"], h["gid"])
+        layout = None if is_dir else h.get("layout")
         with self._lock:
             fid = self._alloc(FileMeta(perm=perm, is_dir=is_dir,
-                                       ctime=time.time(), mtime=time.time()))
+                                       ctime=time.time(), mtime=time.time(),
+                                       layout=layout))
             if is_dir:
                 self._dirs[fid] = {}
-            else:
+            elif layout is None:
                 open(self._obj_path(fid), "wb").close()
             ino = self._inode(fid)
             self._meta[fid].xattrs["buffet.ino"] = str(ino)
             self._persist()
-        return ok({"ino": ino, "perm": perm.pack().hex()})
+        hdr = {"ino": ino, "perm": perm.pack().hex()}
+        if layout:
+            hdr["layout"] = layout
+        return ok(hdr)
 
     @SERVER_OPS.register(MsgType.LINK_DENTRY, mutating=True)
     def _op_link_dentry(self, h: Dict, _p: bytes) -> Message:
@@ -829,12 +1103,90 @@ class BServer:
             return None
 
         def apply() -> Message:
-            self._dirs[parent][name] = DirEntry(name, h["ino"], perm)
+            self._dirs[parent][name] = DirEntry(name, h["ino"], perm,
+                                                layout=h.get("layout"))
             self._persist()
             return ok()
 
         return self._two_phase(parent, [name], check, apply,
                                exclude_client=h.get("client_id"))
+
+    # --- chunk store (striped data plane) --------------------------------
+    # Chunk verbs are BLIND storage: no FileMeta, no leases, no wseq — the
+    # file's home host is the single coherence authority, and every chunk
+    # mutation is ordered by the home host's file lock (clients commit a
+    # scatter at the home host, the home host fans out truncate/unlink/
+    # fsync).  That is what lets the PR 3 page-cache invariants survive
+    # striping unchanged.
+
+    @SERVER_OPS.register(MsgType.CHUNK_READ)
+    def _op_chunk_read(self, h: Dict, _p: bytes) -> Message:
+        home, fid, idx = h["home"], h["file_id"], h["index"]
+        off, ln = h["offset"], h["length"]
+        with self._chunk_lock(home, fid, idx):
+            try:
+                with open(self._chunk_path(home, fid, idx), "rb") as f:
+                    f.seek(off)
+                    data = f.read(ln)
+            except FileNotFoundError:
+                data = b""  # absent chunk == hole: reads as zeros client-side
+        return ok({"index": idx}, data)
+
+    @SERVER_OPS.register(MsgType.CHUNK_WRITE, mutating=True)
+    def _op_chunk_write(self, h: Dict, p: bytes) -> Message:
+        home, fid, idx = h["home"], h["file_id"], h["index"]
+        path = self._chunk_path(home, fid, idx)
+        with self._chunk_lock(home, fid, idx):
+            mode = "r+b" if os.path.exists(path) else "wb"
+            with open(path, mode) as f:
+                f.seek(h["offset"])
+                f.write(p)
+                if self.fsync_policy == "mutating":
+                    f.flush()
+                    os.fsync(f.fileno())
+        return ok({"written": len(p)})
+
+    @SERVER_OPS.register(MsgType.CHUNK_TRUNC, mutating=True)
+    def _op_chunk_trunc(self, h: Dict, _p: bytes) -> Message:
+        """Clip/delete chunk objects per the home host's truncate plan:
+        ``ops`` is a list of [index, new_len] with new_len < 0 => delete.
+        An absent chunk is already all-zeros at any length — skip it."""
+        home, fid = h["home"], h["file_id"]
+        for idx, new_len in h["ops"]:
+            path = self._chunk_path(home, fid, idx)
+            with self._chunk_lock(home, fid, idx):
+                try:
+                    if new_len < 0:
+                        os.unlink(path)
+                    elif os.path.exists(path):
+                        with open(path, "r+b") as f:
+                            f.truncate(new_len)
+                except FileNotFoundError:
+                    pass
+        return ok()
+
+    @SERVER_OPS.register(MsgType.CHUNK_UNLINK, mutating=True)
+    def _op_chunk_unlink(self, h: Dict, _p: bytes) -> Message:
+        home, fid = h["home"], h["file_id"]
+        for idx in h["indices"]:
+            with self._chunk_lock(home, fid, idx):
+                try:
+                    os.unlink(self._chunk_path(home, fid, idx))
+                except FileNotFoundError:
+                    pass
+        return ok()
+
+    @SERVER_OPS.register(MsgType.CHUNK_FSYNC, barrier=True)
+    def _op_chunk_fsync(self, h: Dict, _p: bytes) -> Message:
+        home, fid = h["home"], h["file_id"]
+        for idx in h["indices"]:
+            with self._chunk_lock(home, fid, idx):
+                try:
+                    with open(self._chunk_path(home, fid, idx), "rb") as f:
+                        os.fsync(f.fileno())
+                except FileNotFoundError:
+                    pass  # hole chunk: nothing to make durable
+        return ok()
 
     # NOTE: the Lustre baseline verbs (OPEN_RECORD, READ_INLINE) register
     # into the same SERVER_OPS registry from repro.core.baselines — the

@@ -81,6 +81,13 @@ class BuffetCluster:
     latency: Optional[LatencyModel] = None
     replicas: int = 1
     fsync_policy: str = "none"
+    # data-plane striping policy: files created while stripe_count > 1 get
+    # a stripe layout (stripe_size + ordered host list) allocated at
+    # CREATE time and carried in the dentry.  stripe_count=1 (default)
+    # keeps the original whole-file-on-home-host placement, so existing
+    # workloads and the paper's small-file RPC counts are untouched.
+    stripe_size: int = 1 << 20
+    stripe_count: int = 1
     servers: Dict[int, BServer] = field(default_factory=dict)
     config: ClusterConfig = field(default_factory=ClusterConfig)
     root_ino: int = 0
@@ -98,6 +105,11 @@ class BuffetCluster:
                           fsync_policy=self.fsync_policy)
             self.servers[host_id] = srv
             self.config.set(host_id, srv.addr, srv.version)
+        # every server holds the same "local configuration file" clients
+        # hold (paper §3.2): the home host needs it to reach stripe hosts
+        # when it orchestrates truncate/unlink/fsync over chunk objects
+        for srv in self.servers.values():
+            srv.peers = self.config
         self.root_ino = self.servers[0].make_root().pack()
 
     # --- placement -----------------------------------------------------
@@ -106,6 +118,28 @@ class BuffetCluster:
         if path in ("", "/"):
             return 0
         return stable_hash(path) % self.n_servers
+
+    def place_stripes(self, path: str, home: int) -> Optional[Dict]:
+        """Stripe layout for a new file: `stripe_size` plus an ordered host
+        list.  hosts[0] is always the file's HOME host — the host the
+        dentry's inode points at, which keeps FileMeta and the lease table
+        — so a file no larger than one stripe still costs exactly one
+        critical-path RPC to read (the home READ serves stripe 0 inline).
+        The remaining hosts rotate from a stable hash of the path, so a
+        directory of large files spreads its chunk load across the whole
+        cluster.  None => striping disabled (or nowhere to stripe to)."""
+        k = min(self.stripe_count, self.n_servers)
+        if k <= 1:
+            return None
+        hosts = [home]
+        start = stable_hash(path)
+        for i in range(self.n_servers):
+            if len(hosts) == k:
+                break
+            h = (start + i) % self.n_servers
+            if h != home:
+                hosts.append(h)
+        return {"ss": self.stripe_size, "hosts": hosts}
 
     def replica_host(self, host_id: int, k: int = 1) -> int:
         return (host_id + k) % self.n_servers

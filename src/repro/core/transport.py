@@ -72,6 +72,68 @@ class Transport:
         raise NotImplementedError
 
 
+class _WorkerPool:
+    """Persistent bounded worker pool for `InProcTransport.request_many`.
+
+    The previous implementation spawned a fresh thread per message per
+    wave; thread create/start/join costs ~100us apiece on this container —
+    the same order as the simulated RPC latencies — so fan-out benchmarks
+    were measuring thread churn, not the protocol.  Workers here are
+    daemon threads spawned on demand up to `size` and retire after
+    `idle_s` without work, so an idle transport pins no threads and a
+    process churning through many short-lived clusters doesn't accumulate
+    them.
+
+    Invariant: pool tasks must never themselves submit to the pool (a
+    server handler reached from a pool worker doing its own fan-out would
+    risk exhausting the workers it is waiting on).  Server-side chunk
+    orchestration therefore uses plain sequential `request()` calls."""
+
+    def __init__(self, size: int, idle_s: float = 10.0) -> None:
+        self.size = max(1, size)
+        self.idle_s = idle_s
+        self._q: "queue.Queue[Callable[[], None]]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._workers = 0
+        self._idle = 0
+
+    def submit(self, fn: Callable[[], None]) -> None:
+        self._q.put(fn)
+        with self._lock:
+            # spawn while queued work outpaces the waiting workers (a
+            # plain idle==0 check under-spawns during a burst: workers
+            # that just grabbed a task read as "about to be idle" and a
+            # 15-task fan-out ends up sharing too few threads)
+            if self._workers < self.size and self._q.qsize() > self._idle:
+                self._workers += 1
+                threading.Thread(target=self._run, daemon=True).start()
+
+    def _run(self) -> None:
+        while True:
+            with self._lock:
+                self._idle += 1
+            try:
+                fn: Optional[Callable[[], None]] = self._q.get(
+                    timeout=self.idle_s)
+            except queue.Empty:
+                fn = None
+            with self._lock:
+                self._idle -= 1
+                if fn is None:
+                    # re-check under the lock before retiring: a submit()
+                    # that raced our timeout saw an idle worker and did not
+                    # spawn, so its task must not be stranded
+                    try:
+                        fn = self._q.get_nowait()
+                    except queue.Empty:
+                        self._workers -= 1
+                        return
+            try:
+                fn()
+            except Exception:
+                pass  # task wrappers capture their own failures
+
+
 class InProcTransport(Transport):
     """Registry-based transport with injected latency.
 
@@ -88,6 +150,12 @@ class InProcTransport(Transport):
         self._handlers: Dict[Addr, Handler] = {}
         self._svc_locks: Dict[Addr, threading.Lock] = {}
         self._lock = threading.Lock()
+        # sized well above one connection's TCP window (32): this pool is
+        # shared by EVERY (client, server) pair on the transport, and a
+        # worker holds its slot for the whole simulated RTT — sizing it at
+        # one window would serialize independent clients' fan-outs against
+        # each other, which the per-connection TCP windows never do
+        self._pool = _WorkerPool(4 * MAX_INFLIGHT_PER_CONN)
 
     def serve(self, addr: Addr, handler: Handler) -> None:
         with self._lock:
@@ -115,25 +183,44 @@ class InProcTransport(Transport):
         n_sub = msg.header.get("n", 1) if msg.type is MsgType.BATCH else 1
         svc_s = lat.service_us * n_sub * 1e-6
         # service time: serialized per server when contention is simulated
-        # (this is what exposes the MDS bottleneck under concurrency)
-        if self.simulate_contention and svc_lock is not None and lat.service_us:
-            with svc_lock:
+        # (this is what exposes the MDS bottleneck under concurrency).  The
+        # handler itself runs OUTSIDE the lock — like the TCP server's
+        # worker pool, a server executes handlers concurrently and they
+        # serialize on their own internal locks; only the modeled service
+        # occupancy is exclusive.  This also makes server-to-server calls
+        # from inside a handler (striped chunk orchestration) deadlock-free:
+        # holding host A's service lock while requesting host B, and vice
+        # versa, would otherwise cycle.  (The lock is only ever held
+        # ACROSS a sleep, never across a nested request.)
+        contended = (self.simulate_contention and svc_lock is not None)
+        if lat.service_us:
+            if contended:
+                with svc_lock:
+                    time.sleep(svc_s)
+            else:
                 time.sleep(svc_s)
-                resp = handler(msg)
-        else:
-            if lat.service_us:
-                time.sleep(svc_s)
-            resp = handler(msg)
+        resp = handler(msg)
         resp_bytes = resp.nbytes
-        # network: one combined sleep per RPC (rtt charged ONCE even for a
-        # batch + transfer proportional to the summed frame bytes) to keep
-        # the host-sleep granularity bias (~100us/sleep on Linux) uniform
-        if lat.rtt_us or lat.per_mib_us:
-            time.sleep(lat.rtt_us * 1e-6 + (req_bytes + resp_bytes)
-                       / (1024 * 1024) * lat.per_mib_us * 1e-6)
+        # network: the byte-proportional transfer is a PER-SERVER resource
+        # (the server's NIC/disk ships one stream at a time), so it
+        # serializes under the same service lock — this is what a striped
+        # fan-out spreads across hosts, and without it N concurrent
+        # readers of one host's 32 MiB file would stream "in parallel"
+        # through hardware the model claims is a single server.  The RTT
+        # is propagation: it overlaps freely across threads.
+        xfer_s = ((req_bytes + resp_bytes) / (1024 * 1024)
+                  * lat.per_mib_us * 1e-6)
+        if xfer_s:
+            if contended:
+                with svc_lock:
+                    time.sleep(xfer_s)
+            else:
+                time.sleep(xfer_s)
+        if lat.rtt_us:
+            time.sleep(lat.rtt_us * 1e-6)
         if stats is not None:
             stats.record(msg.type, req_bytes, resp_bytes, critical,
-                         subops=n_sub)
+                         subops=n_sub, addr=addr)
         return resp
 
     def request_many(self, addr: Addr, msgs: List[Message], *,
@@ -143,24 +230,33 @@ class InProcTransport(Transport):
         pipelining: all frames are outstanding at once, so their network
         RTT sleeps overlap while the per-server service lock still
         serializes the service time — N pipelined requests cost ~1 RTT +
-        N service times, exactly the asymmetry a real network shows."""
+        N service times, exactly the asymmetry a real network shows.
+
+        Requests ride the persistent worker pool (bounded transport-wide;
+        excess messages queue and run as workers free up)."""
         if len(msgs) <= 1:
             return [self.request(addr, m, critical=critical, stats=stats)
                     for m in msgs]
         results: List[Optional[Message]] = [None] * len(msgs)
+        done = threading.Event()
+        remaining = [len(msgs)]
+        rlock = threading.Lock()
 
         def one(i: int, m: Message) -> None:
-            results[i] = self.request(addr, m, critical=critical, stats=stats)
+            try:
+                results[i] = self.request(addr, m, critical=critical,
+                                          stats=stats)
+            except Exception as e:  # a handler bug must not strand the wait
+                results[i] = error(5, f"transport task failed: {e}")  # EIO
+            finally:
+                with rlock:
+                    remaining[0] -= 1
+                    if remaining[0] == 0:
+                        done.set()
 
-        # bounded in-flight window, like MAX_INFLIGHT_PER_CONN on TCP
-        for base in range(0, len(msgs), MAX_INFLIGHT_PER_CONN):
-            wave = [threading.Thread(target=one, args=(i, m))
-                    for i, m in enumerate(msgs[base:base + MAX_INFLIGHT_PER_CONN],
-                                          start=base)]
-            for t in wave:
-                t.start()
-            for t in wave:
-                t.join()
+        for i, m in enumerate(msgs):
+            self._pool.submit(lambda i=i, m=m: one(i, m))
+        done.wait()
         return results  # type: ignore[return-value]
 
 
@@ -169,13 +265,18 @@ class InProcTransport(Transport):
 # ---------------------------------------------------------------------------
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    buf = b""
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
+    # preallocate + recv_into: the old `bytes +=` per chunk re-copied the
+    # whole prefix on every recv, turning a multi-MiB striped frame into
+    # O(n^2) memcpy on the receive hot path
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        k = sock.recv_into(view[got:], n - got)
+        if not k:
             raise ConnectionError("peer closed")
-        buf += chunk
-    return buf
+        got += k
+    return bytes(buf)
 
 
 def _recv_frame(sock: socket.socket) -> bytes:
@@ -431,7 +532,7 @@ class TCPTransport(Transport):
         resp = waiter.resp
         if stats is not None:
             stats.record(msg.type, msg.nbytes, resp.nbytes, critical,
-                         subops=n_sub)
+                         subops=n_sub, addr=addr)
         return resp
 
     def request(self, addr: Addr, msg: Message, *, critical: bool = True,

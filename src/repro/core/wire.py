@@ -48,6 +48,18 @@ class MsgType(IntEnum):
     MKNOD_OBJ = 18      # allocate file/dir object on a data host (cross-host)
     LINK_DENTRY = 19    # insert dentry(+10-byte perm) into parent's namespace host
     FSYNC = 21          # durability barrier: flush object data + metadata to disk
+    # --- striped data plane (chunk objects on stripe hosts) ---
+    # A striped file's layout (stripe_size + ordered host list) is allocated
+    # at CREATE and travels in the dentry next to the 10-byte perm record.
+    # Chunk objects live in each stripe host's object store keyed by
+    # (home_host, file_id, stripe_index); they carry NO metadata and NO
+    # leases — the file's home host (where the dentry's inode points) stays
+    # the single coherence authority, so all chunk verbs are blind storage.
+    CHUNK_READ = 22     # read a byte range of one chunk object
+    CHUNK_WRITE = 23    # write a byte range of one chunk object
+    CHUNK_TRUNC = 24    # clip/delete chunk objects (home-host truncate fan-out)
+    CHUNK_UNLINK = 25   # remove chunk objects (home-host unlink fan-out)
+    CHUNK_FSYNC = 26    # fsync chunk objects (home-host fsync fan-out)
     # --- server -> client (callback channel) ---
     INVALIDATE = 32     # server asks client to invalidate cached tree nodes
     REVOKE_LEASE = 33   # server recalls a read lease before applying a data
@@ -85,23 +97,58 @@ class Message:
     type: MsgType
     header: Dict[str, Any] = field(default_factory=dict)
     payload: bytes = b""
+    # cached frame size (set by encode()/decode(), reused by nbytes): the
+    # header JSON used to be re-dumped for every nbytes read, which ran
+    # once per request and once per response on the transport hot path —
+    # double-serializing every header.  The cache holds the size of the
+    # frame as it actually crossed the wire, which is also the honest
+    # figure for RpcStats byte accounting (transport-level framing fields
+    # like _rid popped AFTER receive don't un-count their bytes).
+    _nbytes: Optional[int] = field(default=None, repr=False, compare=False)
 
     def encode(self) -> bytes:
-        return encode(self.type, self.header, self.payload)
+        frame = encode(self.type, self.header, self.payload)
+        self._nbytes = len(frame)
+        return frame
 
     @staticmethod
     def decode(frame: bytes) -> "Message":
         t, h, p = decode(frame)
-        return Message(t, h, p)
+        m = Message(t, h, p)
+        m._nbytes = len(frame)
+        return m
 
     @property
     def nbytes(self) -> int:
         # sized exactly as encode() frames it (compact JSON separators —
         # the default ones would overcount every RpcStats byte figure) but
-        # without copying the payload: this runs twice per RPC on the
-        # transport hot path, and flush envelopes carry multi-MiB payloads
-        hj = json.dumps(self.header, separators=(",", ":")).encode()
-        return _HDR.size + len(hj) + len(self.payload)
+        # without copying the payload; computed at most once per message
+        if self._nbytes is None:
+            hj = json.dumps(self.header, separators=(",", ":")).encode()
+            self._nbytes = _HDR.size + len(hj) + len(self.payload)
+        return self._nbytes
+
+
+# ---------------------------------------------------------------------------
+# Stripe layout record: {"ss": stripe_size, "hosts": [home, h1, ...]}.
+# Allocated at CREATE, stored in the dentry next to the 10-byte perm record
+# and in the home host's FileMeta; chunk `index` covers file bytes
+# [index*ss, (index+1)*ss) and lives on hosts[index % len(hosts)].
+# ---------------------------------------------------------------------------
+
+def stripe_spans(layout: Dict[str, Any], offset: int, end: int):
+    """Split the byte span [offset, end) at stripe boundaries: yields
+    (chunk_index, host_id, offset_within_chunk, length) tuples in file
+    order — the unit both the scatter (write) and gather (read) paths
+    fan out by."""
+    ss = layout["ss"]
+    hosts = layout["hosts"]
+    idx = offset // ss
+    while idx * ss < end:
+        lo = max(offset, idx * ss)
+        hi = min(end, (idx + 1) * ss)
+        yield idx, hosts[idx % len(hosts)], lo - idx * ss, hi - lo
+        idx += 1
 
 
 def ok(header: Optional[Dict[str, Any]] = None, payload: bytes = b"") -> Message:
@@ -152,6 +199,9 @@ class RpcStats:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self.by_type: Counter = Counter()
+        self.by_host: Counter = Counter()  # server addr -> RPCs sent there:
+        # the scatter-gather fan-out metric (how many hosts a striped read
+        # actually touched) falls straight out of this counter
         self.critical_path: int = 0      # RPCs the caller blocked on
         self.async_offpath: int = 0      # RPCs issued asynchronously (close())
         self.bytes_sent: int = 0
@@ -159,9 +209,11 @@ class RpcStats:
         self.subops: int = 0             # operations carried (batch sub-msgs)
 
     def record(self, msg_type: MsgType, sent: int, recv: int, critical: bool,
-               subops: int = 1) -> None:
+               subops: int = 1, addr: str = "") -> None:
         with self._lock:
             self.by_type[msg_type.name] += 1
+            if addr:
+                self.by_host[addr] += 1
             if critical:
                 self.critical_path += 1
             else:
@@ -178,6 +230,7 @@ class RpcStats:
         with self._lock:
             return {
                 "by_type": dict(self.by_type),
+                "by_host": dict(self.by_host),
                 "total": self.total,
                 "critical_path": self.critical_path,
                 "async_offpath": self.async_offpath,
@@ -189,6 +242,7 @@ class RpcStats:
     def reset(self) -> None:
         with self._lock:
             self.by_type.clear()
+            self.by_host.clear()
             self.critical_path = 0
             self.async_offpath = 0
             self.bytes_sent = 0
