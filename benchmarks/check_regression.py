@@ -59,6 +59,27 @@ def extract(rows: List[dict]) -> Dict[str, float]:
             # quietly collapsed onto fewer servers, and the gate only fails
             # on values ABOVE the committed ceiling
             out[key + "/fanout_deficit"] = 4 - r["fanout_hosts"]
+        elif bench == "fig8_stripe" and r.get("mode") == "scrub":
+            # chunk-hygiene gates, all exact counts.  Shortfalls are gated
+            # as DEFICITS (expected - observed, ceiling 0) so a scrubber
+            # that stops reaping/clipping FAILS rather than "improving";
+            # the raw epoch_rejects ceiling additionally catches a retry
+            # storm, and the residual/debt metrics pin "a second pass
+            # finds nothing" — a future chunk leak moves one of these
+            # above 0 and the gate, not just the docs, regresses.
+            key = "fig8/buffetfs/scrub"
+            out[key + "/orphan_deficit"] = (
+                r["orphans_expected"] - r["orphans_reaped"])
+            out[key + "/clip_deficit_bytes"] = (
+                r["clip_bytes_expected"] - r["bytes_clipped"])
+            out[key + "/epoch_reject_deficit"] = (
+                r["epoch_rejects_expected"] - r["epoch_rejects"])
+            out[key + "/epoch_rejects"] = r["epoch_rejects"]
+            out[key + "/residual_orphans"] = r["residual_orphans"]
+            out[key + "/residual_bytes_clipped"] = r["residual_bytes_clipped"]
+            out[key + "/reap_failures_after_scrub"] = (
+                r["reap_failures_after_scrub"])
+            out[key + "/scrub_errors"] = r["scrub_errors"]
         elif bench == "rpc_table":
             key = f"rpc/{r['system']}/{r['op']}"
             out[key + "/warm_critical"] = r["warm_critical"]

@@ -26,6 +26,13 @@ Measured units:
   readahead   informational: block-wise sequential streaming through a
               page-cache agent with the sequential-read detector on; the
               async readahead fills the cache off the critical path.
+  scrub       deterministic chunk-hygiene scenario (zero-latency cluster,
+              counts only): one unreachable-host unlink orphan, one
+              failed-scatter overhang, one truncate-vs-scatter epoch race.
+              Reports what the scrub pass reaped/clipped, the EPOCHSTALE
+              rejections served, and what a SECOND pass still finds
+              (residuals — must be zero).  These are the metrics the
+              regression gate pins so a future chunk leak fails CI.
 
 Acceptance (verdict lines): 4-host striped streaming >= 3x the single-host
 bandwidth, and >= Lustre-Normal's.  Warm small-file behavior is fig7's
@@ -201,6 +208,93 @@ def _readahead_row(cluster, hosts: int) -> Dict:
     }
 
 
+def _scrub_row() -> Dict:
+    """Deterministic scrub/epoch metrics on a zero-latency 4-host striped
+    cluster (64 KiB stripes: counts are what matter, not bandwidth):
+
+      * orphans: a 4-chunk file is unlinked while its hosts[1] stripe host
+        is down — exactly ONE chunk survives as an orphan (and one unit of
+        chunk_reap_failures debt), which the scrub must reap;
+      * clipped bytes: a simulated failed scatter leaves exactly
+        CLIP_BYTES beyond a 1-chunk file's committed size;
+      * epoch rejects: a writer that last saw epoch 0 writes after another
+        client's shrinking truncate — its first scatter is refused
+        EPOCHSTALE exactly once, then the retry lands.
+
+    Every number is an exact count, so the regression gate can pin the
+    deficits (expected − observed) and the second-pass residuals at 0."""
+    from repro.core import BAgent, BuffetCluster, Inode
+    from repro.core.wire import Message, MsgType
+    import shutil
+    import tempfile
+
+    CLIP_BYTES = 1000
+    ss = 64 * 1024
+    root = tempfile.mkdtemp(prefix="buffet_scrub_")
+    cluster = BuffetCluster(root_dir=root, n_servers=4,
+                            latency=LatencyModel(0, 0, 0),
+                            stripe_count=4, stripe_size=ss)
+    try:
+        a = BAgent(cluster)
+        lib = BLib(a)
+        lib.makedirs("/scrub")
+
+        # --- orphan: unlink with one stripe host unreachable -----------
+        lib.write_file("/scrub/orphan", b"o" * (4 * ss))
+        node, _ = a._walk("/scrub/orphan")
+        victim = node.layout["hosts"][1]  # holds exactly chunk 1
+        cluster.kill_server(victim)
+        lib.unlink("/scrub/orphan")
+        cluster.restart_server(victim)
+
+        # --- overhang: a failed scatter beyond the committed size ------
+        lib.write_file("/scrub/garbage", b"g" * ss)
+        gnode, _ = a._walk("/scrub/garbage")
+        gino = Inode.unpack(gnode.ino)
+        ghost = gnode.layout["hosts"][2]
+        cluster.servers[ghost].handle(Message(MsgType.CHUNK_WRITE, {
+            "home": gino.host_id, "file_id": gino.file_id, "index": 2,
+            "offset": 0, "epoch": a._epoch_of((gino.host_id,
+                                               gino.file_id))},
+            b"G" * CLIP_BYTES))
+
+        # --- epoch race: write after another client's shrink -----------
+        lib.write_file("/scrub/race", b"r" * (2 * ss))
+        b = BAgent(cluster)
+        rnode, _ = b._walk("/scrub/race")
+        rino = Inode.unpack(rnode.ino)
+        b._rpc(rino.host_id, Message(MsgType.TRUNCATE, {
+            "file_id": rino.file_id, "size": ss,
+            "client_id": b.client_id}))
+        f = lib.open("/scrub/race", "r+b")
+        f.write(b"E" * 100)  # one chunk, one host: exactly one refusal
+        f.close()
+
+        pass1 = lib.scrub()
+        pass2 = lib.scrub()
+        rejects = sum(s.epoch_rejects for s in cluster.servers.values())
+        reap_debt = sum(s.chunk_reap_failures
+                        for s in cluster.servers.values())
+        a.shutdown()
+        b.shutdown()
+        return {
+            "bench": "fig8_stripe", "mode": "scrub", "system": "buffetfs",
+            "hosts": 4,
+            "orphans_expected": 1, "orphans_reaped": pass1["orphans_reaped"],
+            "clip_bytes_expected": CLIP_BYTES,
+            "bytes_clipped": pass1["bytes_clipped"],
+            "epoch_rejects_expected": 1, "epoch_rejects": rejects,
+            "epoch_retries": a.epoch_retries,
+            "residual_orphans": pass2["orphans_reaped"],
+            "residual_bytes_clipped": pass2["bytes_clipped"],
+            "reap_failures_after_scrub": reap_debt,
+            "scrub_errors": pass1["scrub_errors"] + pass2["scrub_errors"],
+        }
+    finally:
+        cluster.shutdown()
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def run(host_counts: Sequence[int] = HOST_COUNTS,
         latency: LatencyModel = FIG8_LATENCY,
         passes: int = STREAM_PASSES,
@@ -228,6 +322,7 @@ def run(host_counts: Sequence[int] = HOST_COUNTS,
         if hotfile_workers:
             rows.append(_hotfile_row("lustre-normal", 1, cluster,
                                      hotfile_workers))
+    rows.append(_scrub_row())
     return rows
 
 
@@ -266,6 +361,22 @@ def verdict(rows: List[Dict]) -> List[str]:
             f"hotfile: 4-host {h4['agg_mb_per_s']}MB/s aggregate vs "
             f"1-host {h1['agg_mb_per_s']}MB/s "
             f"({'PASS' if ok else 'FAIL'} concurrency scales)")
+    sc = next((r for r in rows if r["mode"] == "scrub"), None)
+    if sc:
+        ok = (sc["orphans_reaped"] == sc["orphans_expected"]
+              and sc["bytes_clipped"] == sc["clip_bytes_expected"]
+              and sc["epoch_rejects"] == sc["epoch_rejects_expected"]
+              and sc["residual_orphans"] == 0
+              and sc["residual_bytes_clipped"] == 0
+              and sc["reap_failures_after_scrub"] == 0)
+        lines.append(
+            f"scrub: reaped {sc['orphans_reaped']}/{sc['orphans_expected']} "
+            f"orphans, clipped {sc['bytes_clipped']}/"
+            f"{sc['clip_bytes_expected']}B, {sc['epoch_rejects']} epoch "
+            f"reject(s), residual {sc['residual_orphans']}+"
+            f"{sc['residual_bytes_clipped']}B, reap debt "
+            f"{sc['reap_failures_after_scrub']} "
+            f"({'PASS' if ok else 'FAIL'} chunk stores reconcile to zero)")
     return lines
 
 
@@ -285,6 +396,14 @@ def main() -> None:
         elif r["mode"] == "hotfile":
             print(f"fig8,hotfile,{r['system']},h{r['hosts']},"
                   f"{r['agg_mb_per_s']}MB/s,w={r['workers']}")
+        elif r["mode"] == "scrub":
+            print(f"fig8,scrub,orphans={r['orphans_reaped']}/"
+                  f"{r['orphans_expected']},"
+                  f"clipped={r['bytes_clipped']}/{r['clip_bytes_expected']}B,"
+                  f"epoch_rejects={r['epoch_rejects']},"
+                  f"residual={r['residual_orphans']}+"
+                  f"{r['residual_bytes_clipped']}B,"
+                  f"reap_debt={r['reap_failures_after_scrub']}")
         else:
             print(f"fig8,readahead,h{r['hosts']},{r['mb_per_s']}MB/s,"
                   f"ra={r['readaheads']},hits={r['cache_hits']},"

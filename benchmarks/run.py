@@ -85,6 +85,15 @@ def main() -> None:
             print(f"fig8_{r['system']}_h{r['hosts']}_hotfile,"
                   f"{r['agg_mb_per_s']}MBps,workers={r['workers']}",
                   flush=True)
+        elif r["mode"] == "scrub":
+            print(f"fig8_scrub,orphans={r['orphans_reaped']}/"
+                  f"{r['orphans_expected']},"
+                  f"clipped={r['bytes_clipped']}/"
+                  f"{r['clip_bytes_expected']}B "
+                  f"epoch_rejects={r['epoch_rejects']} "
+                  f"residual={r['residual_orphans']}+"
+                  f"{r['residual_bytes_clipped']}B "
+                  f"reap_debt={r['reap_failures_after_scrub']}", flush=True)
         else:
             print(f"fig8_readahead_h{r['hosts']},{r['mb_per_s']}MBps,"
                   f"ra={r['readaheads']} hits={r['cache_hits']} "
@@ -175,6 +184,29 @@ def main() -> None:
             f"fig8: single-host streaming read cost "
             f"{s1['crit_rpcs_per_pass']} critical RPCs (expected 1: the "
             f"unstriped fast path regressed)")
+    sc = next((r for r in rows if r.get("bench") == "fig8_stripe"
+               and r.get("mode") == "scrub"), None)
+    if sc:
+        if (sc["orphans_reaped"] != sc["orphans_expected"]
+                or sc["bytes_clipped"] != sc["clip_bytes_expected"]):
+            failures.append(
+                f"fig8 scrub: reaped {sc['orphans_reaped']}/"
+                f"{sc['orphans_expected']} orphans, clipped "
+                f"{sc['bytes_clipped']}/{sc['clip_bytes_expected']}B "
+                f"(the scrubber stopped reconciling)")
+        if (sc["residual_orphans"] or sc["residual_bytes_clipped"]
+                or sc["reap_failures_after_scrub"]):
+            failures.append(
+                f"fig8 scrub: residuals after a full scrub — "
+                f"{sc['residual_orphans']} orphans, "
+                f"{sc['residual_bytes_clipped']}B overhang, "
+                f"{sc['reap_failures_after_scrub']} reap debt "
+                f"(chunk stores no longer reconcile to zero)")
+        if sc["epoch_rejects"] != sc["epoch_rejects_expected"]:
+            failures.append(
+                f"fig8 scrub: {sc['epoch_rejects']} EPOCHSTALE rejects "
+                f"(expected {sc['epoch_rejects_expected']}: the "
+                f"truncate-vs-scatter window reopened or retries storm)")
     if failures:
         for f in failures:
             print(f"VERDICT FAIL: {f}", file=sys.stderr)

@@ -17,8 +17,8 @@ from .perms import (Credentials, FSError, O_CREAT, O_RDONLY, O_RDWR, O_TRUNC,
                     O_WRONLY, PermRecord, R_OK, W_OK, X_OK, access_ok)
 from .service import Operation, OperationRegistry, SERVER_OPS
 from .transport import InProcTransport, LatencyModel, TCPTransport, ZERO_LATENCY
-from .wire import (Message, MsgType, RpcStats, batch_status, pack_batch,
-                   unpack_batch)
+from .wire import (EPOCHSTALE, Message, MsgType, RpcStats, batch_status,
+                   pack_batch, unpack_batch)
 
 __all__ = [
     "BAgent", "DEFAULT_CACHE_BLOCK", "DEFAULT_CACHE_BUDGET", "TreeNode",
@@ -28,7 +28,7 @@ __all__ = [
     "O_CREAT", "O_RDONLY", "O_RDWR", "O_TRUNC", "O_WRONLY",
     "R_OK", "W_OK", "X_OK",
     "InProcTransport", "LatencyModel", "TCPTransport", "ZERO_LATENCY",
-    "Message", "MsgType", "RpcStats",
+    "EPOCHSTALE", "Message", "MsgType", "RpcStats",
     "Operation", "OperationRegistry", "SERVER_OPS",
     "batch_status", "pack_batch", "unpack_batch",
 ]

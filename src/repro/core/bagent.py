@@ -52,8 +52,9 @@ from .perms import (Credentials, FSError, O_CREAT, PermRecord, R_OK, W_OK,
                     X_OK, access_ok, err, flags_to_access, O_TRUNC)
 from .service import MAX_TREE_DEPTH
 from .transport import Transport
-from .wire import (Message, MsgType, RpcStats, error as wire_error, ok,
-                   pack_batch, stripe_spans, unpack_batch)
+from .wire import (EPOCHSTALE, Message, MsgType, RpcStats,
+                   error as wire_error, ok, pack_batch, stripe_spans,
+                   unpack_batch)
 
 _agent_counter = itertools.count()
 
@@ -74,6 +75,11 @@ DEFAULT_CACHE_BUDGET = 32 * 1024 * 1024
 # readahead default: how far past the current offset the sequential-read
 # detector prefetches into the page cache (clipped to EOF)
 DEFAULT_READAHEAD_WINDOW = 512 * 1024
+
+# scatter/commit rounds re-run when a concurrent truncate moves the chunk
+# epoch mid-write: each retry means ANOTHER truncate interleaved, so more
+# than a handful signals pathological contention, not a transient race
+_EPOCH_RETRIES = 8
 
 
 def _chunks(items: List, n: int) -> List[List]:
@@ -391,7 +397,8 @@ class _FlushJob:
     """One handle's unit of work in a write-behind flush cycle."""
 
     __slots__ = ("fh", "extents", "trunc", "io_h", "nbytes", "error",
-                 "first_sub_failed", "gen", "ver", "new_size", "wseq")
+                 "first_sub_failed", "gen", "ver", "new_size", "wseq",
+                 "epoch")
 
     def __init__(self, fh: "FileHandle", extents: List[_Extent], trunc: bool,
                  io_h: Dict, gen: int = 0, ver: int = 0) -> None:
@@ -406,6 +413,7 @@ class _FlushJob:
         self.ver = ver                 # server incarnation at snapshot time
         self.new_size: Optional[int] = None  # max size acked by the server
         self.wseq = 0                  # max mutation seq acked by the server
+        self.epoch = 0                 # chunk epoch the scatter ran under
 
     @property
     def trunc_only(self) -> bool:
@@ -504,6 +512,16 @@ class BAgent:
         # drain() returns it so benchmarks/tests can assert clean shutdown.
         self.async_errors = 0
 
+        # per-file chunk epochs learned from striped responses (READ/
+        # commit/TRUNCATE headers and EPOCHSTALE refusals).  A scatter is
+        # stamped with the epoch known here; a stale guess never corrupts
+        # anything — the stripe hosts refuse it or the commit dies
+        # EPOCHSTALE — it only costs one retry at the epoch the refusal
+        # hands back.  Monotonic per key (epochs never move backwards).
+        self._epoch_lock = threading.Lock()
+        self._epochs: Dict[Tuple[int, int], int] = {}
+        self.epoch_retries = 0  # scatter/commit rounds re-run EPOCHSTALE
+
         # lease-consistent page cache (None => every read RPCs as before)
         self._cache: Optional[_PageCache] = (
             _PageCache(cache_block, cache_budget) if read_cache else None)
@@ -546,8 +564,30 @@ class BAgent:
             resp = self.transport.request(self.config.addr(host_id), msg,
                                           critical=critical, stats=self.stats)
         if resp.type is MsgType.ERROR:
-            raise err(resp.header.get("errno", errno.EIO), resp.header.get("msg", ""))
+            raise self._wire_err(resp)
         return resp
+
+    @staticmethod
+    def _wire_err(resp: Message) -> FSError:
+        """ERROR frame -> FSError; an EPOCHSTALE refusal carries the
+        current chunk epoch in its header, preserved on the exception so
+        the retry can re-scatter at the right epoch without another RPC."""
+        e = err(resp.header.get("errno", errno.EIO),
+                resp.header.get("msg", ""))
+        if "epoch" in resp.header:
+            e.epoch = resp.header["epoch"]
+        return e
+
+    def _epoch_of(self, key: Tuple[int, int]) -> int:
+        with self._epoch_lock:
+            return self._epochs.get(key, 0)
+
+    def _note_epoch(self, key: Tuple[int, int], epoch: Optional[int]) -> None:
+        if epoch is None:
+            return
+        with self._epoch_lock:
+            if epoch > self._epochs.get(key, 0):
+                self._epochs[key] = epoch
 
     def _rpc_batch(self, host_id: int, msgs: List[Message], *,
                    critical: bool = True) -> List[Message]:
@@ -569,7 +609,10 @@ class BAgent:
                 if e.errno in (errno.ENOTCONN, errno.ETIMEDOUT,
                                errno.ECONNREFUSED, errno.ESTALE):
                     raise
-                return [wire_error(e.errno or errno.EIO, str(e))]
+                we = wire_error(e.errno or errno.EIO, str(e))
+                if hasattr(e, "epoch"):  # EPOCHSTALE keeps its epoch hint
+                    we.header["epoch"] = e.epoch
+                return [we]
         # the envelope rides the ordinary RPC path: _rpc stamps the server
         # incarnation, retries once on ESTALE, and raises on envelope-level
         # errors — one copy of the recovery protocol, not two
@@ -829,6 +872,8 @@ class BAgent:
             if not (ignore_enoent and e.errno == errno.ENOENT):
                 raise
         fh.pending_trunc = False
+        if resp is not None:
+            self._note_epoch(_ino_key(fh.ino), resp.header.get("epoch"))
         if self._cache is not None:  # pre-truncation blocks are dead
             key = _ino_key(fh.ino)
             self._cache.drop(key)
@@ -908,6 +953,7 @@ class BAgent:
         gen, ver = self._lease_request(key, ino.host_id, h)
         resp = self._rpc(ino.host_id, Message(MsgType.READ, h),
                          critical=critical)
+        self._note_epoch(key, resp.header.get("epoch"))
         size = resp.header.get("size", offset + len(resp.payload))
         if fh.layout is None:
             data = resp.payload
@@ -1003,12 +1049,16 @@ class BAgent:
 
     def _scatter_chunks(self, ino: Inode, layout: Dict,
                         extents: List[Tuple[int, bytes]], *,
-                        critical: bool) -> None:
+                        critical: bool, epoch: int = 0) -> None:
         """Scatter write extents to the stripe hosts' chunk objects:
         split at stripe boundaries, pipeline per host, hosts concurrent.
         The commit WRITE to the home host is the mutation: size/wseq
         advance and leases revoke there, under the file lock, so nothing
-        STALE can be cached after the write is acked.  Visibility caveat:
+        STALE can be cached after the write is acked.  Every CHUNK_WRITE
+        carries the chunk `epoch` the scatter was planned under: a stripe
+        host that already saw a newer epoch (a truncate clipped in
+        between) refuses it EPOCHSTALE, and the caller re-plans at the
+        epoch the refusal hands back.  Visibility caveat:
         an in-place overwrite mutates existing chunk bytes before the
         commit, so a read racing the scatter can return a mix of old and
         new bytes within one call — concurrent unsynchronized read/write
@@ -1024,16 +1074,36 @@ class BAgent:
                 per_host.setdefault(host, []).append(Message(
                     MsgType.CHUNK_WRITE,
                     {"home": ino.host_id, "file_id": ino.file_id,
-                     "index": idx, "offset": coff},
+                     "index": idx, "offset": coff, "epoch": epoch},
                     bytes(edata[pos - eoff : pos - eoff + clen])))
 
         def send(host: int, msgs) -> None:
             for r in self._rpc_many(host, msgs, critical=critical):
                 if r.type is MsgType.ERROR:
-                    raise err(r.header.get("errno", errno.EIO),
-                              r.header.get("msg", "chunk write failed"))
+                    raise self._wire_err(r)
 
         self._fanout_hosts(per_host, send)
+
+    def _scatter_with_retry(self, ino: Inode, layout: Dict,
+                            extents: List[Tuple[int, bytes]], *,
+                            critical: bool) -> int:
+        """Scatter, re-planning at the newer epoch whenever a stripe host
+        refuses EPOCHSTALE (a truncate clipped between our epoch snapshot
+        and the scatter landing).  Returns the epoch the scatter succeeded
+        under — the epoch the commit must carry."""
+        key = (ino.host_id, ino.file_id)
+        for _ in range(_EPOCH_RETRIES):
+            epoch = self._epoch_of(key)
+            try:
+                self._scatter_chunks(ino, layout, extents,
+                                     critical=critical, epoch=epoch)
+                return epoch
+            except FSError as e:
+                if e.errno != EPOCHSTALE:
+                    raise
+                self._note_epoch(key, getattr(e, "epoch", epoch + 1))
+                self.epoch_retries += 1
+        raise err(errno.EIO, "scatter kept losing epoch races")
 
     # ------------------------------------------------------------------
     # readahead: sequential-read detection + async cache prefill
@@ -1077,8 +1147,16 @@ class BAgent:
                 if not fh.pending_trunc:  # never trigger a trunc from ra
                     self._fetch_span(fh, off, ln, critical=False,
                                      record_open=False)
-            except Exception:
+            except FSError:
                 pass  # prefetch is best-effort; the demand read will RPC
+            except Exception:
+                # anything else is a BUG in the prefetch path, not an I/O
+                # outcome: still swallow it (a prefetch must never take
+                # the agent down) but count it where drain() reports —
+                # a broken readahead path must not be able to hide forever
+                # behind "the demand read worked anyway"
+                with self._wb_cond:
+                    self.async_errors += 1
             finally:
                 with self._ra_lock:
                     ev = self._ra_inflight.pop(token, None)
@@ -1221,13 +1299,36 @@ class BAgent:
         gen = ver = 0
         if self._cache is not None:
             gen, ver = self._cache.gen(key), self.config.version(ino.host_id)
-        if data:
-            self._scatter_chunks(ino, fh.layout, [(offset, data)],
-                                 critical=True)
-        h = {"file_id": ino.file_id, "client_id": self.client_id,
-             "offset": offset, "commit": [[offset, len(data)]],
-             **self._io_header(fh)}
-        resp = self._rpc(ino.host_id, Message(MsgType.WRITE, h))
+        io_h = self._io_header(fh)
+        resp = None
+        for _ in range(_EPOCH_RETRIES):
+            epoch = self._epoch_of(key)
+            try:
+                if data:
+                    self._scatter_chunks(ino, fh.layout, [(offset, data)],
+                                         critical=True, epoch=epoch)
+                h = {"file_id": ino.file_id, "client_id": self.client_id,
+                     "offset": offset, "commit": [[offset, len(data)]],
+                     "epoch": epoch, **io_h}
+                resp = self._rpc(ino.host_id, Message(MsgType.WRITE, h))
+            except FSError as e:
+                if e.errno != EPOCHSTALE:
+                    raise
+                # a truncate interleaved our scatter→commit: nothing was
+                # published (the commit died at the epoch gate), so retry
+                # the WHOLE scatter at the epoch the refusal handed back —
+                # the acked result is then fully backed by the chunk store
+                self._note_epoch(key, getattr(e, "epoch", epoch + 1))
+                self.epoch_retries += 1
+                # io_h is reused as-is: the server records the deferred
+                # open BEFORE the epoch gate, but registration is an
+                # idempotent set-add of the same (client, pid, fd), so
+                # re-sending the record with the retry is harmless
+                continue
+            break
+        else:
+            raise err(errno.EIO, "striped write kept losing epoch races")
+        self._note_epoch(key, resp.header.get("epoch"))
         if self._cache is not None:
             self._cache.patch(key, gen, [(offset, bytes(data))],
                               resp.header.get("size"), ver,
@@ -1285,12 +1386,17 @@ class BAgent:
             if msg is None:
                 self._close_q.task_done()
                 return
-            host = msg.header.pop("host")
             try:
+                host = msg.header.pop("host")
                 self._rpc(host, msg, critical=False)
             except Exception:
-                # best-effort wrap-up (server GC would reap on lease expiry)
-                # but not silent: the count surfaces through drain()
+                # best-effort wrap-up (server GC would reap on lease
+                # expiry) but never silent: FSError or not, the failure is
+                # latched in async_errors and surfaces through drain().
+                # The try covers the whole wrap-up, not just the RPC — an
+                # unexpected error before the send must not kill this
+                # worker thread (drain()'s queue join would hang forever
+                # on a dead consumer).
                 with self._wb_cond:
                     self.async_errors += 1
             finally:
@@ -1476,8 +1582,10 @@ class BAgent:
                         critical=False)
                     j.io_h = {}  # the open record rode the TRUNCATE
                     j.wseq = max(j.wseq, resp.header.get("wseq", 0))
+                    self._note_epoch(_ino_key(j.fh.ino),
+                                     resp.header.get("epoch"))
                 if j.extents:
-                    self._scatter_chunks(
+                    j.epoch = self._scatter_with_retry(
                         ino, j.fh.layout,
                         [(e.offset, bytes(e.data)) for e in j.extents],
                         critical=False)
@@ -1486,6 +1594,7 @@ class BAgent:
                         "offset": j.extents[0].offset,
                         "commit": [[e.offset, len(e.data)]
                                    for e in j.extents],
+                        "epoch": j.epoch,
                         **j.io_h}))
             except FSError as e:
                 j.error = e
@@ -1530,16 +1639,58 @@ class BAgent:
             return
         resps = self._rpc_batch(host, [m for _, m in commits],
                                 critical=False)
-        for (j, _), r in zip(commits, resps):
+        for (j, m), r in zip(commits, resps):
+            if (r.type is MsgType.ERROR
+                    and r.header.get("errno") == EPOCHSTALE):
+                # a truncate slid between this job's scatter and its
+                # commit: nothing was published, so the flusher — the only
+                # party still holding the bytes — must re-scatter at the
+                # new epoch rather than latch an error for data the caller
+                # was already promised (write() returned long ago)
+                self._note_epoch(_ino_key(j.fh.ino), r.header.get("epoch"))
+                r = self._recommit_stale_job(host, j, m)
             if r.type is MsgType.ERROR:
-                j.error = err(r.header.get("errno", errno.EIO),
-                              r.header.get("msg", j.fh.path))
+                j.error = self._wire_err(r)
                 j.first_sub_failed = bool(j.io_h)
             else:
                 s = r.header.get("size")
                 if s is not None and (j.new_size is None or s > j.new_size):
                     j.new_size = s
                 j.wseq = max(j.wseq, r.header.get("wseq", 0))
+                self._note_epoch(_ino_key(j.fh.ino), r.header.get("epoch"))
+
+    def _recommit_stale_job(self, host: int, j: _FlushJob,
+                            commit: Message) -> Message:
+        """Redo one write-behind job whose commit died EPOCHSTALE:
+        re-scatter its extents at the refreshed epoch and re-send the
+        commit, until it lands or the retry budget is spent.  ONE flat
+        budget covers scatter and commit refusals alike (a scatter refusal
+        is handled inline here, not via _scatter_with_retry, so the rounds
+        cannot multiply to retries²).  Returns the final (OK or ERROR)
+        response for the caller's normal settling."""
+        ino = Inode.unpack(j.fh.ino)
+        key = _ino_key(j.fh.ino)
+        extents = [(e.offset, bytes(e.data)) for e in j.extents]
+        resp = wire_error(errno.EIO, "commit kept losing epoch races")
+        for _ in range(_EPOCH_RETRIES):
+            self.epoch_retries += 1
+            epoch = self._epoch_of(key)
+            try:
+                self._scatter_chunks(ino, j.fh.layout, extents,
+                                     critical=False, epoch=epoch)
+            except FSError as e:
+                if e.errno != EPOCHSTALE:
+                    return wire_error(e.errno or errno.EIO, str(e))
+                self._note_epoch(key, getattr(e, "epoch", epoch + 1))
+                continue
+            j.epoch = epoch
+            commit.header["epoch"] = epoch
+            resp = self._rpc_batch(host, [commit], critical=False)[0]
+            if (resp.type is not MsgType.ERROR
+                    or resp.header.get("errno") != EPOCHSTALE):
+                return resp
+            self._note_epoch(key, resp.header.get("epoch"))
+        return resp
 
     def _flush_plain_jobs(self, host: int, jobs: List[_FlushJob]) -> None:
         """Build WRITE/TRUNCATE sub-messages for each job, pack them into
@@ -1754,10 +1905,13 @@ class BAgent:
         pino = Inode.unpack(parent.ino)
         self._rpc(pino.host_id, Message(MsgType.UNLINK, {
             "parent": pino.file_id, "name": name, "client_id": self.client_id}))
-        if target is not None and self._cache is not None:
-            # the server dropped its whole lease table for the dead file;
-            # forget our side too (blocks, grant, stamp)
-            self._cache.forget(_ino_key(target.ino))
+        if target is not None:
+            if self._cache is not None:
+                # the server dropped its whole lease table for the dead
+                # file; forget our side too (blocks, grant, stamp)
+                self._cache.forget(_ino_key(target.ino))
+            with self._epoch_lock:  # dead file_ids are never reused
+                self._epochs.pop(_ino_key(target.ino), None)
         with self._tree_lock:
             if parent.children:
                 dropped = parent.children.pop(name, None)
@@ -1818,6 +1972,20 @@ class BAgent:
         s = self._cache.stats()
         s["readaheads"] = self.readaheads
         return s
+
+    def scrub(self) -> Dict[str, int]:
+        """Trigger one scrub pass on EVERY host (the on-demand SCRUB verb)
+        and aggregate the counts.  After a clean pass over a quiesced
+        cluster there are zero orphaned chunks, every chunk store matches
+        its home-host layouts, and each home's chunk_reap_failures debt is
+        back to zero."""
+        totals = Counter()
+        for host in self.config.hosts():
+            resp = self._rpc(host, Message(MsgType.SCRUB, {}))
+            for k, v in resp.header.items():
+                if isinstance(v, int):
+                    totals[k] += v
+        return dict(totals)
 
     # ------------------------------------------------------------------
     # bulk paths: batched RPCs + bulk namespace prefetch

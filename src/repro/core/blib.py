@@ -156,8 +156,30 @@ class BLib:
 
     def io_stats(self) -> dict:
         """RPC counters of the underlying agent (critical path, per-type,
-        per-host fan-out) — what the paper benchmarks report on."""
-        return self.agent.stats.snapshot()
+        per-host fan-out) — what the paper benchmarks report on — plus the
+        agent's epoch-retry count and, under ``servers``, each BServer's
+        health counters: forced lease breaks, outstanding unlink chunk-reap
+        failures (orphan debt the scrubber drains back to zero), and
+        EPOCHSTALE rejections served."""
+        snap = self.agent.stats.snapshot()
+        snap["epoch_retries"] = self.agent.epoch_retries
+        servers = getattr(self.agent.cluster, "servers", None)
+        if servers:
+            snap["servers"] = {
+                hid: {"lease_breaks_forced": srv.lease_breaks_forced,
+                      "chunk_reap_failures": srv.chunk_reap_failures,
+                      "epoch_rejects": srv.epoch_rejects,
+                      "scrub_failures": srv.scrub_failures}
+                for hid, srv in servers.items()
+            }
+        return snap
+
+    def scrub(self) -> dict:
+        """Run one on-demand scrub pass on every host and return the
+        aggregated counts (orphans_reaped, chunks_clipped, bytes_clipped,
+        scrub_errors, plus the standing epoch_rejects /
+        chunk_reap_failures counters summed across hosts)."""
+        return self.agent.scrub()
 
     def stat(self, path: str) -> dict:
         return self.agent.stat(path)

@@ -39,7 +39,7 @@ from .inode import Inode, ROOT_FILE_ID
 from .perms import PermRecord, S_IFDIR, S_IFREG
 from .service import MAX_TREE_DEPTH, SERVER_OPS
 from .transport import Transport
-from .wire import Message, MsgType, error, ok, stripe_spans
+from .wire import EPOCHSTALE, Message, MsgType, error, ok, stripe_spans
 
 
 @dataclass
@@ -64,6 +64,16 @@ class FileMeta:
     # CREATE.  The home host (hosts[0] == this server) keeps size/wseq/
     # leases authoritative here even though chunk data is scattered.
     layout: Optional[Dict] = None
+    # per-file CHUNK EPOCH, bumped under the file lock whenever committed
+    # chunk bytes are destroyed (shrinking truncate, scrub clip) and
+    # published at commit time: a scatter carries the epoch it was issued
+    # under, stripe hosts refuse older epochs, and the commit WRITE is
+    # rejected EPOCHSTALE unless its epoch matches — so a truncate that
+    # interleaves another client's scatter→commit fails the commit cleanly
+    # instead of silently clipping acknowledged bytes.  Persisted (unlike
+    # wseq): a restart must not let a pre-restart scatter commit over a
+    # post-truncate chunk store.
+    epoch: int = 0
 
 
 @dataclass
@@ -83,7 +93,8 @@ class BServer:
 
     def __init__(self, host_id: int, backing_dir: str, transport: Transport,
                  addr: str, *, version: int = 0, fsync_policy: str = "none",
-                 dom_limit: int = 64 * 1024) -> None:
+                 dom_limit: int = 64 * 1024,
+                 scrub_interval: Optional[float] = None) -> None:
         self.host_id = host_id
         self.version = version
         self.backing_dir = backing_dir
@@ -136,13 +147,45 @@ class BServer:
         # TTL-bounded leases (wait out the grant instead of trusting the
         # drop) are the strengthening, tracked in ROADMAP.md.
         self.lease_breaks_forced = 0
+        # unlink chunk reaps that could not reach a stripe host:
+        # (unreachable_host, dead_file_id) -> the chunk indices that were
+        # being reaped.  Drained two ways by the scrubber — the stripe
+        # host's own scrub asks us about the dead file (SCRUB_CLIP) and
+        # reaps it, or OUR scrub pass retries the recorded CHUNK_UNLINK
+        # (which also covers hosts holding no chunk file at all: a sparse
+        # file's holes, or a reap that applied but whose ack was lost —
+        # those would never send a SCRUB_CLIP, so debt keyed on their
+        # chunks alone could never drain).  `chunk_reap_failures` counts
+        # orphan debt still outstanding, not failures ever seen.
+        self._reap_pending: Dict[Tuple[int, int], List[int]] = {}
+        # EPOCHSTALE refusals served by this host: stale commits rejected
+        # here (as a home host) plus stale scatters refused here (as a
+        # stripe host).  Each one is a truncate-vs-scatter interleave that
+        # would previously have clipped acknowledged bytes.
+        self.epoch_rejects = 0
+        # stripe-host epoch latch: (home_host, file_id) -> highest chunk
+        # epoch any home-originated message (CHUNK_TRUNC) or accepted
+        # scatter has carried.  CHUNK_WRITEs below the latch are refused,
+        # so a truncate's clip fan-out makes every older in-flight scatter
+        # self-invalidating before the truncate is acked.  Volatile: the
+        # home host's commit-time epoch check is the persisted backstop.
+        self._chunk_epochs: Dict[Tuple[int, int], int] = {}
+        # periodic scrub passes that DIED (a bug, not an I/O outcome):
+        # the worker swallows the exception to stay alive, but never
+        # silently — a deployment relying on scrub_interval must be able
+        # to see that its hygiene loop is broken (same discipline as the
+        # agent's async_errors)
+        self.scrub_failures = 0
         self._stopped = False
+        self.scrub_interval = scrub_interval
+        self._scrub_stop = threading.Event()
 
         if os.path.exists(self._meta_path):
             self._load_meta()
         real = self.transport.serve(self.addr, self.handle)
         if real:  # TCP: ephemeral port resolved at bind time
             self.addr = real
+        self._start_scrub_worker()
 
     # ------------------------------------------------------------------
     # lifecycle / persistence
@@ -173,6 +216,7 @@ class BServer:
                     "atime": m.atime, "mtime": m.mtime, "ctime": m.ctime,
                     "xattrs": m.xattrs,
                     **({"layout": m.layout} if m.layout else {}),
+                    **({"epoch": m.epoch} if m.epoch else {}),
                 } for fid, m in self._meta.items()
             },
             "dirs": {
@@ -199,7 +243,7 @@ class BServer:
                 perm=PermRecord(d["mode"], d["uid"], d["gid"]), size=d["size"],
                 is_dir=d["is_dir"], nlink=d["nlink"], atime=d["atime"],
                 mtime=d["mtime"], ctime=d["ctime"], xattrs=d.get("xattrs", {}),
-                layout=d.get("layout"))
+                layout=d.get("layout"), epoch=d.get("epoch", 0))
             for fid, d in blob["meta"].items()
         }
         self._dirs = {
@@ -212,6 +256,7 @@ class BServer:
         }
 
     def shutdown(self) -> None:
+        self._scrub_stop.set()
         with self._lock:
             self._stopped = True
             self._persist_now()
@@ -232,10 +277,48 @@ class BServer:
             self._opened.clear()
             self._watchers.clear()
             self._leases.clear()
+            # the stripe-host epoch latch is volatile too; the home host's
+            # persisted per-file epoch is what stale commits die against
+            self._chunk_epochs.clear()
             if os.path.exists(self._meta_path):
                 self._load_meta()
             self._stopped = False
         self.transport.serve(self.addr, self.handle)
+        self._start_scrub_worker()
+
+    def _start_scrub_worker(self) -> None:
+        """Periodic scrubber: every `scrub_interval` seconds run one scrub
+        pass over this host's own chunk store.  On-demand passes (the SCRUB
+        verb) share the same `scrub_pass` body; None disables the worker
+        (scrubbing then only runs when a client asks for it)."""
+        if self.scrub_interval is None:
+            return
+        self._scrub_stop = threading.Event()  # fresh event after restart
+        stop = self._scrub_stop
+
+        def loop() -> None:
+            while not stop.wait(self.scrub_interval):
+                if self._stopped:
+                    continue
+                try:
+                    self.scrub_pass()
+                except Exception:
+                    # keep the worker alive, but COUNT the breakage: a
+                    # scrub pass raising is a bug (per-host I/O failures
+                    # already come back as scrub_errors counts, not
+                    # exceptions), and a silently dead hygiene loop would
+                    # let orphans accumulate unseen
+                    with self._lock:
+                        self.scrub_failures += 1
+
+        threading.Thread(target=loop, daemon=True).start()
+
+    @property
+    def chunk_reap_failures(self) -> int:
+        """Orphaned-chunk debt from unlink reaps that could not reach their
+        stripe host — drained back to zero as scrub passes reap them."""
+        with self._lock:
+            return len(self._reap_pending)
 
     # ------------------------------------------------------------------
     # helpers
@@ -259,32 +342,32 @@ class BServer:
                 lk = self._file_locks[key] = threading.Lock()
             return lk
 
-    def _fanout_chunks(self, by_host: Dict[int, Message]) -> int:
+    def _fanout_chunks(self, by_host: Dict[int, Message]) -> List[int]:
         """Home-host orchestration hop: send one chunk RPC to each stripe
         host.  Sequential on purpose — this handler may itself be running
         on a transport pool worker, so fanning out through the pool could
-        exhaust the workers it waits on.  Returns the number of host
-        fan-outs that FAILED (unreachable, errored, or unroutable): the
-        truncate/unlink callers treat failures as best-effort orphans (the
-        same availability escape the §3.4 watcher fan-out and lease
-        revocation take), but a durability barrier (fsync) must refuse to
-        ack on them."""
-        failed = 0
+        exhaust the workers it waits on.  Returns the hosts whose fan-out
+        FAILED (unreachable, errored, or unroutable): the truncate/unlink
+        callers treat failures as best-effort orphans (the same
+        availability escape the §3.4 watcher fan-out and lease revocation
+        take) — unlink records them in `_reap_pending` for the scrubber —
+        but a durability barrier (fsync) must refuse to ack on them."""
+        failed: List[int] = []
         for host, msg in by_host.items():
             if host == self.host_id:
                 resp = SERVER_OPS.dispatch(self, msg)  # local: no self-RPC
             elif self.peers is None:
-                failed += 1
+                failed.append(host)
                 continue
             else:
                 try:
                     resp = self.transport.request(self.peers.addr(host), msg,
                                                   critical=True)
                 except Exception:
-                    failed += 1
+                    failed.append(host)
                     continue
             if resp.type is MsgType.ERROR:
-                failed += 1
+                failed.append(host)
         return failed
 
     @staticmethod
@@ -594,13 +677,21 @@ class BServer:
                 if layout is not None:
                     # reap the dead file's chunk objects on their stripe
                     # hosts (best-effort, like the revokes above: an
-                    # unreachable host leaves orphans, never blocks unlink)
-                    self._fanout_chunks({
+                    # unreachable host leaves orphans, never blocks unlink).
+                    # Failed hosts are RECORDED, not forgotten: the orphans
+                    # they hold are debt the scrubber pays down, and
+                    # `chunk_reap_failures` stays nonzero until it does.
+                    by_host = self._chunk_indices_by_host(layout, size)
+                    reap_failed = self._fanout_chunks({
                         host: Message(MsgType.CHUNK_UNLINK,
                                       {"home": self.host_id, "file_id": fid,
                                        "indices": idxs})
-                        for host, idxs in
-                        self._chunk_indices_by_host(layout, size).items()})
+                        for host, idxs in by_host.items()})
+                    if reap_failed:
+                        with self._lock:
+                            for host in reap_failed:
+                                self._reap_pending[(host, fid)] = \
+                                    by_host[host]
 
         return self._two_phase(parent, [name], check, apply,
                                exclude_client=h.get("client_id"),
@@ -782,6 +873,7 @@ class BServer:
                 wseq = m.wseq  # stable: writers hold the file lock we hold
                 layout = m.layout
                 msize = m.size
+                epoch = m.epoch
                 # read-lease grant: registration is atomic with the
                 # existence check above, and the surrounding file lock
                 # serializes it against a writer's revoke+apply window —
@@ -823,6 +915,10 @@ class BServer:
                     size, data = 0, b""
         hdr: Dict = {"eof": off + len(data) >= size, "size": size,
                      "wseq": wseq}
+        if layout is not None:
+            # striped responses advertise the current chunk epoch so a
+            # warm client scatters at the right epoch without an extra RPC
+            hdr["epoch"] = epoch
         if granted:
             hdr["lease"] = True
         return ok(hdr, data)
@@ -934,6 +1030,25 @@ class BServer:
             return error(errno.EINVAL,
                          "payload WRITE on striped file (scatter + commit)")
         with self._file_lock(fid):
+            with self._lock:
+                m = self._meta.get(fid)
+                if m is None:
+                    return error(errno.ENOENT, "unlinked during write")
+                # epoch gate, BEFORE the lease recall: a commit whose
+                # scatter predates the current chunk epoch would publish a
+                # size the chunk store no longer backs (a truncate clipped
+                # the scattered bytes in between) — refuse it and hand back
+                # the current epoch so the writer re-scatters, instead of
+                # acking bytes that read back as zeros.  Rejecting before
+                # the revoke also keeps a doomed commit from thrashing
+                # every reader's cache for nothing.
+                if h.get("epoch", 0) != m.epoch:
+                    self.epoch_rejects += 1
+                    e = error(EPOCHSTALE,
+                              f"commit epoch {h.get('epoch', 0)} != "
+                              f"{m.epoch}")
+                    e.header["epoch"] = m.epoch
+                    return e
             self._revoke_leases(fid, exclude_client=h.get("client_id"))
             with self._lock:
                 m = self._meta.get(fid)
@@ -945,9 +1060,9 @@ class BServer:
                 m.size = max(m.size, end)
                 m.mtime = time.time()
                 m.wseq += 1
-                size, wseq = m.size, m.wseq
+                size, wseq, epoch = m.size, m.wseq, m.epoch
         return ok({"written": sum(ln for _, ln in commit), "size": size,
-                   "wseq": wseq})
+                   "wseq": wseq, "epoch": epoch})
 
     @SERVER_OPS.register(MsgType.TRUNCATE, mutating=True, breaks_lease=True)
     def _op_truncate(self, h: Dict, _p: bytes) -> Message:
@@ -974,11 +1089,31 @@ class BServer:
                 with self._lock:
                     m = self._meta.get(fid)
                     old_size = m.size if m is not None else 0
+                    shrink = m is not None and h["size"] < old_size
+                    if shrink:
+                        # a shrink destroys committed chunk bytes: bump the
+                        # chunk epoch (still under the file lock) so every
+                        # in-flight scatter issued under the old epoch is
+                        # self-invalidating — stripe hosts refuse it once
+                        # they see the new epoch, and its commit dies at
+                        # the epoch gate above.  Bumped BEFORE the fan-out
+                        # so no clip can race a new-epoch scatter: clients
+                        # can only learn the new epoch from a response
+                        # generated after this lock section completes.
+                        m.epoch += 1
+                        epoch = m.epoch
                 plan = self._chunk_trunc_plan(layout, old_size, h["size"])
+                if shrink:
+                    # carry the new epoch to EVERY stripe host — including
+                    # those with nothing to clip — so their latches refuse
+                    # old-epoch scatters from here on
+                    for host in set(layout["hosts"]):
+                        plan.setdefault(host, [])
                 failed = self._fanout_chunks({
                     host: Message(MsgType.CHUNK_TRUNC,
                                   {"home": self.host_id, "file_id": fid,
-                                   "ops": ops})
+                                   "ops": ops,
+                                   **({"epoch": epoch} if shrink else {})})
                     for host, ops in plan.items()})
                 if failed:
                     # unlike unlink's reap (dead file_id, orphans are only
@@ -986,9 +1121,10 @@ class BServer:
                     # resurface as data under a later extend — refuse the
                     # truncate rather than publish a size the chunk store
                     # contradicts (partial clips are holes: they read
-                    # zeros, same as a crash mid-truncate)
+                    # zeros, same as a crash mid-truncate; the epoch bump
+                    # above stands, which only forces retries, never loss)
                     return error(errno.EIO,
-                                 f"{failed} stripe host(s) failed to clip")
+                                 f"{len(failed)} stripe host(s) failed to clip")
             else:
                 path = self._obj_path(fid)
                 # mirror _op_write: re-materialize a crash-lost object while
@@ -1011,7 +1147,10 @@ class BServer:
                 m.mtime = time.time()
                 m.wseq += 1
                 wseq = m.wseq
-        return ok({"wseq": wseq})
+                hdr = {"wseq": wseq}
+                if layout is not None:
+                    hdr["epoch"] = m.epoch
+        return ok(hdr)
 
     @SERVER_OPS.register(MsgType.FSYNC, barrier=True)
     def _op_fsync(self, h: Dict, _p: bytes) -> Message:
@@ -1043,7 +1182,7 @@ class BServer:
                     self._chunk_indices_by_host(layout, size).items()})
                 if failed:
                     return error(errno.EIO,
-                                 f"{failed} stripe host(s) failed to fsync")
+                                 f"{len(failed)} stripe host(s) failed to fsync")
             else:
                 try:
                     with open(self._obj_path(fid), "rb") as f:
@@ -1135,8 +1274,31 @@ class BServer:
     @SERVER_OPS.register(MsgType.CHUNK_WRITE, mutating=True)
     def _op_chunk_write(self, h: Dict, p: bytes) -> Message:
         home, fid, idx = h["home"], h["file_id"], h["index"]
+        epoch = h.get("epoch", 0)
         path = self._chunk_path(home, fid, idx)
+        # the latch check lives INSIDE the chunk lock: a clip latches the
+        # new epoch (under self._lock) before taking chunk locks, so a
+        # scatter that passes this check while holding the chunk lock is
+        # ordered wholly before the clip — checked outside it, a clip
+        # could slip between check and write and the stale bytes would
+        # land back in the just-clipped chunk
         with self._chunk_lock(home, fid, idx):
+            with self._lock:
+                latched = self._chunk_epochs.get((home, fid), 0)
+                if epoch < latched:
+                    # a truncate's clip fan-out (or a scrub clip) already
+                    # carried a newer epoch through here: this scatter's
+                    # bytes are pre-clip leftovers that must never land —
+                    # refusing them is what keeps a failed/raced scatter
+                    # from leaving garbage beyond the committed size in
+                    # the first place
+                    self.epoch_rejects += 1
+                else:
+                    self._chunk_epochs[(home, fid)] = max(latched, epoch)
+            if epoch < latched:
+                e = error(EPOCHSTALE, f"scatter epoch {epoch} < {latched}")
+                e.header["epoch"] = latched
+                return e
             mode = "r+b" if os.path.exists(path) else "wb"
             with open(path, mode) as f:
                 f.seek(h["offset"])
@@ -1150,8 +1312,17 @@ class BServer:
     def _op_chunk_trunc(self, h: Dict, _p: bytes) -> Message:
         """Clip/delete chunk objects per the home host's truncate plan:
         ``ops`` is a list of [index, new_len] with new_len < 0 => delete.
-        An absent chunk is already all-zeros at any length — skip it."""
+        An absent chunk is already all-zeros at any length — skip it.  When
+        the home bumped the chunk epoch (shrinking truncate, scrub clip)
+        the message carries it; latch it FIRST so no old-epoch scatter can
+        land after (or while) we clip."""
         home, fid = h["home"], h["file_id"]
+        epoch = h.get("epoch")
+        if epoch is not None:
+            with self._lock:
+                key = (home, fid)
+                self._chunk_epochs[key] = max(self._chunk_epochs.get(key, 0),
+                                              epoch)
         for idx, new_len in h["ops"]:
             path = self._chunk_path(home, fid, idx)
             with self._chunk_lock(home, fid, idx):
@@ -1168,13 +1339,21 @@ class BServer:
     @SERVER_OPS.register(MsgType.CHUNK_UNLINK, mutating=True)
     def _op_chunk_unlink(self, h: Dict, _p: bytes) -> Message:
         home, fid = h["home"], h["file_id"]
+        reaped = 0
         for idx in h["indices"]:
             with self._chunk_lock(home, fid, idx):
                 try:
                     os.unlink(self._chunk_path(home, fid, idx))
+                    reaped += 1
                 except FileNotFoundError:
                     pass
-        return ok()
+        with self._lock:
+            # dead file_ids are never reused: the epoch latch has nothing
+            # left to guard, and keeping it would leak one entry per unlink
+            self._chunk_epochs.pop((home, fid), None)
+        # how many chunk files actually existed: lets a scrub retry of a
+        # failed reap count true orphans exactly once cluster-wide
+        return ok({"reaped": reaped})
 
     @SERVER_OPS.register(MsgType.CHUNK_FSYNC, barrier=True)
     def _op_chunk_fsync(self, h: Dict, _p: bytes) -> Message:
@@ -1187,6 +1366,161 @@ class BServer:
                 except FileNotFoundError:
                     pass  # hole chunk: nothing to make durable
         return ok()
+
+    # --- scrubber: reconcile the chunk store against home-host layouts ---
+    # Chunk objects are blind storage, so two failure shapes accumulate
+    # silently: orphans for dead file_ids (an unlink reap that could not
+    # reach this host) and bytes beyond the committed size (a scatter whose
+    # commit never happened — client crash, failed write — which a later
+    # extend would surface where a hole must read zeros).  The scrubber is
+    # the reconciliation loop that turns both from documented caveats into
+    # enforced invariants: each host walks its OWN chunk store and asks
+    # every file's HOME host (SCRUB_CLIP) whether the file is dead or what
+    # each chunk's allowed length is.  The home answers — and performs any
+    # clip itself, under the file lock with an epoch bump — so a scrub can
+    # never race a live scatter→commit into acknowledged-byte loss.
+
+    def _scan_chunk_store(self) -> Dict[Tuple[int, int],
+                                        List[Tuple[int, int]]]:
+        """This host's chunk objects: (home, file_id) -> [(index, length)]."""
+        found: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+        for name in os.listdir(self._objs):
+            if not name.startswith("c"):
+                continue  # a whole-file object, not a chunk
+            try:
+                home_s, fid_s, idx_s = name[1:].split("_")
+                home, fid, idx = int(home_s, 16), int(fid_s, 16), int(idx_s, 16)
+            except ValueError:
+                continue
+            try:
+                clen = os.path.getsize(os.path.join(self._objs, name))
+            except OSError:
+                continue  # reaped between listdir and stat
+            found.setdefault((home, fid), []).append((idx, clen))
+        return found
+
+    def _request_host(self, host: int, msg: Message) -> Message:
+        """One server-to-server request (local dispatch when the target is
+        this host); unreachability comes back as an ERROR message, never
+        an exception — scrub phases treat it as retry-next-pass."""
+        if host == self.host_id:
+            return SERVER_OPS.dispatch(self, msg)
+        if self.peers is None:
+            return error(errno.EHOSTUNREACH, "no peer config")
+        try:
+            return self.transport.request(self.peers.addr(host), msg,
+                                          critical=True)
+        except Exception as e:
+            return error(errno.EHOSTUNREACH, str(e))
+
+    def scrub_pass(self) -> Dict[str, int]:
+        """One scrub pass.  Two phases: (1) as a HOME host, retry every
+        recorded failed unlink reap (draining `chunk_reap_failures` even
+        for stripe hosts that hold no chunk file and so would never ask
+        about the dead fid themselves); (2) as a STRIPE host, reconcile
+        this host's own chunk store against home-host layouts.  Returns
+        this pass's counts: orphans_reaped / chunks_clipped /
+        bytes_clipped, plus scrub_errors for hosts that could not be
+        reached (their work is left alone and retried next pass)."""
+        counts = {"orphans_reaped": 0, "chunks_clipped": 0,
+                  "bytes_clipped": 0, "scrub_errors": 0}
+        with self._lock:
+            pending = dict(self._reap_pending)
+        for (host, fid), idxs in sorted(pending.items()):
+            resp = self._request_host(host, Message(MsgType.CHUNK_UNLINK, {
+                "home": self.host_id, "file_id": fid, "indices": idxs}))
+            if resp.type is MsgType.ERROR:
+                counts["scrub_errors"] += 1  # still down: debt stands
+                continue
+            counts["orphans_reaped"] += resp.header.get("reaped", 0)
+            with self._lock:
+                self._reap_pending.pop((host, fid), None)
+        for (home, fid), chunks in sorted(self._scan_chunk_store().items()):
+            resp = self._request_host(home, Message(MsgType.SCRUB_CLIP, {
+                "file_id": fid, "requester": self.host_id,
+                "chunks": [[idx, clen] for idx, clen in sorted(chunks)]}))
+            if resp.type is MsgType.ERROR:
+                counts["scrub_errors"] += 1
+                continue
+            if resp.header.get("dead"):
+                for idx, _ in chunks:
+                    with self._chunk_lock(home, fid, idx):
+                        try:
+                            os.unlink(self._chunk_path(home, fid, idx))
+                        except FileNotFoundError:
+                            continue
+                    counts["orphans_reaped"] += 1
+                with self._lock:
+                    self._chunk_epochs.pop((home, fid), None)
+            else:
+                # any clipping already happened: the home fanned a
+                # CHUNK_TRUNC back at us under its file lock (with an
+                # epoch bump), so by the time this response arrives the
+                # trailing bytes are gone and no stale scatter can redo them
+                counts["chunks_clipped"] += resp.header.get("chunks_clipped", 0)
+                counts["bytes_clipped"] += resp.header.get("bytes_clipped", 0)
+        return counts
+
+    @SERVER_OPS.register(MsgType.SCRUB, mutating=True)
+    def _op_scrub(self, h: Dict, _p: bytes) -> Message:
+        """On-demand scrub: run one pass now and report its counts plus
+        this host's standing epoch-reject / reap-debt counters."""
+        counts = self.scrub_pass()
+        counts["epoch_rejects"] = self.epoch_rejects
+        counts["chunk_reap_failures"] = self.chunk_reap_failures
+        counts["scrub_failures"] = self.scrub_failures
+        return ok(counts)
+
+    @SERVER_OPS.register(MsgType.SCRUB_CLIP, mutating=True)
+    def _op_scrub_clip(self, h: Dict, _p: bytes) -> Message:
+        """Home-host half of a scrub: a stripe host reports the chunks it
+        holds for one of OUR files; answer dead (reap them) or clip the
+        overhang ourselves.  The clip runs under the file lock with a
+        chunk-epoch bump and a CHUNK_TRUNC fan-out back to the requester —
+        exactly a truncate's discipline — so an in-flight scatter→commit
+        racing the scrub either lands wholly before the clip plan is sized
+        (its bytes are committed, the plan spares them) or dies EPOCHSTALE
+        and retries.  Without the bump, the scrubber itself would be the
+        truncate-vs-scatter race it exists to clean up after."""
+        fid, requester = h["file_id"], h["requester"]
+        with self._lock:
+            m = self._meta.get(fid)
+            dead = m is None or m.layout is None
+        if dead:
+            # unlinked (or never striped: a chunk for an unstriped file is
+            # garbage by construction) — tell the requester to reap, and
+            # retire the matching reap-failure debt
+            with self._lock:
+                self._reap_pending.pop((requester, fid), None)
+            return ok({"dead": True})
+        with self._file_lock(fid):
+            with self._lock:
+                m = self._meta.get(fid)
+                if m is None or m.layout is None:
+                    self._reap_pending.pop((requester, fid), None)
+                    return ok({"dead": True})
+                size, ss = m.size, m.layout["ss"]
+                ops: List[List[int]] = []
+                bytes_clipped = 0
+                for idx, clen in h["chunks"]:
+                    allowed = min(max(size - idx * ss, 0), ss)
+                    if clen > allowed:
+                        ops.append([idx, -1 if allowed == 0 else allowed])
+                        bytes_clipped += clen - allowed
+                if ops:
+                    m.epoch += 1
+                    epoch = m.epoch
+            if ops:
+                failed = self._fanout_chunks({requester: Message(
+                    MsgType.CHUNK_TRUNC,
+                    {"home": self.host_id, "file_id": fid, "ops": ops,
+                     "epoch": epoch})})
+                if failed:
+                    return error(errno.EIO, "scrub clip fan-out failed")
+                with self._lock:
+                    self._persist()  # the epoch bump persists like a size
+        return ok({"dead": False, "chunks_clipped": len(ops),
+                   "bytes_clipped": bytes_clipped})
 
     # NOTE: the Lustre baseline verbs (OPEN_RECORD, READ_INLINE) register
     # into the same SERVER_OPS registry from repro.core.baselines — the

@@ -88,6 +88,10 @@ class BuffetCluster:
     # workloads and the paper's small-file RPC counts are untouched.
     stripe_size: int = 1 << 20
     stripe_count: int = 1
+    # periodic background scrub on every server (seconds between passes);
+    # None leaves reconciliation on-demand only (the SCRUB verb /
+    # BLib.scrub()) so tests and benchmarks stay deterministic by default
+    scrub_interval: Optional[float] = None
     servers: Dict[int, BServer] = field(default_factory=dict)
     config: ClusterConfig = field(default_factory=ClusterConfig)
     root_ino: int = 0
@@ -102,7 +106,8 @@ class BuffetCluster:
             os.makedirs(backing, exist_ok=True)
             addr = "127.0.0.1:0" if tcp else f"bserver:{host_id}"
             srv = BServer(host_id, backing, self.transport, addr,
-                          fsync_policy=self.fsync_policy)
+                          fsync_policy=self.fsync_policy,
+                          scrub_interval=self.scrub_interval)
             self.servers[host_id] = srv
             self.config.set(host_id, srv.addr, srv.version)
         # every server holds the same "local configuration file" clients

@@ -56,10 +56,18 @@ class MsgType(IntEnum):
     # leases — the file's home host (where the dentry's inode points) stays
     # the single coherence authority, so all chunk verbs are blind storage.
     CHUNK_READ = 22     # read a byte range of one chunk object
-    CHUNK_WRITE = 23    # write a byte range of one chunk object
+    CHUNK_WRITE = 23    # write a byte range of one chunk object; carries the
+                        # chunk epoch it was scattered under — a stripe host
+                        # refuses (EPOCHSTALE) epochs older than its latch
     CHUNK_TRUNC = 24    # clip/delete chunk objects (home-host truncate fan-out)
     CHUNK_UNLINK = 25   # remove chunk objects (home-host unlink fan-out)
     CHUNK_FSYNC = 26    # fsync chunk objects (home-host fsync fan-out)
+    SCRUB = 27          # run one scrub pass: reconcile this host's chunk
+                        # store against home-host layouts (reap dead-file
+                        # orphans, clip bytes beyond the committed size)
+    SCRUB_CLIP = 28     # server-to-server layout query from a scrubbing
+                        # stripe host to a file's home host: "I hold these
+                        # chunks at these lengths — dead, or clip to what?"
     # --- server -> client (callback channel) ---
     INVALIDATE = 32     # server asks client to invalidate cached tree nodes
     REVOKE_LEASE = 33   # server recalls a read lease before applying a data
@@ -74,6 +82,14 @@ class MsgType(IntEnum):
     ERROR = 65
     BATCH = 66          # envelope packing N sub-messages into one frame
 
+
+# Out-of-band errno for chunk-epoch staleness: a scatter (CHUNK_WRITE) or
+# commit (WRITE with "commit") carrying an epoch older than the file's
+# current chunk epoch is refused with this code and the current epoch in
+# the error header, so the writer can re-scatter at the new epoch instead
+# of silently publishing bytes a concurrent truncate already clipped.
+# Deliberately outside the OS errno range: no kernel errno may alias it.
+EPOCHSTALE = 1064
 
 _HDR = struct.Struct("<IBI")
 

@@ -8,6 +8,7 @@ truncate/unlink workloads.
 
 import os
 import threading
+import time
 
 import pytest
 
@@ -15,6 +16,8 @@ from repro.core import (
     BAgent,
     BLib,
     BuffetCluster,
+    EPOCHSTALE,
+    FSError,
     Inode,
     Message,
     MsgType,
@@ -528,9 +531,332 @@ def test_readahead_fills_cache_off_critical_path(cluster):
 def test_chunk_verbs_registered_with_flags():
     assert SERVER_OPS.operation(MsgType.CHUNK_READ) is not None
     for t in (MsgType.CHUNK_WRITE, MsgType.CHUNK_TRUNC,
-              MsgType.CHUNK_UNLINK):
+              MsgType.CHUNK_UNLINK, MsgType.SCRUB, MsgType.SCRUB_CLIP):
         assert SERVER_OPS.operation(t).mutating, t.name
     assert SERVER_OPS.operation(MsgType.CHUNK_FSYNC).barrier
+
+
+# ---------------------------------------------------------------------------
+# chunk epochs: the truncate-vs-scatter interleave fails cleanly and retries
+# ---------------------------------------------------------------------------
+
+
+def _truncate(agent: BAgent, path: str, size: int) -> None:
+    ino = Inode.unpack(_node(agent, path).ino)
+    agent._rpc(ino.host_id, Message(MsgType.TRUNCATE, {
+        "file_id": ino.file_id, "size": size, "client_id": agent.client_id}))
+
+
+def test_stale_commit_and_scatter_refused_epochstale(cluster):
+    """Wire-level contract: after a shrinking truncate bumps the chunk
+    epoch, a commit carrying the old epoch dies EPOCHSTALE at the home
+    host (with the current epoch in the error header), and a CHUNK_WRITE
+    under the old epoch is refused by every stripe host's latch."""
+    a = _seed(cluster, {"/d/ep": _pattern(4 * SS)})
+    node = _node(a, "/d/ep")
+    ino = Inode.unpack(node.ino)
+    _truncate(a, "/d/ep", 100)  # shrink: epoch 0 -> 1, latch fanned out
+    resp = cluster.servers[ino.host_id].handle(Message(MsgType.WRITE, {
+        "file_id": ino.file_id, "offset": 0, "commit": [[0, 50]],
+        "epoch": 0, "client_id": "other"}))
+    assert resp.type is MsgType.ERROR
+    assert resp.header["errno"] == EPOCHSTALE
+    assert resp.header["epoch"] == 1  # the retry hint
+    for host in set(node.layout["hosts"]):
+        r = cluster.servers[host].handle(Message(MsgType.CHUNK_WRITE, {
+            "home": ino.host_id, "file_id": ino.file_id,
+            "index": node.layout["hosts"].index(host), "offset": 0,
+            "epoch": 0}, b"stale"))
+        assert r.type is MsgType.ERROR and r.header["errno"] == EPOCHSTALE
+    assert sum(s.epoch_rejects for s in cluster.servers.values()) >= 5
+    a.shutdown()
+
+
+def test_truncate_interleaving_scatter_commit_retries_cleanly(cluster):
+    """THE closed window: client A scatters, client B's truncate clips the
+    scattered (not yet committed) bytes, A commits.  Before epochs the
+    commit published a size the chunk store no longer backed — acked bytes
+    read back as zeros.  Now the commit is rejected EPOCHSTALE and A
+    re-scatters at the new epoch, so the acked write is fully readable."""
+    data = _pattern(2 * SS)
+    a = _seed(cluster, {"/d/iv": data})
+    b = BAgent(cluster)
+    orig = a._scatter_chunks
+    state = {"armed": True}
+
+    def interleaved(ino, layout, extents, *, critical, epoch=0):
+        orig(ino, layout, extents, critical=critical, epoch=epoch)
+        if state["armed"]:  # only the FIRST scatter gets ambushed
+            state["armed"] = False
+            _truncate(b, "/d/iv", 0)  # clips A's scattered bytes
+
+    a._scatter_chunks = interleaved
+    new = bytes(reversed(data))
+    f = BLib(a).open("/d/iv", "r+b")
+    f.write(new)
+    f.close()
+    a._scatter_chunks = orig
+    assert a.epoch_retries >= 1
+    got = BLib(a).read_file("/d/iv")
+    assert got == new, "acked bytes were clipped (zeros) or torn"
+    # a fresh client sees the same thing: the commit that landed is the
+    # one whose bytes survived
+    c2 = BAgent(cluster)
+    assert BLib(c2).read_file("/d/iv") == new
+    a.shutdown()
+    b.shutdown()
+    c2.shutdown()
+
+
+def test_wb_striped_flush_retries_epoch_stale(cluster):
+    """The write-behind flusher owns bytes whose write() already returned:
+    when its scatter/commit loses an epoch race it must retry at the new
+    epoch, never latch an error (or worse, settle as flushed)."""
+    data = _pattern(2 * SS)
+    seeder = _seed(cluster, {"/d/wbe": data})
+    a = BAgent(cluster, write_behind=True)
+    # another client shrinks first: every stripe host now latches epoch 1
+    # while agent `a` still believes epoch 0
+    b = BAgent(cluster)
+    _truncate(b, "/d/wbe", SS)
+    f = BLib(a).open("/d/wbe", "r+b")
+    f.write(b"Z" * SS)
+    f.close()
+    assert a.drain() == 0  # flushed cleanly, via the epoch retry
+    assert a.epoch_retries >= 1
+    got = BLib(b).read_file("/d/wbe")
+    assert got == b"Z" * SS
+    a.shutdown()
+    b.shutdown()
+    seeder.shutdown()
+
+
+def test_epoch_survives_restart(cluster):
+    """The chunk epoch persists with the metadata: a scatter issued before
+    a home-host restart must still die EPOCHSTALE after it, or a stale
+    commit could publish over a post-truncate chunk store."""
+    a = _seed(cluster, {"/d/rs": _pattern(2 * SS)})
+    node = _node(a, "/d/rs")
+    ino = Inode.unpack(node.ino)
+    _truncate(a, "/d/rs", 10)  # epoch -> 1
+    cluster.restart_server(ino.host_id)
+    resp = cluster.servers[ino.host_id].handle(Message(MsgType.WRITE, {
+        "file_id": ino.file_id, "offset": 0, "commit": [[0, 5]],
+        "epoch": 0, "client_id": "other"}))
+    assert resp.type is MsgType.ERROR
+    assert resp.header["errno"] == EPOCHSTALE
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# scrubber: orphan reaping, garbage clipping, reap-debt draining
+# ---------------------------------------------------------------------------
+
+
+def _inject_garbage(cluster, agent, path: str, index: int,
+                    blob: bytes) -> int:
+    """Simulate a FAILED scatter: chunk bytes landed (at the current
+    epoch) but the commit never happened — exactly what a client crash or
+    errored write leaves behind.  Returns the host that holds them."""
+    node = _node(agent, path)
+    ino = Inode.unpack(node.ino)
+    host = node.layout["hosts"][index % len(node.layout["hosts"])]
+    epoch = agent._epoch_of((ino.host_id, ino.file_id))
+    r = cluster.servers[host].handle(Message(MsgType.CHUNK_WRITE, {
+        "home": ino.host_id, "file_id": ino.file_id, "index": index,
+        "offset": 0, "epoch": epoch}, blob))
+    assert r.type is MsgType.OK
+    return host
+
+
+def test_failed_scatter_garbage_cleared_by_scrub(cluster):
+    """Chunks left beyond the committed size by a failed scatter surface
+    as garbage where a hole must read zeros once a later write extends the
+    file past them.  A scrub pass clips them first, so the hole reads
+    zeros — and a second pass finds nothing left."""
+    a = _seed(cluster, {"/d/ga": _pattern(SS), "/d/gb": _pattern(SS)})
+    lib = BLib(a)
+    # demonstrate the window is real: extend WITHOUT scrubbing and the
+    # garbage shows through the hole
+    _inject_garbage(cluster, a, "/d/ga", 2, b"G" * 1000)
+    f = lib.open("/d/ga", "r+b")
+    a._fh(f.fd).offset = 3 * SS
+    f.write(b"end")
+    f.close()
+    got = lib.read_file("/d/ga")
+    assert got[2 * SS : 2 * SS + 1000] == b"G" * 1000  # the bug, unscrubbed
+    # now the same sequence WITH a scrub between failure and extend
+    _inject_garbage(cluster, a, "/d/gb", 2, b"G" * 1000)
+    s1 = lib.scrub()
+    assert s1["bytes_clipped"] == 1000 and s1["chunks_clipped"] == 1, s1
+    f = lib.open("/d/gb", "r+b")
+    a._fh(f.fd).offset = 3 * SS
+    f.write(b"end")
+    f.close()
+    got = lib.read_file("/d/gb")
+    assert got[SS : 3 * SS] == bytes(2 * SS), "hole must read zeros"
+    assert got[:SS] == _pattern(SS) and got[-3:] == b"end"
+    s2 = lib.scrub()
+    assert s2["orphans_reaped"] == 0 and s2["bytes_clipped"] == 0, s2
+    a.shutdown()
+
+
+def test_unreachable_unlink_orphans_reaped_by_scrub(cluster):
+    """An unlink whose chunk reap cannot reach a stripe host leaves
+    orphans and counts the debt in chunk_reap_failures; a scrub pass after
+    the host returns reaps every orphan and drains the counter to zero."""
+    a = _seed(cluster, {"/d/orph": _pattern(4 * SS)})
+    lib = BLib(a)
+    node = _node(a, "/d/orph")
+    home = Inode.unpack(node.ino).host_id
+    victim = node.layout["hosts"][1]  # holds exactly chunk 1
+    cluster.kill_server(victim)
+    lib.unlink("/d/orph")  # reap fan-out to victim fails, unlink still OK
+    home_srv = cluster.servers[home]
+    assert home_srv.chunk_reap_failures == 1
+    assert lib.io_stats()["servers"][home]["chunk_reap_failures"] == 1
+    cluster.restart_server(victim)
+    assert _chunk_files(cluster, victim), "test needs a real orphan"
+    s1 = lib.scrub()
+    assert s1["orphans_reaped"] == 1, s1
+    assert home_srv.chunk_reap_failures == 0  # debt drained
+    for h in range(4):
+        assert _chunk_files(cluster, h) == [], f"orphan left on host {h}"
+    s2 = lib.scrub()
+    assert s2["orphans_reaped"] == 0, s2
+    a.shutdown()
+
+
+def test_reap_debt_drains_even_without_chunk_files(cluster):
+    """A sparse file can owe its unreachable stripe host a reap for a
+    chunk that is a HOLE (no chunk file on disk).  That host's own scrub
+    will never ask about the dead fid — it holds nothing — so the home's
+    scrub pass must retry the recorded reap itself, or the debt (and the
+    CI gate pinned to it) would stand forever."""
+    a = _seed(cluster, {"/d/sp": b""})
+    lib = BLib(a)
+    f = lib.open("/d/sp", "r+b")
+    f.write(b"A" * SS)              # chunk 0 (home)
+    a._fh(f.fd).offset = 2 * SS
+    f.write(b"C" * 100)             # chunk 2; chunk 1 stays a hole
+    f.close()
+    node = _node(a, "/d/sp")
+    home = Inode.unpack(node.ino).host_id
+    victim = node.layout["hosts"][1]  # owed chunk 1: a hole, no file
+    assert not any(
+        f"_{Inode.unpack(node.ino).file_id:016x}_" in n
+        for n in _chunk_files(cluster, victim))
+    cluster.kill_server(victim)
+    lib.unlink("/d/sp")
+    home_srv = cluster.servers[home]
+    assert home_srv.chunk_reap_failures == 1
+    cluster.restart_server(victim)
+    s = lib.scrub()
+    assert home_srv.chunk_reap_failures == 0, "debt never drained"
+    assert s["orphans_reaped"] == 0  # there was nothing on disk to reap
+    a.shutdown()
+
+
+def test_periodic_scrubber_runs(tmp_path):
+    """BServer(scrub_interval=...) reconciles in the background without
+    being asked: injected failed-scatter garbage disappears on its own."""
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4, stripe_count=4,
+                      stripe_size=SS, scrub_interval=0.05)
+    try:
+        a = _seed(c, {"/d/bg": _pattern(SS)})
+        host = _inject_garbage(c, a, "/d/bg", 2, b"G" * 512)
+        ino = Inode.unpack(_node(a, "/d/bg").ino)
+        path = c.servers[host]._chunk_path(ino.host_id, ino.file_id, 2)
+        deadline = time.time() + 10
+        while os.path.exists(path) and time.time() < deadline:
+            time.sleep(0.05)
+        assert not os.path.exists(path), "periodic scrub never clipped"
+        a.shutdown()
+    finally:
+        c.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# async error accounting: best-effort paths may not hide failures
+# ---------------------------------------------------------------------------
+
+
+def test_readahead_unexpected_errors_counted(cluster):
+    """The prefetch worker stays best-effort for FSError (the demand read
+    will RPC and report), but an unexpected exception is a prefetch-path
+    BUG and must surface through async_errors, not vanish forever."""
+    data = _pattern(6 * SS)
+    seeder = _seed(cluster, {"/d/rae": data})
+    a = BAgent(cluster, read_cache=True, readahead=True,
+               readahead_window=2 * SS)
+    orig = a._fetch_span
+
+    def broken(fh, off, ln, *, critical=True, record_open=True):
+        if not critical:  # only sabotage the prefetch path
+            raise RuntimeError("injected prefetch bug")
+        return orig(fh, off, ln, critical=critical, record_open=record_open)
+
+    a._fetch_span = broken
+    fd = a.open("/d/rae")
+    while a.read(fd, SS // 2):
+        pass  # sequential: schedules readahead windows
+    a.close(fd)
+    assert a.drain() >= 1  # the injected bug was counted, not swallowed
+    a._fetch_span = orig
+    a.shutdown()
+    seeder.shutdown()
+
+
+def test_readahead_fserror_stays_best_effort(cluster):
+    """An FSError during prefetch is an expected I/O outcome: swallowed
+    (the demand read retries and reports), never counted as an async
+    error."""
+    import errno as _errno
+    data = _pattern(6 * SS)
+    seeder = _seed(cluster, {"/d/raf": data})
+    a = BAgent(cluster, read_cache=True, readahead=True,
+               readahead_window=2 * SS)
+    orig = a._fetch_span
+
+    def flaky(fh, off, ln, *, critical=True, record_open=True):
+        if not critical:
+            raise FSError(_errno.EIO, "transient")
+        return orig(fh, off, ln, critical=critical, record_open=record_open)
+
+    a._fetch_span = flaky
+    fd = a.open("/d/raf")
+    out = bytearray()
+    while True:
+        d = a.read(fd, SS // 2)
+        if not d:
+            break
+        out += d
+    a.close(fd)
+    assert bytes(out) == data  # demand reads covered for the prefetches
+    assert a.drain() == 0
+    a._fetch_span = orig
+    a.shutdown()
+    seeder.shutdown()
+
+
+def test_close_wrapup_unexpected_errors_counted(cluster):
+    """The async CLOSE wrap-up is best-effort, but any failure — FSError
+    or not — must land in async_errors where drain() reports it."""
+    a = _seed(cluster, {"/d/cl": b"x" * 100})
+    fd = a.open("/d/cl")
+    a.read(fd)  # deliver the deferred open record so close() RPCs
+    orig = a._rpc
+
+    def broken(host_id, msg, *, critical=True):
+        if msg.type is MsgType.CLOSE:
+            raise RuntimeError("injected close bug")
+        return orig(host_id, msg, critical=critical)
+
+    a._rpc = broken
+    a.close(fd)
+    assert a.drain() >= 1
+    a._rpc = orig
+    a.shutdown()
 
 
 def test_striped_over_tcp(tmp_path):
@@ -547,6 +873,10 @@ def test_striped_over_tcp(tmp_path):
         a.drain()
         assert lib.read_file("/t/f") == data
         lib.unlink("/t/f")
+        # SCRUB + the server-to-server SCRUB_CLIP queries are real wire
+        # verbs too: a clean cluster scrubs to zero over TCP
+        s = lib.scrub()
+        assert s["orphans_reaped"] == 0 and s["bytes_clipped"] == 0, s
         a.shutdown()
     finally:
         c.shutdown()
@@ -564,7 +894,7 @@ def _random_ops(rng, n: int):
     ops = []
     for _ in range(n):
         kind = rng.choice(["write", "write", "read", "read", "truncate",
-                           "unlink"])
+                           "unlink", "scrub"])
         which = rng.randrange(4)
         if kind == "write":
             ops.append((kind, which, rng.randrange(3 * SS),
@@ -574,7 +904,7 @@ def _random_ops(rng, n: int):
                         rng.randrange(1, 2 * SS)))
         elif kind == "truncate":
             ops.append((kind, which, rng.randrange(2 * SS), 0))
-        else:
+        else:  # unlink / scrub
             ops.append((kind, which, 0, 0))
     return ops
 
@@ -606,6 +936,14 @@ def test_mixed_striped_and_plain_files_match_model(tmp_path_factory, seed):
         assert _node(a, "/p/s0").layout is not None
         assert _node(a, "/p/u0").layout is None
         for op, which, off, ln in ops:
+            if op == "scrub":
+                # a scrub pass must never change observable contents — it
+                # only reconciles chunk stores with layouts, and on a
+                # healthy quiesced cluster it finds nothing at all
+                s = lib.scrub()
+                assert s["orphans_reaped"] == 0, s
+                assert s["bytes_clipped"] == 0, s
+                continue
             name = names[which]
             if name not in model:
                 continue
@@ -641,6 +979,14 @@ def test_mixed_striped_and_plain_files_match_model(tmp_path_factory, seed):
                 del model[name]
         for name, m in model.items():
             assert BLib(a).read_file(name) == bytes(m), name
+        # final reconciliation: after the whole workload (including any
+        # unlinks and truncates) a scrub pass finds zero orphans and zero
+        # overhang, and contents still match the model afterwards
+        final = lib.scrub()
+        assert final["orphans_reaped"] == 0, final
+        assert final["bytes_clipped"] == 0, final
+        for name, m in model.items():
+            assert BLib(a).read_file(name) == bytes(m), (name, "post-scrub")
         a.shutdown()
     finally:
         cluster.shutdown()
