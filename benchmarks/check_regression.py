@@ -84,6 +84,30 @@ def extract(rows: List[dict]) -> Dict[str, float]:
             key = f"rpc/{r['system']}/{r['op']}"
             out[key + "/warm_critical"] = r["warm_critical"]
             out[key + "/cold_critical"] = r["cold_critical"]
+        elif bench == "fig10_mlstack":
+            # bytes-per-op ceilings alongside the RPC-count gates: frame
+            # sizes are exact functions of the wire format (fixed-width
+            # slots, blake2s placement), so a header that grows — or a
+            # code path that starts re-sending / re-encoding — fails here
+            # deterministically, load-independent
+            mode = r.get("mode")
+            if mode == "wire":
+                out[f"fig10/wire/{r['verb']}/bin_bytes"] = r["bin_bytes"]
+            elif mode == "tcp":
+                out["fig10/tcp/bytes_sent_per_op"] = r["bytes_sent_per_op"]
+                out["fig10/tcp/bytes_recv_per_op"] = r["bytes_recv_per_op"]
+            elif mode == "ckpt":
+                key = f"fig10/ckpt/{r['phase']}"
+                out[key + "/crit_rpcs"] = r["crit_rpcs"]
+                out[key + "/rpcs"] = r["rpcs"]
+                out[key + "/bytes_sent"] = r["bytes_sent"]
+                out[key + "/bytes_recv"] = r["bytes_recv"]
+            elif mode == "ingest":
+                out["fig10/ingest/crit_rpcs"] = r["crit_rpcs"]
+                out["fig10/ingest/rpcs"] = r["rpcs"]
+                out["fig10/ingest/bytes_sent_per_sample"] = (
+                    r["bytes_sent_per_sample"])
+                out["fig10/ingest/bytes_recv"] = r["bytes_recv"]
     return out
 
 

@@ -22,7 +22,7 @@ def main() -> None:
 
     from benchmarks import (fig3_latency, fig4_concurrency, fig5_batch,
                             fig6_write, fig7_readcache, fig8_stripe,
-                            invalidation, rpc_table)
+                            fig10_mlstack, invalidation, rpc_table)
 
     print("name,us_per_call,derived")
     rows = []
@@ -98,6 +98,27 @@ def main() -> None:
             print(f"fig8_readahead_h{r['hosts']},{r['mb_per_s']}MBps,"
                   f"ra={r['readaheads']} hits={r['cache_hits']} "
                   f"crit={r['crit_rpcs']}", flush=True)
+
+    # Figure 10 (extension): binary wire fast path + ML I/O stack
+    for r in fig10_mlstack.run(wire_iters=20_000 if args.quick
+                               else fig10_mlstack.WIRE_ITERS):
+        rows.append(r)
+        if r["mode"] == "wire":
+            print(f"fig10_wire_{r['verb']},{r['bin_ns']},"
+                  f"speedup={r['speedup']}x bytes={r['bin_bytes']}"
+                  f"(json={r['json_bytes']})", flush=True)
+        elif r["mode"] == "tcp":
+            print(f"fig10_tcp_sendmsg,{r['mb_per_s']}MBps,"
+                  f"sent/op={r['bytes_sent_per_op']} "
+                  f"recv/op={r['bytes_recv_per_op']}", flush=True)
+        elif r["mode"] == "ckpt":
+            print(f"fig10_ckpt_{r['phase']},{r['mb_per_s']}MBps,"
+                  f"crit={r['crit_rpcs']} "
+                  f"wire_overhead={r['bytes_per_payload_byte']}x", flush=True)
+        else:
+            print(f"fig10_ingest,{r['samples_per_s']}samples/s,"
+                  f"crit_per_sample={r['crit_per_sample']} "
+                  f"sent/sample={r['bytes_sent_per_sample']}", flush=True)
 
     # RPC table (the mechanism itself)
     for r in rpc_table.run():
@@ -207,6 +228,43 @@ def main() -> None:
                 f"fig8 scrub: {sc['epoch_rejects']} EPOCHSTALE rejects "
                 f"(expected {sc['epoch_rejects_expected']}: the "
                 f"truncate-vs-scatter window reopened or retries storm)")
+    f10 = [r for r in rows if r.get("bench") == "fig10_mlstack"]
+    agg = next((r for r in f10 if r.get("mode") == "wire"
+                and r["verb"] == "aggregate"), None)
+    if agg and agg["speedup"] < 3.0:
+        # a RATIO of two timings on the same core, so runner load cancels
+        # out — this is the one timing-derived gate, per the fig10
+        # acceptance bar (measured headroom: ~3.6x)
+        failures.append(
+            f"fig10: binary header codec only {agg['speedup']}x faster "
+            f"than JSON (<3x: the wire fast path regressed)")
+    for r in f10:
+        if r.get("mode") == "wire" and r["verb"] != "aggregate" \
+                and r["bin_bytes"] > r["json_bytes"]:
+            failures.append(
+                f"fig10: {r['verb']} binary header {r['bin_bytes']}B "
+                f"exceeds JSON {r['json_bytes']}B (compactness inverted)")
+    tcp = next((r for r in f10 if r.get("mode") == "tcp"), None)
+    if tcp and (tcp["encode_ns_total"] == 0 or tcp["decode_ns_total"] == 0):
+        failures.append(
+            "fig10: TCP transport recorded zero serialization time "
+            "(encode_ns/decode_ns stats wiring broke)")
+    for r in f10:
+        if r.get("mode") == "ckpt" and r["serialization_ns"] != 0:
+            failures.append(
+                f"fig10: in-proc ckpt {r['phase']} recorded "
+                f"{r['serialization_ns']}ns serialization (the shared-buffer "
+                f"fast path started framing messages)")
+        if r.get("mode") == "ckpt" and r["bytes_per_payload_byte"] > 1.1:
+            failures.append(
+                f"fig10: ckpt {r['phase']} wire overhead "
+                f"{r['bytes_per_payload_byte']}x payload (>1.1x: headers or "
+                f"re-sends bloated the data path)")
+    ing = next((r for r in f10 if r.get("mode") == "ingest"), None)
+    if ing and ing["crit_per_sample"] > 1.25:
+        failures.append(
+            f"fig10: ingest {ing['crit_per_sample']} critical RPCs/sample "
+            f"(>1.25: the one-RPC-per-file property regressed)")
     if failures:
         for f in failures:
             print(f"VERDICT FAIL: {f}", file=sys.stderr)

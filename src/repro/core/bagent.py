@@ -974,6 +974,11 @@ class BAgent:
                 else:
                     data = self._gather_chunks(ino, fh.layout, offset, end,
                                                critical=critical)
+        if not isinstance(data, bytes):
+            # materialization boundary: the transport hands payloads back as
+            # memoryviews over the received frame; anything returned to the
+            # caller (or retained in the page cache) must own its bytes
+            data = bytes(data)
         if self._cache is not None and resp.header.get("lease"):
             self._cache.fill(key, gen, offset, data, size, ver,
                              resp.header.get("wseq", 0))
@@ -1038,13 +1043,15 @@ class BAgent:
                     raise err(r.header.get("errno", errno.EIO),
                               r.header.get("msg", "chunk read failed"))
                 clen = m.header["length"]
-                p = r.payload
+                p = r.payload  # may be a memoryview; the join below copies
                 parts[slot] = p if len(p) == clen \
-                    else p + bytes(clen - len(p))
+                    else bytes(p) + bytes(clen - len(p))
 
         self._fanout_hosts(per_host, fetch)
         if len(parts) == 1:
-            return parts[0]  # single-chunk span: no copy at all
+            # single-chunk span: possibly still a view; the caller
+            # (_fetch_span) materializes at its return boundary
+            return parts[0]
         return b"".join(parts)  # type: ignore[arg-type]
 
     def _scatter_chunks(self, ino: Inode, layout: Dict,
@@ -1068,6 +1075,12 @@ class BAgent:
         generation, so its fill is discarded."""
         per_host: Dict[int, List[Message]] = {}
         for eoff, edata in extents:
+            # zero-copy scatter: each CHUNK_WRITE carries a memoryview
+            # window over the extent buffer — the vectored sendmsg path
+            # (or the in-proc handler) consumes it before this call
+            # returns, so header+payload are never concatenated and the
+            # extent bytes are never sliced into per-chunk copies
+            ev = edata if type(edata) is memoryview else memoryview(edata)
             for idx, host, coff, clen in stripe_spans(layout, eoff,
                                                       eoff + len(edata)):
                 pos = idx * layout["ss"] + coff
@@ -1075,7 +1088,7 @@ class BAgent:
                     MsgType.CHUNK_WRITE,
                     {"home": ino.host_id, "file_id": ino.file_id,
                      "index": idx, "offset": coff, "epoch": epoch},
-                    bytes(edata[pos - eoff : pos - eoff + clen])))
+                    ev[pos - eoff : pos - eoff + clen]))
 
         def send(host: int, msgs) -> None:
             for r in self._rpc_many(host, msgs, critical=critical):
@@ -2201,7 +2214,9 @@ class BAgent:
                                                       off + len(r.payload)),
                                          snap[1], r.header.get("wseq", 0))
                     with gather_lock:
-                        gathered.append((i, r.payload))
+                        # batch sub-payloads are views into the envelope
+                        # frame; these escape to the caller — materialize
+                        gathered.append((i, bytes(r.payload)))
 
         # hosts are independent servers: drain them concurrently (each fd
         # belongs to exactly one host, so no slot is shared)

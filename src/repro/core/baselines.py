@@ -186,7 +186,9 @@ class LustreNormalClient:
             if not access_ok(perm, self.cred, flags_to_access(flags)):
                 raise err(errno.EACCES, path)
             ino, size = resp.header["ino"], resp.header["size"]
-            inline = resp.payload if resp.header.get("inline") else None
+            # retained past the RPC (served from later read()s): own the
+            # bytes, never a view over the transport's frame
+            inline = bytes(resp.payload) if resp.header.get("inline") else None
         with self._lock:
             self._fds[fd] = _LFile(fd=fd, ino=ino, flags=flags, path=path,
                                    size=size, inline=inline,
@@ -218,7 +220,7 @@ class LustreNormalClient:
         resp = self._rpc(ino.host_id, Message(MsgType.READ, {
             "file_id": ino.file_id, "offset": fh.offset, "length": length}))
         fh.offset += len(resp.payload)
-        return resp.payload
+        return bytes(resp.payload)  # user-facing: materialize the view
 
     def write(self, fd: int, data: bytes) -> int:
         fh = self._fds[fd]

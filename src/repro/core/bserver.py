@@ -283,6 +283,10 @@ class BServer:
             if os.path.exists(self._meta_path):
                 self._load_meta()
             self._stopped = False
+        # close the previous incarnation's listener before rebinding: a
+        # reboot of a live server (no prior shutdown()) would otherwise
+        # EADDRINUSE on real sockets (InProc shutdown is an idempotent pop)
+        self.transport.shutdown(self.addr)
         self.transport.serve(self.addr, self.handle)
         self._start_scrub_worker()
 

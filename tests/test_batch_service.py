@@ -645,3 +645,24 @@ def test_tcp_concurrent_shared_connection(tcp_cluster):
         t.join()
     assert not errs, errs
     a.shutdown()
+
+
+def test_tcp_restart_server_rebinds(tcp_cluster):
+    """Restarting a LIVE server must close the old listener before
+    rebinding — previously only exercised over InProc, where serve() is a
+    dict insert; on real sockets the stale listener made restart die with
+    EADDRINUSE."""
+    c = tcp_cluster
+    a = BAgent(c)
+    lib = BLib(a)
+    lib.makedirs("/r")
+    lib.write_file("/r/f", b"survives reboot")
+    a.drain()
+    v0 = c.servers[0].version
+    assert c.restart_server(0) == v0 + 1  # no prior shutdown()
+    # client recovers transparently (ESTALE -> refresh -> retry) and the
+    # reborn listener serves both old and new data
+    assert lib.read_file("/r/f") == b"survives reboot"
+    lib.write_file("/r/g", b"post-restart write")
+    assert lib.read_file("/r/g") == b"post-restart write"
+    a.shutdown()

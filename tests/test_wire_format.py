@@ -1,0 +1,281 @@
+"""Wire-format golden-frame and compatibility tests.
+
+The binary (v2) header layout is pinned byte-for-byte here: a framing change
+that silently moves or retypes a fixed field (epoch, wseq, ...) fails these
+tests before it can corrupt data on the wire.  The legacy (v1) JSON-header
+format must keep decoding forever — a v2 node has to interoperate with
+frames produced by the old encoder.
+"""
+import json
+import struct
+
+import pytest
+
+from repro.core import Message, MsgType, pack_batch, unpack_batch
+from repro.core.wire import (EPOCHSTALE, RpcStats, decode, encode,
+                             encode_header, encode_json)
+
+# ---------------------------------------------------------------------------
+# golden frames: byte-exact v2 layout
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    # (type, header, payload) -> exact frame hex
+    "read_req": (
+        (MsgType.READ, {"file_id": 7, "offset": 4096, "length": 64, "ver": 2},
+         b""),
+        "29000000821e00000002000000070000000000000000100000000000004000000000"
+        "00000000000000"),
+    "ok_resp": (
+        (MsgType.OK, {"eof": True, "size": 8192, "wseq": 5, "epoch": 3},
+         b"DATA"),
+        "2a000000c0e02000000020000000000000030000000000000005000000000000000"
+        "10000000044415441"),
+    "epochstale": (
+        (MsgType.ERROR, {"errno": EPOCHSTALE, "epoch": 9, "msg": "stale epoch"},
+         b""),
+        "2e000000c140020000090000000000000028040000150000007b226d7367223a2273"
+        "74616c652065706f6368227d"),
+    "chunk_write": (
+        (MsgType.CHUNK_WRITE,
+         {"home": 1, "file_id": 7, "index": 2, "offset": 128, "epoch": 4,
+          "ver": 1}, b"chunk"),
+        "36000000974e1800000100000007000000000000008000000000000000040000000"
+        "00000000200000001000000000000006368756e6b"),
+    "empty_header_and_payload": (
+        (MsgType.PING, {}, b""),
+        "0d000000900000000000000000"),
+    "max_u64_fields": (
+        (MsgType.OK, {"epoch": 2**64 - 1, "wseq": 2**64 - 1,
+                      "offset": 2**64 - 1}, b""),
+        "25000000c0c8000000ffffffffffffffffffffffffffffffffffffffffffffffff"
+        "00000000"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_golden_frame_bytes(name):
+    (t, h, p), want_hex = GOLDEN[name]
+    frame = encode(t, h, p)
+    assert frame.hex() == want_hex.replace(" ", "")
+    # and the pinned bytes decode back to exactly the original message
+    t2, h2, p2 = decode(frame)
+    assert t2 is t and h2 == h and bytes(p2) == p
+
+
+def test_golden_batch_frame():
+    subs = [Message(MsgType.READ, {"file_id": 1, "offset": 0, "length": 4}),
+            Message(MsgType.WRITE, {"file_id": 2, "offset": 8}, b"wxyz")]
+    env = pack_batch(subs, {"ver": 3})
+    assert env.encode().hex() == (
+        "5b000000c2020400000300000002000000000000002500000082"
+        "1c00000001000000000000000000000000000000040000000000"
+        "00000000000021000000830c0000000200000000000000080000"
+        "0000000000000000007778797a")
+
+
+def test_frame_total_counts_whole_frame():
+    frame = encode(MsgType.WRITE, {"file_id": 9, "offset": 0}, b"abcdef")
+    (total,) = struct.unpack_from("<I", frame, 0)
+    assert total == len(frame)
+
+
+def test_binary_discriminator_bit():
+    # v2 frames set the high bit of the type octet; v1 frames never can
+    # (MsgType values stop far below 0x80)
+    assert encode(MsgType.READ, {})[4] == MsgType.READ | 0x80
+    assert encode_json(MsgType.READ, {})[4] == MsgType.READ
+    assert max(MsgType) < 0x80
+
+
+# ---------------------------------------------------------------------------
+# v1 (JSON header) compatibility: old frames must keep decoding
+# ---------------------------------------------------------------------------
+
+def test_legacy_json_frame_decodes():
+    h = {"file_id": 7, "offset": 4096, "length": 64, "ver": 2,
+         "entries": [["a", 1]]}
+    frame = encode_json(MsgType.READ, h, b"PAY")
+    t, h2, p = decode(frame)
+    assert t is MsgType.READ and h2 == h and bytes(p) == b"PAY"
+
+
+def test_legacy_golden_frame_bytes():
+    # a hand-assembled v1 frame, as the pre-binary encoder framed it
+    hj = json.dumps({"errno": EPOCHSTALE, "epoch": 9},
+                    separators=(",", ":")).encode()
+    frame = struct.pack("<IBI", 9 + len(hj), MsgType.ERROR, len(hj)) + hj
+    t, h, p = decode(frame)
+    assert t is MsgType.ERROR
+    assert h == {"errno": EPOCHSTALE, "epoch": 9}
+    assert p == b""
+
+
+def test_legacy_batch_of_legacy_subs():
+    # a whole envelope framed by the old encoder, nested subs included
+    subs = [encode_json(MsgType.READ, {"file_id": 1, "offset": 0}),
+            encode_json(MsgType.WRITE, {"file_id": 2}, b"zz")]
+    frame = encode_json(MsgType.BATCH, {"n": 2}, b"".join(subs))
+    out = unpack_batch(Message.decode(frame))
+    assert [m.type for m in out] == [MsgType.READ, MsgType.WRITE]
+    assert out[1].payload == b"zz"
+
+
+def test_mixed_generation_batch():
+    # v2 envelope carrying one v1 sub-frame next to a v2 sub-frame
+    v1 = encode_json(MsgType.READ, {"file_id": 1, "offset": 0, "length": 8})
+    v2 = Message(MsgType.WRITE, {"file_id": 2, "offset": 8}, b"data")
+    env = Message(MsgType.BATCH, {"n": 2}, v1 + v2.encode())
+    out = unpack_batch(Message.decode(env.encode()))
+    assert out[0].header == {"file_id": 1, "offset": 0, "length": 8}
+    assert out[1].payload == b"data"
+
+
+# ---------------------------------------------------------------------------
+# round-trip edge cases
+# ---------------------------------------------------------------------------
+
+HOT_HEADERS = [
+    (MsgType.READ, {"file_id": 123456, "offset": 1 << 20, "length": 65536,
+                    "ver": 3, "_rid": 987654}),
+    (MsgType.OK, {"eof": False, "size": 1 << 25, "wseq": 17, "epoch": 2,
+                  "lease": True, "_rid": 987654}),
+    (MsgType.WRITE, {"file_id": 123456, "offset": 1 << 20, "ver": 3}),
+    (MsgType.CHUNK_WRITE, {"home": 2, "file_id": 1, "index": 7,
+                           "offset": 4096, "epoch": 5, "ver": 3}),
+    (MsgType.CHUNK_READ, {"home": 0, "file_id": 1, "index": 0, "offset": 0,
+                          "length": 4096, "ver": 1}),
+    (MsgType.ERROR, {"errno": EPOCHSTALE, "epoch": 9, "_rid": 11}),
+]
+
+
+@pytest.mark.parametrize("t,h", HOT_HEADERS)
+def test_hot_verb_header_has_no_json(t, h):
+    # zero JSON on the hot path: ext_len == 0 => the frame is pure struct
+    frame = encode(t, h)
+    hdr = encode_header(t, h, 0)
+    assert frame == hdr
+    (ext_len,) = struct.unpack_from("<I", frame, len(frame) - 4)
+    assert ext_len == 0
+    t2, h2, _ = decode(frame)
+    assert t2 is t and h2 == h
+
+
+def test_bool_false_roundtrips_distinct_from_absent():
+    t, h, _ = decode(encode(MsgType.OK, {"eof": False, "size": 1}))
+    assert h == {"eof": False, "size": 1}
+    assert h["eof"] is False
+    t, h2, _ = decode(encode(MsgType.OK, {"size": 1}))
+    assert "eof" not in h2
+
+
+def test_bool_true_is_bool_not_int():
+    _, h, _ = decode(encode(MsgType.OK, {"lease": True, "eof": True}))
+    assert h["lease"] is True and h["eof"] is True
+
+
+def test_lease_record_dict_spills_to_extension():
+    # request side carries a lease RECORD (dict) under the same key the
+    # response uses for the bool grant — the dict must survive via ext JSON
+    h = {"file_id": 5, "lease": {"client_id": "c1", "ttl": 3.0}}
+    frame = encode(MsgType.READ, h)
+    _, h2, _ = decode(frame)
+    assert h2 == h
+
+
+def test_out_of_range_ints_spill_to_extension():
+    for h in ({"offset": -1}, {"offset": 2**64}, {"errno": -5},
+              {"length": 2**70}, {"size": "not-an-int"}):
+        _, h2, _ = decode(encode(MsgType.STAT, dict(h)))
+        assert h2 == h
+
+
+def test_non_slot_keys_ride_extension_blob():
+    h = {"size": 10, "entries": [["a", 1], ["b", 2]], "client_id": "c9",
+         "commit": [[0, 5]], "status": [0, 0, 2]}
+    _, h2, p = decode(encode(MsgType.OK, h, b"x"))
+    assert h2 == h and bytes(p) == b"x"
+
+
+def test_empty_payload_decodes_as_bytes():
+    _, _, p = decode(encode(MsgType.PING, {"ver": 1}))
+    assert p == b"" and isinstance(p, bytes)
+
+
+# ---------------------------------------------------------------------------
+# zero-copy contracts
+# ---------------------------------------------------------------------------
+
+def test_decode_payload_is_view_not_copy():
+    frame = encode(MsgType.WRITE, {"file_id": 1}, b"0123456789")
+    _, _, p = decode(frame)
+    assert isinstance(p, memoryview)
+    assert bytes(p) == b"0123456789"
+    # a view over the original frame, not a fresh buffer
+    assert p.obj is frame
+
+
+def test_decode_accepts_memoryview_input():
+    frame = memoryview(encode(MsgType.WRITE, {"file_id": 1}, b"xyz"))
+    m = Message.decode(frame)
+    assert m.header == {"file_id": 1} and bytes(m.payload) == b"xyz"
+    assert isinstance(m.payload, memoryview)
+
+
+def test_unpack_batch_payloads_are_views_into_envelope():
+    subs = [Message(MsgType.WRITE, {"file_id": i}, bytes([65 + i]) * 64)
+            for i in range(4)]
+    frame = pack_batch(subs).encode()
+    out = unpack_batch(Message.decode(frame))
+    for i, m in enumerate(out):
+        assert isinstance(m.payload, memoryview)
+        assert m.payload.obj is frame  # no slice copies anywhere
+        assert bytes(m.payload) == bytes([65 + i]) * 64
+
+
+def test_pack_batch_reuses_cached_sub_frames():
+    subs = [Message(MsgType.WRITE, {"file_id": 1}, b"abc"),
+            Message(MsgType.READ, {"file_id": 2, "offset": 0, "length": 4})]
+    pre = [m.encode() for m in subs]
+    # poison re-encoding: if pack_batch re-encoded, the mutated header
+    # would change the bytes; the cached frame must win
+    subs[0].header["file_id"] = 999
+    env = pack_batch(subs)
+    assert env.payload == b"".join(pre)
+    # envelope sizing never re-encodes subs either
+    assert env.nbytes == len(env.encode())
+
+
+def test_encode_parts_never_copies_payload():
+    payload = memoryview(b"Z" * 4096)
+    m = Message(MsgType.WRITE, {"file_id": 3, "offset": 0}, payload)
+    parts = m.encode_parts()
+    assert parts[1] is payload  # the very same buffer, no concat
+    joined = b"".join(bytes(x) for x in parts)
+    assert joined == Message(MsgType.WRITE, {"file_id": 3, "offset": 0},
+                             b"Z" * 4096).encode()
+    assert m.nbytes == len(joined)
+
+
+def test_nbytes_matches_encode_without_framing():
+    m = Message(MsgType.WRITE, {"file_id": 9, "offset": 4096, "ver": 1},
+                b"z" * 777)
+    n = m.nbytes  # computed arithmetically, before any encode
+    assert n == len(m.encode())
+
+
+# ---------------------------------------------------------------------------
+# RpcStats: per-verb serialization time
+# ---------------------------------------------------------------------------
+
+def test_rpcstats_serialization_counters():
+    st = RpcStats()
+    st.record(MsgType.READ, 10, 20, True, encode_ns=1500, decode_ns=700)
+    st.record(MsgType.READ, 10, 20, True, encode_ns=500)
+    st.record(MsgType.WRITE, 10, 20, False)
+    snap = st.snapshot()
+    assert snap["encode_ns"] == {"READ": 2000}
+    assert snap["decode_ns"] == {"READ": 700}
+    st.reset()
+    snap = st.snapshot()
+    assert snap["encode_ns"] == {} and snap["decode_ns"] == {}
