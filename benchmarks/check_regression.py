@@ -108,6 +108,34 @@ def extract(rows: List[dict]) -> Dict[str, float]:
                 out["fig10/ingest/bytes_sent_per_sample"] = (
                     r["bytes_sent_per_sample"])
                 out["fig10/ingest/bytes_recv"] = r["bytes_recv"]
+        elif bench == "fig11_failover":
+            # failover health: every metric is a count that should be
+            # ZERO (errors, corrupt files, forced breaks, residual lag)
+            # or a DEFICIT of an expected event (redirect, fence,
+            # wait-out) — shortfalls point down, so they're inverted into
+            # deficits to fail a ceiling-only gate
+            mode = r.get("mode")
+            key = f"fig11/{mode}"
+            out[key + "/lease_breaks_forced"] = r["lease_breaks_forced"]
+            if mode == "warm_lease":
+                out[key + "/warm_crit_per_read"] = r["warm_crit_per_read"]
+                out[key + "/lease_expiries"] = r["lease_expiries"]
+                out[key + "/repl_lag_after"] = r["repl_lag_after"]
+            elif mode == "failover":
+                out[key + "/client_errors"] = r["client_errors"]
+                out[key + "/data_bad"] = r["data_bad"]
+                out[key + "/redirect_deficit"] = max(
+                    0, 1 - r["failover_redirects"])
+                out[key + "/fence_deficit"] = max(0, 1 - r["promote_waits"])
+                out[key + "/repl_lag_after"] = r["repl_lag_after"]
+            elif mode == "ttl_waitout":
+                out[key + "/waitout_deficit"] = max(
+                    0, 1 - r["lease_ttl_waits"])
+                out[key + "/expired_drop_deficit"] = max(
+                    0, 1 - r["lease_expired_drops"])
+                out[key + "/stale_reads"] = r["stale_reads"]
+                out[key + "/revoke_rpcs_to_client"] = (
+                    r["revoke_rpcs_to_client"])
     return out
 
 

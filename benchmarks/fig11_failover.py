@@ -1,0 +1,234 @@
+"""Fig 11: home-host failover and TTL-bounded read leases.
+
+Three deterministic scenarios, each gated on RPC/counter arithmetic
+(never wall-clock), matching the failover design's three claims:
+
+  * warm_lease — with commit-log replication ENABLED, a cached client
+    still serves warm reads under an unexpired lease at zero
+    critical-path RPCs: log shipping rides entirely off the critical
+    path, no grant expires mid-pass, and no lease is ever force-broken.
+  * failover — kill a home host mid-workload, promote its standby on a
+    background thread, and let a blocking read bridge the outage through
+    the client's capped-backoff retry + config redirect.  Every byte
+    written before the crash must read back intact afterwards with zero
+    client-visible errors, the promoted authority's first mutation is
+    fenced behind one lease TTL, and its own commit log drains to zero
+    lag against the next standby along the ring.
+  * ttl_waitout — partition a caching client's callback address so
+    REVOKE_LEASE cannot be delivered: the server waits out the grant's
+    TTL instead of force-breaking it, drops already-expired grants
+    without any revoke RPC, and the client (whose clock runs AHEAD of
+    the server's, having stamped t0 before the granting RPC left) never
+    serves a stale block.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+from repro.core import BAgent, BLib, BuffetCluster, Inode
+from repro.core.failure import partitioned
+
+# TTLs are scenario parameters, not sweep axes: warm passes must finish
+# well inside WARM_TTL, while the fence/wait-out scenarios want a TTL
+# short enough that one deliberate sleep stays cheap.
+WARM_TTL_S = 30.0
+FENCE_TTL_S = 0.3
+WAITOUT_TTL_S = 0.4
+
+
+def _pattern(i: int, size: int) -> bytes:
+    return bytes((i * 7 + j) % 251 for j in range(size))
+
+
+def _home(agent: BAgent, path: str) -> int:
+    node, _ = agent._walk(path)
+    return Inode.unpack(node.ino).host_id
+
+
+def _sum_srv(cluster: BuffetCluster, attr: str) -> int:
+    return sum(getattr(s, attr) for s in cluster.servers.values())
+
+
+def _warm_lease(n_files: int, warm_passes: int, size: int) -> Dict:
+    with tempfile.TemporaryDirectory() as root:
+        cluster = BuffetCluster(root_dir=root, n_servers=4,
+                                replication=True, lease_ttl_s=WARM_TTL_S)
+        try:
+            writer = BLib(BAgent(cluster))
+            writer.makedirs("/warm")
+            paths = [f"/warm/f{i:04d}" for i in range(n_files)]
+            for i, p in enumerate(paths):
+                writer.write_file(p, _pattern(i, size))
+
+            reader = BAgent(cluster, read_cache=True)
+            rlib = BLib(reader)
+            reader.stats.reset()
+            t0 = time.perf_counter()
+            for p in paths:
+                rlib.read_file(p)
+            cold_s = time.perf_counter() - t0
+            cold = reader.stats.snapshot()["critical_path"]
+
+            reader.stats.reset()
+            t0 = time.perf_counter()
+            for _ in range(warm_passes):
+                for p in paths:
+                    rlib.read_file(p)
+            warm_s = time.perf_counter() - t0
+            warm = reader.stats.snapshot()["critical_path"]
+
+            # replication is on the whole time: after a drain the shipped
+            # log has fully converged without ever touching the read path
+            lag = 0
+            for srv in cluster.servers.values():
+                srv.repl_drain()
+                lag += srv.repl_stats().get("repl_lag", 0)
+            cache = reader.cache_stats() or {}
+            return {
+                "bench": "fig11_failover",
+                "mode": "warm_lease",
+                "n_files": n_files,
+                "warm_passes": warm_passes,
+                "cold_seconds": round(cold_s, 3),
+                "warm_seconds": round(warm_s, 3),
+                "cold_crit_per_read": round(cold / n_files, 4),
+                "warm_crit_per_read": round(
+                    warm / (n_files * warm_passes), 4),
+                "lease_expiries": cache.get("lease_expiries", 0),
+                "lease_breaks_forced": _sum_srv(cluster,
+                                                "lease_breaks_forced"),
+                "repl_lag_after": lag,
+            }
+        finally:
+            cluster.shutdown()
+
+
+def _failover(n_files: int, size: int) -> Dict:
+    with tempfile.TemporaryDirectory() as root:
+        cluster = BuffetCluster(root_dir=root, n_servers=4,
+                                replication=True, lease_ttl_s=FENCE_TTL_S)
+        try:
+            writer = BLib(BAgent(cluster))
+            writer.makedirs("/bench")
+            blobs: Dict[str, bytes] = {}
+            for i in range(n_files):
+                p = f"/bench/f{i:04d}"
+                blobs[p] = _pattern(i, size)
+                writer.write_file(p, blobs[p])
+            for srv in cluster.servers.values():
+                assert srv.repl_drain(), "replication lag stuck pre-crash"
+
+            probe = sorted(blobs)[0]
+            victim = _home(writer.agent, probe)
+            reader = BAgent(cluster)
+            rlib = BLib(reader)
+
+            cluster.kill_server(victim)
+            promoter = threading.Thread(
+                target=lambda: (time.sleep(0.15), cluster.promote(victim)))
+            promoter.start()
+            client_errors = 0
+            t0 = time.perf_counter()
+            try:
+                bridged = rlib.read_file(probe) == blobs[probe]
+            except OSError:
+                client_errors += 1
+                bridged = False
+            outage_bridge_s = time.perf_counter() - t0
+            promoter.join()
+
+            data_bad = 0
+            for p, want in sorted(blobs.items()):
+                try:
+                    if rlib.read_file(p) != want:
+                        data_bad += 1
+                except OSError:
+                    client_errors += 1
+            if not bridged:
+                data_bad += 1
+
+            # first mutation against the promoted authority: fenced
+            # behind one lease TTL so no pre-crash grant can outlive it
+            try:
+                rlib.write_file(probe, blobs[probe][::-1])
+            except OSError:
+                client_errors += 1
+            promoted = cluster.servers[victim]
+            promoted.repl_drain()
+            return {
+                "bench": "fig11_failover",
+                "mode": "failover",
+                "n_files": n_files,
+                "outage_bridge_s": round(outage_bridge_s, 3),
+                "client_errors": client_errors,
+                "data_bad": data_bad,
+                "failover_retries": reader.failover_retries,
+                "failover_redirects": reader.failover_redirects,
+                "promoted_records": promoted.promoted_records,
+                "promote_waits": promoted.promote_waits,
+                "lease_breaks_forced": _sum_srv(cluster,
+                                                "lease_breaks_forced"),
+                "repl_lag_after": promoted.repl_stats().get("repl_lag", 0),
+            }
+        finally:
+            cluster.shutdown()
+
+
+def _ttl_waitout(size: int) -> Dict:
+    with tempfile.TemporaryDirectory() as root:
+        cluster = BuffetCluster(root_dir=root, n_servers=3,
+                                lease_ttl_s=WAITOUT_TTL_S)
+        try:
+            a = BAgent(cluster, read_cache=True)
+            alib = BLib(a)
+            b = BAgent(cluster)
+            blib = BLib(b)
+            v1, v2, v3 = (_pattern(k, size) for k in (1, 2, 3))
+            blib.write_file("/t", v1)
+            assert alib.read_file("/t") == v1  # A now holds a lease
+
+            # leg 1: the revoke cannot reach A — the server must wait
+            # the grant out rather than force-break it
+            stale_reads = 0
+            with partitioned(cluster.transport, a.cb_addr):
+                t0 = time.perf_counter()
+                blib.write_file("/t", v2)
+                waited_s = time.perf_counter() - t0
+            if alib.read_file("/t") != v2:
+                stale_reads += 1
+            ttl_waits = _sum_srv(cluster, "lease_ttl_waits")
+
+            # leg 2: let A's fresh grant expire on its own clock, then
+            # write again — the server drops the dead grant RPC-free
+            time.sleep(WAITOUT_TTL_S + 0.05)
+            blib.write_file("/t", v3)
+            if alib.read_file("/t") != v3:
+                stale_reads += 1
+            cache = a.cache_stats() or {}
+            return {
+                "bench": "fig11_failover",
+                "mode": "ttl_waitout",
+                "waited_s": round(waited_s, 3),
+                "lease_ttl_waits": ttl_waits,
+                "lease_expired_drops": _sum_srv(cluster,
+                                                "lease_expired_drops"),
+                "lease_breaks_forced": _sum_srv(cluster,
+                                                "lease_breaks_forced"),
+                "revoke_rpcs_to_client": cache.get("revocations", 0),
+                "client_lease_expiries": cache.get("lease_expiries", 0),
+                "stale_reads": stale_reads,
+            }
+        finally:
+            cluster.shutdown()
+
+
+def run(n_files: int = 64, warm_passes: int = 3,
+        size: int = 4096) -> List[Dict]:
+    return [
+        _warm_lease(n_files, warm_passes, size),
+        _failover(n_files, size),
+        _ttl_waitout(size),
+    ]

@@ -22,7 +22,8 @@ def main() -> None:
 
     from benchmarks import (fig3_latency, fig4_concurrency, fig5_batch,
                             fig6_write, fig7_readcache, fig8_stripe,
-                            fig10_mlstack, invalidation, rpc_table)
+                            fig10_mlstack, fig11_failover, invalidation,
+                            rpc_table)
 
     print("name,us_per_call,derived")
     rows = []
@@ -119,6 +120,28 @@ def main() -> None:
             print(f"fig10_ingest,{r['samples_per_s']}samples/s,"
                   f"crit_per_sample={r['crit_per_sample']} "
                   f"sent/sample={r['bytes_sent_per_sample']}", flush=True)
+
+    # Figure 11 (extension): home-host failover + TTL-bounded leases
+    for r in fig11_failover.run(n_files=24 if args.quick else 64,
+                                warm_passes=2 if args.quick else 3):
+        rows.append(r)
+        if r["mode"] == "warm_lease":
+            print(f"fig11_warm_lease_n{r['n_files']},"
+                  f"{round(r['warm_seconds'] * 1e6 / (r['n_files'] * r['warm_passes']), 1)},"
+                  f"warm_crit={r['warm_crit_per_read']} "
+                  f"expiries={r['lease_expiries']}", flush=True)
+        elif r["mode"] == "failover":
+            print(f"fig11_failover_n{r['n_files']},"
+                  f"{round(r['outage_bridge_s'] * 1e6, 1)},"
+                  f"errors={r['client_errors']} "
+                  f"redirects={r['failover_redirects']} "
+                  f"retries={r['failover_retries']} "
+                  f"promoted={r['promoted_records']}rec", flush=True)
+        else:
+            print(f"fig11_ttl_waitout,{round(r['waited_s'] * 1e6, 1)},"
+                  f"waits={r['lease_ttl_waits']} "
+                  f"forced={r['lease_breaks_forced']} "
+                  f"stale={r['stale_reads']}", flush=True)
 
     # RPC table (the mechanism itself)
     for r in rpc_table.run():
@@ -265,6 +288,54 @@ def main() -> None:
         failures.append(
             f"fig10: ingest {ing['crit_per_sample']} critical RPCs/sample "
             f"(>1.25: the one-RPC-per-file property regressed)")
+    f11 = {r.get("mode"): r for r in rows
+           if r.get("bench") == "fig11_failover"}
+    wl = f11.get("warm_lease")
+    if wl:
+        if wl["warm_crit_per_read"] > 0.01 or wl["lease_expiries"] > 0:
+            failures.append(
+                f"fig11 warm_lease: {wl['warm_crit_per_read']} crit "
+                f"RPCs/read, {wl['lease_expiries']} expiries (warm reads "
+                f"under an unexpired TTL must stay RPC-free)")
+        if wl["repl_lag_after"] != 0:
+            failures.append(
+                f"fig11 warm_lease: replication lag {wl['repl_lag_after']} "
+                f"after drain (the commit-log shipper stalled)")
+    fo = f11.get("failover")
+    if fo:
+        if fo["client_errors"] or fo["data_bad"]:
+            failures.append(
+                f"fig11 failover: {fo['client_errors']} client errors, "
+                f"{fo['data_bad']} corrupt files after promotion (failover "
+                f"must be invisible and lossless)")
+        if fo["failover_redirects"] < 1:
+            failures.append(
+                "fig11 failover: client never followed the promotion "
+                "redirect (the retry/redirect path regressed)")
+        if fo["promote_waits"] < 1:
+            failures.append(
+                "fig11 failover: promoted standby did not fence its first "
+                "mutation behind the lease TTL")
+        if fo["repl_lag_after"] != 0:
+            failures.append(
+                f"fig11 failover: promoted host lag {fo['repl_lag_after']} "
+                f"after drain (re-replication to the next standby broke)")
+    tw = f11.get("ttl_waitout")
+    if tw:
+        if tw["lease_ttl_waits"] < 1 or tw["lease_expired_drops"] < 1:
+            failures.append(
+                f"fig11 ttl_waitout: waits={tw['lease_ttl_waits']} "
+                f"expired_drops={tw['lease_expired_drops']} (the server "
+                f"stopped waiting out / dropping TTL-bounded grants)")
+        if tw["stale_reads"]:
+            failures.append(
+                f"fig11 ttl_waitout: {tw['stale_reads']} stale reads "
+                f"(a client served a cached block past its lease)")
+    for mode, r in f11.items():
+        if r["lease_breaks_forced"]:
+            failures.append(
+                f"fig11 {mode}: {r['lease_breaks_forced']} forced lease "
+                f"breaks (TTL discipline must keep this at zero)")
     if failures:
         for f in failures:
             print(f"VERDICT FAIL: {f}", file=sys.stderr)

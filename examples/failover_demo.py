@@ -1,8 +1,11 @@
 """Fault-tolerance demo: a BServer dies mid-run and comes back with a new
 incarnation version; clients recover transparently (ESTALE -> version
-refresh -> retry), hedged reads dodge the straggler while it is slow, and
-training resumes from the last committed checkpoint after a simulated
-coordinator crash.
+refresh -> retry), hedged reads dodge the straggler while it is slow, a
+home host that dies FOR GOOD is replaced by promoting its replicated
+standby (clients bridge the outage with capped-backoff retries and follow
+the config redirect; the promoted authority fences its first mutation
+behind one lease TTL), and training resumes from the last committed
+checkpoint after a simulated coordinator crash.
 
     PYTHONPATH=src python examples/failover_demo.py
 """
@@ -23,7 +26,8 @@ from repro.data import BuffetDataset, DataPipeline, ShardedSampler
 
 def main() -> None:
     root = tempfile.mkdtemp(prefix="buffetfs_failover_")
-    cluster = BuffetCluster(root_dir=root, n_servers=4)
+    cluster = BuffetCluster(root_dir=root, n_servers=4,
+                            replication=True, lease_ttl_s=0.3)
     agent = BAgent(cluster)
     lib = BLib(agent)
 
@@ -69,7 +73,23 @@ def main() -> None:
               f"(hedge_wins={pipe2.stats.hedge_wins})")
     pipe2.stop()
 
-    # --- 4. crash/restart training resume ---------------------------------
+    # --- 4. permanent home-host death: promote the standby ----------------
+    lib.makedirs("/prom")
+    lib.write_file("/prom/precious", b"survives the home host")
+    victim = Inode.unpack(agent.stat_cached("/prom/precious")["ino"]).host_id
+    for srv in cluster.servers.values():
+        srv.repl_drain()  # commit logs converged on the standbys
+    cluster.kill_server(victim)
+    new_ver = cluster.promote(victim)  # the admin runbook's config push
+    assert lib.read_file("/prom/precious") == b"survives the home host"
+    lib.write_file("/prom/precious", b"and writes work too")  # TTL-fenced
+    promoted = cluster.servers[victim]
+    print(f"[4] home {victim} dead for good: standby promoted "
+          f"(incarnation -> {new_ver}, {promoted.promoted_records} records "
+          f"replayed, first write fenced {promoted.promote_waits}x, "
+          f"forced lease breaks: {promoted.lease_breaks_forced})")
+
+    # --- 5. crash/restart training resume ---------------------------------
     from repro.launch.train import Trainer, TrainerConfig
     tc = TrainerConfig(arch="stablelm-3b", steps=6, global_batch=4, seq_len=32,
                        ckpt_every=3, log_every=100, data_dir=root,
@@ -82,7 +102,7 @@ def main() -> None:
                         n_servers=4, run_name="fo")
     tr2 = Trainer(tc2, cluster=cluster)
     tr2.init_or_restore()
-    print(f"[4] after 'crash': resumed at step {tr2.start_step} "
+    print(f"[5] after 'crash': resumed at step {tr2.start_step} "
           f"(sampler cursor {tr2.sampler.step})")
     tr2.run()
     tr2.pipeline.stop()

@@ -42,6 +42,7 @@ import errno
 import itertools
 import queue
 import threading
+import time
 from collections import Counter, OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -57,6 +58,12 @@ from .wire import (EPOCHSTALE, Message, MsgType, RpcStats,
                    unpack_batch)
 
 _agent_counter = itertools.count()
+
+# RPC failures that mean "the server may be down or mid-failover" rather
+# than "the operation is wrong": worth retrying with backoff, because an
+# admin promote() may re-point the cluster config at a standby meanwhile.
+_TRANSIENT_ERRNOS = frozenset({errno.ENOTCONN, errno.ECONNREFUSED,
+                               errno.ETIMEDOUT, errno.EHOSTUNREACH})
 
 DEFAULT_BATCH = 256  # sub-messages per BATCH frame on the bulk paths
 
@@ -184,11 +191,19 @@ class _PageCache:
         # and fill/patch discard responses older than the stamp — two acks
         # processed out of order can never regress the cache.
         self._stamp: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        # key -> monotonic deadline after which the grant is dead (absent:
+        # untimed lease).  The deadline is computed from a t0 stamped by
+        # the CLIENT before the granting RPC left, while the server stamps
+        # its copy when it processes the grant — so this clock always runs
+        # ahead and the client stops serving strictly before the server
+        # considers the lease expired and mutates without a callback.
+        self._expiry: Dict[Tuple[int, int], float] = {}
         self._bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.revocations = 0
+        self.lease_expiries = 0  # grants dropped at TTL, not by revoke
 
     def gen(self, key: Tuple[int, int]) -> int:
         with self._lock:
@@ -197,9 +212,15 @@ class _PageCache:
     def known_size(self, key: Tuple[int, int]) -> Optional[int]:
         """Lease-validated object size, or None.  Counter-neutral on
         purpose: the readahead detector polls this and must not skew the
-        hit/miss accounting the benchmarks assert on."""
+        hit/miss accounting the benchmarks assert on (expired grants are
+        likewise only *observed* here; serve() does the actual drop)."""
         with self._lock:
-            return self._sizes.get(key) if key in self._leased else None
+            if key not in self._leased:
+                return None
+            exp = self._expiry.get(key)
+            if exp is not None and time.monotonic() >= exp:
+                return None
+            return self._sizes.get(key)
 
     def revoke(self, key: Tuple[int, int]) -> None:
         """Server recalled the lease: bump the generation (kills in-flight
@@ -207,6 +228,7 @@ class _PageCache:
         with self._lock:
             self._gen[key] = self._gen.get(key, 0) + 1
             self._leased.discard(key)
+            self._expiry.pop(key, None)
             self._drop_locked(key)
             self.revocations += 1
 
@@ -225,6 +247,7 @@ class _PageCache:
         with self._lock:
             self._drop_locked(key)
             self._leased.discard(key)
+            self._expiry.pop(key, None)
             self._stamp.pop(key, None)
 
     def _drop_locked(self, key: Tuple[int, int]) -> None:
@@ -238,17 +261,30 @@ class _PageCache:
               ver: int) -> Optional[Tuple[bytes, int]]:
         """Assemble ``[offset, offset+length)`` clipped to EOF from cached
         blocks.  Returns ``(data, object_size)``, or None on any miss — no
-        live lease, unknown size, a block not (fully) resident, or state
-        stamped by another server incarnation than `ver` (the restarted
-        server forgot our lease, so nothing would ever revoke us: distrust
-        everything and refetch)."""
+        live lease, an EXPIRED lease (past its TTL the server is free to
+        mutate without calling us back, so the grant and its blocks are
+        silently dropped and the next read re-validates over RPC), unknown
+        size, a block not (fully) resident, or state stamped by another
+        server incarnation than `ver` (the restarted server forgot our
+        lease, so nothing would ever revoke us: distrust everything and
+        refetch)."""
         bs = self.block_size
         with self._lock:
             st = self._stamp.get(key)
             if st is not None and st[0] != ver:
                 self._drop_locked(key)
                 self._leased.discard(key)
+                self._expiry.pop(key, None)
                 self._stamp.pop(key, None)
+                self.misses += 1
+                return None
+            exp = self._expiry.get(key)
+            if (exp is not None and key in self._leased
+                    and time.monotonic() >= exp):
+                self._leased.discard(key)
+                self._expiry.pop(key, None)
+                self._drop_locked(key)
+                self.lease_expiries += 1
                 self.misses += 1
                 return None
             size = self._sizes.get(key) if key in self._leased else None
@@ -273,13 +309,17 @@ class _PageCache:
             return data, size
 
     def fill(self, key: Tuple[int, int], gen: int, offset: int, data: bytes,
-             size: int, ver: int, wseq: int) -> None:
+             size: int, ver: int, wseq: int,
+             expires: Optional[float] = None) -> None:
         """Install a READ response, re-validating the lease generation
         snapshotted before the RPC was issued.  `ver` is the server
         incarnation the RPC was validated against, `wseq` the per-file
         mutation sequence the response carries: a response older than what
         the cache already holds (our own later write/truncate acked first)
-        is discarded rather than allowed to regress the cache."""
+        is discarded rather than allowed to regress the cache.  `expires`
+        is the grant's TTL deadline (monotonic clock, computed from the
+        pre-RPC t0) — two grants racing keep the later deadline, and None
+        (a server that advertises no TTL) makes the lease untimed."""
         bs = self.block_size
         with self._lock:
             if self._gen.get(key, 0) != gen:
@@ -291,6 +331,12 @@ class _PageCache:
                 self._drop_locked(key)  # old-incarnation leftovers
             self._stamp[key] = (ver, wseq if st is None or st[0] != ver
                                 else max(st[1], wseq))
+            if expires is None:
+                self._expiry.pop(key, None)
+            else:
+                cur = self._expiry.get(key)
+                self._expiry[key] = (expires if cur is None
+                                     else max(cur, expires))
             self._leased.add(key)
             self._sizes[key] = size
             end = offset + len(data)
@@ -388,6 +434,7 @@ class _PageCache:
             return {"hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions,
                     "revocations": self.revocations,
+                    "lease_expiries": self.lease_expiries,
                     "cached_bytes": self._bytes,
                     "cached_blocks": len(self._blocks),
                     "leased_files": len(self._leased)}
@@ -522,6 +569,17 @@ class BAgent:
         self._epochs: Dict[Tuple[int, int], int] = {}
         self.epoch_retries = 0  # scatter/commit rounds re-run EPOCHSTALE
 
+        # home-host failover recovery (§3.2 out-of-band config push):
+        # connection-refused/timeout RPCs retry with capped exponential
+        # backoff, re-reading the cluster config every attempt so the
+        # moment an admin promote() re-points this host id at its standby
+        # the retry lands on the new authority instead of raising
+        self.failover_retry_max = 8
+        self.failover_backoff_s = 0.02
+        self.failover_backoff_cap_s = 0.25
+        self.failover_retries = 0    # backoff retries issued
+        self.failover_redirects = 0  # retries that switched address
+
         # lease-consistent page cache (None => every read RPCs as before)
         self._cache: Optional[_PageCache] = (
             _PageCache(cache_block, cache_budget) if read_cache else None)
@@ -551,20 +609,71 @@ class BAgent:
             self.cb_addr = real
 
     # ------------------------------------------------------------------
-    # RPC plumbing with ESTALE/version recovery
+    # RPC plumbing with ESTALE/version + failover recovery
     # ------------------------------------------------------------------
     def _rpc(self, host_id: int, msg: Message, *, critical: bool = True) -> Message:
+        addr = self.config.addr(host_id)
         msg.header["ver"] = self.config.version(host_id)
-        resp = self.transport.request(self.config.addr(host_id), msg,
+        resp = self.transport.request(addr, msg,
                                       critical=critical, stats=self.stats)
-        if resp.type is MsgType.ERROR and resp.header.get("errno") == errno.ESTALE:
-            # server restarted: re-learn incarnation from config/ping, retry once
-            self.cluster.refresh_host(host_id)
-            msg.header["ver"] = self.config.version(host_id)
-            resp = self.transport.request(self.config.addr(host_id), msg,
-                                          critical=critical, stats=self.stats)
+        if resp.type is MsgType.ERROR:
+            resp = self._rpc_recover(host_id, msg, resp, addr, critical)
         if resp.type is MsgType.ERROR:
             raise self._wire_err(resp)
+        return resp
+
+    def _rpc_recover(self, host_id: int, msg: Message, resp: Message,
+                     addr: str, critical: bool) -> Message:
+        """Recovery tail of `_rpc`, entered only on an ERROR frame.
+
+        Two recoverable failure classes, both rooted in §3.2's "the
+        configuration file is pushed out-of-band" model:
+
+        * **ESTALE** — the server's incarnation moved (restart or standby
+          promotion).  Re-learn the version: if the cluster config already
+          names a new address/version (an admin promote() updated the
+          shared config) just re-stamp; otherwise PING the server for its
+          current incarnation, exactly the old one-shot recovery.
+
+        * **connection failures** (refused / not-connected / timeout /
+          unreachable) — the home may be crashed and mid-failover.  Retry
+          with capped exponential backoff, re-reading the config each
+          attempt: the moment promote() re-points the host id at the
+          promoted standby, the next attempt lands there.  A genuinely
+          dead, never-promoted host still fails after the retry budget —
+          the caller sees the original errno.
+
+        Every attempt that switched addresses counts as a redirect
+        (``failover_redirects``); every backoff retry counts in
+        ``failover_retries``."""
+        stale_left = 2
+        attempts_left = self.failover_retry_max
+        delay = self.failover_backoff_s
+        while resp.type is MsgType.ERROR:
+            eno = resp.header.get("errno")
+            if eno == errno.ESTALE and stale_left > 0:
+                stale_left -= 1
+                if self.config.addr(host_id) == addr:
+                    try:
+                        self.cluster.refresh_host(host_id)
+                    except (ConnectionError, OSError):
+                        return resp  # can't even PING: surface the ESTALE
+            elif eno in _TRANSIENT_ERRNOS and attempts_left > 0:
+                attempts_left -= 1
+                self.failover_retries += 1
+                if self.config.addr(host_id) == addr:
+                    # no new authority yet: wait for one
+                    time.sleep(delay)
+                    delay = min(delay * 2, self.failover_backoff_cap_s)
+            else:
+                return resp
+            cur = self.config.addr(host_id)
+            if cur != addr:
+                self.failover_redirects += 1
+                addr = cur
+            msg.header["ver"] = self.config.version(host_id)
+            resp = self.transport.request(addr, msg,
+                                          critical=critical, stats=self.stats)
         return resp
 
     @staticmethod
@@ -623,27 +732,38 @@ class BAgent:
                   critical: bool = True) -> List[Message]:
         """Pipeline N independent frames to one host via the transport's
         request_many (all outstanding at once, ~1 RTT + N service times),
-        with the usual one-shot ESTALE/version recovery applied per frame.
-        Responses are returned as-is — ERROR frames included — because the
-        write-behind flusher must map failures back to individual handles
-        rather than abort the whole flush cycle."""
+        with the usual ESTALE/version and failover recovery applied per
+        frame.  Responses are returned as-is — ERROR frames included —
+        because the write-behind flusher must map failures back to
+        individual handles rather than abort the whole flush cycle;
+        recoverable frames (stale incarnation, connection failure) are
+        re-driven one by one through `_rpc`'s full retry machinery, and a
+        frame that stays dead after the retry budget comes back as the
+        ERROR frame this contract promises, never a raise."""
         addr = self.config.addr(host_id)
         for m in msgs:
             m.header["ver"] = self.config.version(host_id)
         resps = self.transport.request_many(addr, msgs, critical=critical,
                                             stats=self.stats)
-        stale = [i for i, r in enumerate(resps)
-                 if r.type is MsgType.ERROR
-                 and r.header.get("errno") == errno.ESTALE]
-        if stale:
-            self.cluster.refresh_host(host_id)
-            retry = [msgs[i] for i in stale]
-            for m in retry:
-                m.header["ver"] = self.config.version(host_id)
-            redo = self.transport.request_many(addr, retry, critical=critical,
-                                               stats=self.stats)
-            for i, r in zip(stale, redo):
-                resps[i] = r
+        redo = [i for i, r in enumerate(resps)
+                if r.type is MsgType.ERROR
+                and (r.header.get("errno") == errno.ESTALE
+                     or r.header.get("errno") in _TRANSIENT_ERRNOS)]
+        for i in redo:
+            try:
+                resps[i] = self._rpc(host_id, msgs[i], critical=critical)
+            except FSError as e:
+                we = wire_error(e.errno or errno.EIO, str(e))
+                if hasattr(e, "epoch"):
+                    we.header["epoch"] = e.epoch
+                resps[i] = we
+                if (e.errno in _TRANSIENT_ERRNOS
+                        and self.config.addr(host_id) == addr):
+                    # the full retry budget found nobody home and no new
+                    # authority was pushed: the remaining frames would burn
+                    # the same budget to hear the same thing — leave their
+                    # original ERROR frames standing
+                    break
         return resps
 
     # ------------------------------------------------------------------
@@ -950,7 +1070,7 @@ class BAgent:
         h = {"file_id": ino.file_id, "offset": offset, "length": length}
         if record_open:
             h.update(self._io_header(fh))
-        gen, ver = self._lease_request(key, ino.host_id, h)
+        gen, ver, t0 = self._lease_request(key, ino.host_id, h)
         resp = self._rpc(ino.host_id, Message(MsgType.READ, h),
                          critical=critical)
         self._note_epoch(key, resp.header.get("epoch"))
@@ -980,8 +1100,11 @@ class BAgent:
             # caller (or retained in the page cache) must own its bytes
             data = bytes(data)
         if self._cache is not None and resp.header.get("lease"):
+            ttl = resp.header.get("lease_ttl_ms")
             self._cache.fill(key, gen, offset, data, size, ver,
-                             resp.header.get("wseq", 0))
+                             resp.header.get("wseq", 0),
+                             expires=(t0 + ttl / 1000.0)
+                             if ttl is not None else None)
         return data
 
     # ------------------------------------------------------------------
@@ -1177,16 +1300,21 @@ class BAgent:
                     ev.set()  # wake demand reads parked on this window
 
     def _lease_request(self, key: Tuple[int, int], host_id: int,
-                       h: Dict) -> Tuple[int, int]:
+                       h: Dict) -> Tuple[int, int, float]:
         """Ask for a read lease on this READ; snapshot the revocation
         generation and the server incarnation FIRST — fill() discards the
         response if the generation moved, and a pre-RPC incarnation
         snapshot means a restart racing the RPC yields a conservative
-        stale stamp (one wasted refetch) rather than trusted-stale data."""
+        stale stamp (one wasted refetch) rather than trusted-stale data.
+        The third element is t0 for the grant's TTL, also stamped before
+        the RPC leaves: the server starts ITS copy of the clock later (at
+        grant processing), so the client's lease always dies first and an
+        expired client can never serve past the server's deadline."""
         if self._cache is None:
-            return 0, 0
+            return 0, 0, 0.0
         h["lease"] = {"client_id": self.client_id, "cb_addr": self.cb_addr}
-        return self._cache.gen(key), self.config.version(host_id)
+        return (self._cache.gen(key), self.config.version(host_id),
+                time.monotonic())
 
     def _cached_read(self, fh: FileHandle, offset: int, length: int
                      ) -> Optional[bytes]:
@@ -2209,10 +2337,13 @@ class BAgent:
                                   r.header.get("msg", ""))
                     if self._cache is not None and r.header.get("lease"):
                         off = m.header["offset"]
+                        ttl = r.header.get("lease_ttl_ms")
                         self._cache.fill(key, snap[0], off, r.payload,
                                          r.header.get("size",
                                                       off + len(r.payload)),
-                                         snap[1], r.header.get("wseq", 0))
+                                         snap[1], r.header.get("wseq", 0),
+                                         expires=(snap[2] + ttl / 1000.0)
+                                         if ttl is not None else None)
                     with gather_lock:
                         # batch sub-payloads are views into the envelope
                         # frame; these escape to the caller — materialize

@@ -157,22 +157,32 @@ class BLib:
     def io_stats(self) -> dict:
         """RPC counters of the underlying agent (critical path, per-type,
         per-host fan-out) — what the paper benchmarks report on — plus the
-        agent's epoch-retry count and, under ``servers``, each BServer's
-        health counters: forced lease breaks, outstanding unlink chunk-reap
-        failures (orphan debt the scrubber drains back to zero), and
-        EPOCHSTALE rejections served."""
+        agent's epoch-retry and failover-retry counts and, under
+        ``servers``, each BServer's health counters: forced lease breaks,
+        outstanding unlink chunk-reap failures (orphan debt the scrubber
+        drains back to zero), EPOCHSTALE rejections served, and the
+        replication/failover block from ``BServer.repl_stats()`` (shipping
+        lag, lease-TTL waits, promotion fences)."""
         snap = self.agent.stats.snapshot()
         snap["epoch_retries"] = self.agent.epoch_retries
+        snap["failover_retries"] = self.agent.failover_retries
+        snap["failover_redirects"] = self.agent.failover_redirects
         servers = getattr(self.agent.cluster, "servers", None)
         if servers:
             snap["servers"] = {
                 hid: {"lease_breaks_forced": srv.lease_breaks_forced,
                       "chunk_reap_failures": srv.chunk_reap_failures,
                       "epoch_rejects": srv.epoch_rejects,
-                      "scrub_failures": srv.scrub_failures}
+                      "scrub_failures": srv.scrub_failures,
+                      **srv.repl_stats()}
                 for hid, srv in servers.items()
             }
         return snap
+
+    def promote(self, dead_host_id: int) -> int:
+        """Admin failover: promote the standby of a dead home host and
+        re-point this client's cluster config at the new incarnation."""
+        return self.agent.cluster.promote(dead_host_id)
 
     def scrub(self) -> dict:
         """Run one on-demand scrub pass on every host and return the

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from .inode import Inode, ROOT_FILE_ID
 from .perms import PermRecord, S_IFDIR, S_IFREG
+from .repl import ReplicaStore, ReplicationLog
 from .service import MAX_TREE_DEPTH, SERVER_OPS
 from .transport import Transport
 from .wire import EPOCHSTALE, Message, MsgType, error, ok, stripe_spans
@@ -94,7 +95,8 @@ class BServer:
     def __init__(self, host_id: int, backing_dir: str, transport: Transport,
                  addr: str, *, version: int = 0, fsync_policy: str = "none",
                  dom_limit: int = 64 * 1024,
-                 scrub_interval: Optional[float] = None) -> None:
+                 scrub_interval: Optional[float] = None,
+                 lease_ttl_s: float = 5.0) -> None:
         self.host_id = host_id
         self.version = version
         self.backing_dir = backing_dir
@@ -102,6 +104,12 @@ class BServer:
         self.addr = addr
         self.fsync_policy = fsync_policy
         self.dom_limit = dom_limit  # Lustre-DoM small-file threshold
+        # every read-lease grant is time-bounded: the client stops serving
+        # cached blocks once the TTL elapses (and silently re-validates),
+        # so an unacked revoke can be WAITED OUT instead of force-broken,
+        # and a promoted standby only has to outwait one TTL before its
+        # first mutation rather than trust the dead incarnation's clients
+        self.lease_ttl_s = lease_ttl_s
         # (hostID, version) -> addr map shared with the clients (the paper's
         # "local configuration file"), injected by BuffetCluster after all
         # servers exist: the home host uses it to orchestrate chunk objects
@@ -137,16 +145,31 @@ class BServer:
         # per-directory caching clients: dir_file_id -> {client_id: callback_addr}
         self._watchers: Dict[int, Dict[str, str]] = {}
         # read leases (data-plane twin of _watchers): file_id ->
-        # {client_id: callback_addr}.  Granted on READ, recalled with a
-        # blocking REVOKE_LEASE fan-out before any data mutation is acked.
-        self._leases: Dict[int, Dict[str, str]] = {}
-        # revokes that completed WITHOUT an ack (client unreachable or too
-        # slow): the mutation proceeded anyway — availability over blocking
-        # every writer on one dead client, the same escape hatch the §3.4
-        # watcher fan-out takes.  Nonzero means a stale serve was possible;
-        # TTL-bounded leases (wait out the grant instead of trusting the
-        # drop) are the strengthening, tracked in ROADMAP.md.
+        # {client_id: (callback_addr, grant_expiry)}.  Granted on READ with
+        # a `lease_ttl_s` bound, recalled with a blocking REVOKE_LEASE
+        # fan-out before any data mutation is acked.
+        self._leases: Dict[int, Dict[str, Tuple[str, float]]] = {}
+        # revokes that completed WITHOUT an ack AND could not be waited
+        # out: with TTL-bounded leases this should stay 0 — an unreachable
+        # holder's grant is simply outwaited (`lease_ttl_waits`), and an
+        # already-expired grant is dropped without an RPC
+        # (`lease_expired_drops`).  Kept as a counter so monitoring (and
+        # the fig11 gate) can prove the stale-serve window stays closed.
         self.lease_breaks_forced = 0
+        self.lease_ttl_waits = 0
+        self.lease_expired_drops = 0
+        # replication: home side ships its commit log to a standby;
+        # standby side holds one ReplicaStore per replicated home and, on
+        # promotion, the new serving instance it booted for the dead host
+        self._repl: Optional[ReplicationLog] = None
+        self._replicas: Dict[int, ReplicaStore] = {}
+        self._promoted: Dict[int, "BServer"] = {}
+        # a just-promoted standby must not apply data mutations until the
+        # dead incarnation's outstanding lease grants have all expired:
+        # monotonic deadline set at promotion, enforced in _revoke_leases
+        self._mutation_barrier = 0.0
+        self.promote_waits = 0
+        self.promoted_records = 0  # log records replayed into this server
         # unlink chunk reaps that could not reach a stripe host:
         # (unreachable_host, dead_file_id) -> the chunk indices that were
         # being reaped.  Drained two ways by the scrubber — the stripe
@@ -199,6 +222,8 @@ class BServer:
                     ctime=time.time())
                 self._dirs[ROOT_FILE_ID] = {}
                 self._persist()
+                self._jmeta(ROOT_FILE_ID)
+                self._journal({"op": "dir", "fid": ROOT_FILE_ID})
         return Inode(self.host_id, self.version, ROOT_FILE_ID)
 
     def _persist(self) -> None:
@@ -206,27 +231,38 @@ class BServer:
             return
         self._persist_now()
 
-    def _persist_now(self) -> None:
-        blob = {
+    @staticmethod
+    def _meta_rec(m: FileMeta) -> Dict:
+        """One FileMeta as its persist-blob dict — the unit the commit log
+        ships (`{"op": "meta", ...}`) and `_persist_now` aggregates."""
+        return {
+            "mode": m.perm.mode, "uid": m.perm.uid, "gid": m.perm.gid,
+            "size": m.size, "is_dir": m.is_dir, "nlink": m.nlink,
+            "atime": m.atime, "mtime": m.mtime, "ctime": m.ctime,
+            "xattrs": m.xattrs,
+            **({"layout": m.layout} if m.layout else {}),
+            **({"epoch": m.epoch} if m.epoch else {}),
+        }
+
+    @staticmethod
+    def _entry_rec(e: DirEntry) -> Dict:
+        return {"ino": e.ino, "perm": e.perm.pack().hex(),
+                **({"layout": e.layout} if e.layout else {})}
+
+    def _meta_blob_locked(self) -> Dict:
+        return {
             "next_file_id": self._next_file_id,
-            "meta": {
-                str(fid): {
-                    "mode": m.perm.mode, "uid": m.perm.uid, "gid": m.perm.gid,
-                    "size": m.size, "is_dir": m.is_dir, "nlink": m.nlink,
-                    "atime": m.atime, "mtime": m.mtime, "ctime": m.ctime,
-                    "xattrs": m.xattrs,
-                    **({"layout": m.layout} if m.layout else {}),
-                    **({"epoch": m.epoch} if m.epoch else {}),
-                } for fid, m in self._meta.items()
-            },
+            "meta": {str(fid): self._meta_rec(m)
+                     for fid, m in self._meta.items()},
             "dirs": {
-                str(fid): {
-                    name: {"ino": e.ino, "perm": e.perm.pack().hex(),
-                           **({"layout": e.layout} if e.layout else {})}
-                    for name, e in entries.items()
-                } for fid, entries in self._dirs.items()
+                str(fid): {name: self._entry_rec(e)
+                           for name, e in entries.items()}
+                for fid, entries in self._dirs.items()
             },
         }
+
+    def _persist_now(self) -> None:
+        blob = self._meta_blob_locked()
         tmp = self._meta_path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(blob, f)
@@ -257,6 +293,8 @@ class BServer:
 
     def shutdown(self) -> None:
         self._scrub_stop.set()
+        if self._repl is not None:
+            self._repl.stop()
         with self._lock:
             self._stopped = True
             self._persist_now()
@@ -289,6 +327,14 @@ class BServer:
         self.transport.shutdown(self.addr)
         self.transport.serve(self.addr, self.handle)
         self._start_scrub_worker()
+        # a rebooted home restarts its shipper and re-seeds the standby
+        # with a fresh snapshot: a kill/shutdown stopped the old shipper
+        # thread for good, and the crash may have rolled local state
+        # behind what was already shipped (fsync_policy="none" reloads an
+        # old meta.json) — the replica must converge to what THIS
+        # incarnation now serves
+        if self._repl is not None:
+            self.start_replication(self._repl.target_host)
 
     def _start_scrub_worker(self) -> None:
         """Periodic scrubber: every `scrub_interval` seconds run one scrub
@@ -323,6 +369,153 @@ class BServer:
         stripe host — drained back to zero as scrub passes reap them."""
         with self._lock:
             return len(self._reap_pending)
+
+    # ------------------------------------------------------------------
+    # commit-log replication (home side) — see repro.core.repl
+    # ------------------------------------------------------------------
+    def start_replication(self, target_host: int) -> None:
+        """Begin shipping this server's commit log to `target_host`
+        asynchronously, seeded with a full snapshot so a standby that
+        joins late (or lost its state) converges from nothing."""
+        if self._repl is not None:
+            self._repl.stop()
+        self._repl = ReplicationLog(self, target_host)
+        self._repl_seed()
+
+    def _journal(self, rec: Dict, payload: bytes = b"") -> None:
+        """Append one commit record to the replication log (no-op while
+        replication is off).  Metadata records MUST be appended inside the
+        same `self._lock` hold as the mutation they describe, and data
+        records only after their bytes are on disk — the snapshot reset in
+        `ReplicationLog.begin_snapshot` relies on both orderings."""
+        r = self._repl
+        if r is not None:
+            r.append(rec, payload)
+
+    def _jmeta(self, fid: int) -> None:
+        """Journal the current FileMeta of `fid` (caller holds _lock)."""
+        m = self._meta.get(fid)
+        if m is not None:
+            self._journal({"op": "meta", "fid": fid, "m": self._meta_rec(m)})
+
+    def _repl_seed(self) -> None:
+        """(Re-)seed the standby: snapshot the metadata atomically with a
+        log reset, then walk the object store and ship every object/chunk
+        as data records.  Concurrent mutations keep journaling normally;
+        records that raced the reset are subsumed by the snapshot (meta)
+        or re-read by this walk (data)."""
+        repl = self._repl
+        if repl is None:
+            return
+        with self._lock:
+            repl.begin_snapshot(self._meta_blob_locked())
+        chunk_sz = 1 << 20
+        for name in sorted(os.listdir(self._objs)):
+            path = os.path.join(self._objs, name)
+            if name.startswith("c"):
+                try:
+                    home_s, fid_s, idx_s = name[1:].split("_")
+                    base = {"op": "cdata", "home": int(home_s, 16),
+                            "fid": int(fid_s, 16), "idx": int(idx_s, 16)}
+                except ValueError:
+                    continue
+            else:
+                try:
+                    base = {"op": "odata", "fid": int(name, 16)}
+                except ValueError:
+                    continue
+            try:
+                with open(path, "rb") as f:
+                    off = 0
+                    while True:
+                        data = f.read(chunk_sz)
+                        if not data and off:
+                            break
+                        self._journal({**base, "off": off}, data)
+                        if len(data) < chunk_sz:
+                            break
+                        off += len(data)
+            except OSError:
+                continue  # reaped mid-walk: its deletion record covers it
+
+    def _repl_send(self, target: int, msg: Message) -> Message:
+        return self._request_host(target, msg)
+
+    def repl_drain(self, timeout: float = 10.0) -> bool:
+        """Block until the standby acked every shipped record (tests and
+        benchmarks use this to make lag assertions deterministic)."""
+        return self._repl.drain(timeout) if self._repl is not None else True
+
+    def repl_stats(self) -> Dict[str, int]:
+        """Replication/failover health for io_stats(): shipping lag plus
+        the lease-TTL and promotion counters."""
+        out: Dict[str, int] = {
+            "replica_homes": len(self._replicas),
+            "lease_ttl_waits": self.lease_ttl_waits,
+            "lease_expired_drops": self.lease_expired_drops,
+            "promote_waits": self.promote_waits,
+            "promoted_records": self.promoted_records,
+        }
+        if self._repl is not None:
+            out.update(self._repl.stats())
+        return out
+
+    @SERVER_OPS.register(MsgType.REPL_APPEND, mutating=True)
+    def _op_repl_append(self, h: Dict, p: bytes) -> Message:
+        """Standby side: apply one batch of a home's commit log.  The
+        payload is consumed synchronously (data records write straight to
+        the staging store), so the zero-copy payload view never outlives
+        the handler."""
+        home = h["home"]
+        with self._lock:
+            store = self._replicas.get(home)
+            if store is None:
+                store = self._replicas[home] = ReplicaStore(
+                    home, os.path.join(self.backing_dir, f"repl_{home:03d}"))
+        return ok(store.apply_batch(h["seq"], h["recs"], p,
+                                    h.get("hver", 0)))
+
+    # ------------------------------------------------------------------
+    # promotion (standby -> new home authority)
+    # ------------------------------------------------------------------
+    def promote_peer(self, home: int) -> "BServer":
+        """Promote this standby's replica of `home` into a live serving
+        instance: materialize the replicated state into a backing dir on
+        THIS host's disk, boot a fresh BServer under the dead host's
+        identity with a bumped incarnation, and fence its first mutation
+        behind one lease TTL (the dead incarnation's clients stop serving
+        their cached blocks at expiry — no revoke can reach the grant
+        table that died with the home).  The caller re-points the cluster
+        config; clients find the new authority via their normal
+        ESTALE/refused retry path."""
+        with self._lock:
+            store = self._replicas.pop(home, None)
+        if store is None:
+            raise KeyError(f"no replica state for host {home}")
+        backing = store.materialize()
+        from .transport import TCPTransport
+        version = store.hver + 1
+        addr = ("127.0.0.1:0" if isinstance(self.transport, TCPTransport)
+                else f"bserver:{home}p{version}")
+        srv = BServer(home, backing, self.transport, addr,
+                      version=version, fsync_policy=self.fsync_policy,
+                      dom_limit=self.dom_limit, lease_ttl_s=self.lease_ttl_s)
+        srv.peers = self.peers
+        srv._mutation_barrier = time.monotonic() + srv.lease_ttl_s
+        srv.promoted_records = store.records_applied
+        with self._lock:
+            self._promoted[home] = srv
+        return srv
+
+    @SERVER_OPS.register(MsgType.PROMOTE, mutating=True)
+    def _op_promote(self, h: Dict, _p: bytes) -> Message:
+        try:
+            srv = self.promote_peer(h["home"])
+        except KeyError as e:
+            return error(errno.ENOENT, str(e))
+        return ok({"home": h["home"], "addr": srv.addr,
+                   "version": srv.version,
+                   "records": srv.promoted_records})
 
     # ------------------------------------------------------------------
     # helpers
@@ -467,25 +660,49 @@ class BServer:
 
         The writer's own lease survives (`exclude_client`): its agent
         patches its cache from the write path, and revoking it would only
-        thrash the cache it is about to update."""
+        thrash the cache it is about to update.
+
+        Every grant is TTL-bounded, which closes the old stale-serve
+        window: an already-expired grant is dropped without an RPC (the
+        client stopped serving it at expiry on its own clock, which runs
+        AHEAD of ours — it stamped the grant before sending the READ); an
+        unacked revoke on a live grant is WAITED OUT to its expiry instead
+        of force-broken.  A freshly promoted standby additionally waits
+        out one full TTL before its first mutation (`_mutation_barrier`):
+        the dead incarnation's grant table died with it, so the only safe
+        assumption is that every one of its grants is still live."""
+        barrier = self._mutation_barrier
+        if barrier:
+            delay = barrier - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+                with self._lock:
+                    self.promote_waits += 1
         with self._lock:
             holders = dict(self._leases.get(file_id, {}))
-        for client_id, cb_addr in holders.items():
+        for client_id, (cb_addr, expires) in holders.items():
             if client_id == exclude_client:
                 continue
-            resp = self.transport.request(
-                cb_addr,
-                Message(MsgType.REVOKE_LEASE, {"ino": self._inode(file_id)}),
-                critical=True)
-            # acked or unreachable: either way the entry is dropped and the
-            # mutation proceeds.  For an ACKED revoke that is airtight; for
-            # an unreachable/timed-out holder it is the availability choice
-            # (don't block every writer on one dead client) — counted so
-            # tests/monitoring can see that the strong guarantee was
-            # forfeited on this file
-            with self._lock:
+            if time.monotonic() >= expires:
+                with self._lock:
+                    self.lease_expired_drops += 1
+            else:
+                resp = self.transport.request(
+                    cb_addr,
+                    Message(MsgType.REVOKE_LEASE,
+                            {"ino": self._inode(file_id)}),
+                    critical=True)
                 if resp.type is not MsgType.OK:
-                    self.lease_breaks_forced += 1
+                    # unreachable/timed-out holder: outwait the grant —
+                    # the client's own expiry check makes its cache go
+                    # cold no later than `expires`, so after this sleep
+                    # the strong guarantee holds WITHOUT the holder's ack
+                    remaining = expires - time.monotonic()
+                    if remaining > 0:
+                        time.sleep(remaining)
+                    with self._lock:
+                        self.lease_ttl_waits += 1
+            with self._lock:
                 tbl = self._leases.get(file_id)
                 if tbl is not None:
                     tbl.pop(client_id, None)
@@ -601,6 +818,10 @@ class BServer:
             if layout is None:
                 open(self._obj_path(fid), "wb").close()
             self._persist()
+            self._jmeta(fid)
+            self._journal({"op": "dentry", "dir": parent, "name": name,
+                           "e": self._entry_rec(pdir[name])})
+            self._journal({"op": "next_fid", "v": self._next_file_id})
             hdr = {"ino": ino, "perm": perm.pack().hex(), "existed": False}
             if layout:
                 hdr["layout"] = layout
@@ -629,6 +850,11 @@ class BServer:
             ino = self._inode(fid)
             pdir[name] = DirEntry(name, ino, perm)
             self._persist()
+            self._jmeta(fid)
+            self._journal({"op": "dir", "fid": fid})
+            self._journal({"op": "dentry", "dir": parent, "name": name,
+                           "e": self._entry_rec(pdir[name])})
+            self._journal({"op": "next_fid", "v": self._next_file_id})
             return ok({"ino": ino, "perm": perm.pack().hex()})
 
         return self._two_phase(parent, [name], check, apply,
@@ -660,7 +886,9 @@ class BServer:
                     os.unlink(self._obj_path(ino.file_id))
                 except FileNotFoundError:
                     pass
+                self._journal({"op": "meta_del", "fid": ino.file_id})
             self._persist()
+            self._journal({"op": "dentry_del", "dir": parent, "name": name})
             return ok()
 
         def post_apply() -> None:
@@ -731,6 +959,9 @@ class BServer:
             self._dirs.pop(fid, None)
             self._meta.pop(fid, None)
             self._persist()
+            self._journal({"op": "dentry_del", "dir": parent, "name": name})
+            self._journal({"op": "dir_del", "fid": fid})
+            self._journal({"op": "meta_del", "fid": fid})
             return ok()
 
         return self._two_phase(parent, [name], check, apply,
@@ -753,6 +984,9 @@ class BServer:
             # client that resolves the new name
             pdir[new] = DirEntry(new, e.ino, e.perm, layout=e.layout)
             self._persist()
+            self._journal({"op": "dentry_del", "dir": parent, "name": old})
+            self._journal({"op": "dentry", "dir": parent, "name": new,
+                           "e": self._entry_rec(pdir[new])})
             return ok()
 
         return self._two_phase(parent, [old, new], check, apply,
@@ -786,7 +1020,10 @@ class BServer:
             if ino.host_id == self.host_id and ino.file_id in self._meta:
                 self._meta[ino.file_id].perm = new_perm
                 self._meta[ino.file_id].ctime = time.time()
+                self._jmeta(ino.file_id)
             self._persist()
+            self._journal({"op": "dentry", "dir": parent, "name": name,
+                           "e": self._entry_rec(pdir[name])})
             return ok({"perm": new_perm.pack().hex()})
 
         # no exclude_client: even the caller's own cache must revalidate
@@ -887,8 +1124,12 @@ class BServer:
                 granted = bool(rec and rec.get("client_id")
                                and rec.get("cb_addr"))
                 if granted:
-                    self._leases.setdefault(fid, {})[rec["client_id"]] = \
-                        rec["cb_addr"]
+                    # grants are TTL-bounded: stamp the expiry NOW, before
+                    # the response leaves — the client clocks its copy from
+                    # before it sent the request, so it always stops
+                    # serving no later than this entry says it may
+                    self._leases.setdefault(fid, {})[rec["client_id"]] = (
+                        rec["cb_addr"], time.monotonic() + self.lease_ttl_s)
             if layout is not None:
                 # striped file: this (home) host is the coherence authority
                 # — size/wseq/lease all come from here in ONE RPC — and it
@@ -925,6 +1166,7 @@ class BServer:
             hdr["epoch"] = epoch
         if granted:
             hdr["lease"] = True
+            hdr["lease_ttl_ms"] = int(self.lease_ttl_s * 1000)
         return ok(hdr, data)
 
     def _read_local_span(self, fid: int, layout: Dict, off: int, end: int
@@ -1016,6 +1258,12 @@ class BServer:
                 m.mtime = time.time()
                 m.wseq += 1
                 size, wseq = m.size, m.wseq
+                # data record AFTER the bytes hit disk, meta record inside
+                # this lock hold — both orderings the snapshot reset needs
+                self._journal({"op": "odata", "fid": fid, "off": off,
+                               **({"trunc": True} if h.get("truncate")
+                                  else {})}, p)
+                self._jmeta(fid)
         return ok({"written": len(p), "size": size, "wseq": wseq})
 
     def _striped_commit(self, h: Dict, fid: int) -> Message:
@@ -1065,6 +1313,9 @@ class BServer:
                 m.mtime = time.time()
                 m.wseq += 1
                 size, wseq, epoch = m.size, m.wseq, m.epoch
+                # the scattered chunk bytes were journaled by each stripe
+                # host's CHUNK_WRITE; the commit only publishes size/mtime
+                self._jmeta(fid)
         return ok({"written": sum(ln for _, ln in commit), "size": size,
                    "wseq": wseq, "epoch": epoch})
 
@@ -1151,6 +1402,10 @@ class BServer:
                 m.mtime = time.time()
                 m.wseq += 1
                 wseq = m.wseq
+                if layout is None:
+                    self._journal({"op": "otrunc", "fid": fid,
+                                   "size": h["size"]})
+                self._jmeta(fid)
                 hdr = {"wseq": wseq}
                 if layout is not None:
                     hdr["epoch"] = m.epoch
@@ -1230,6 +1485,10 @@ class BServer:
             ino = self._inode(fid)
             self._meta[fid].xattrs["buffet.ino"] = str(ino)
             self._persist()
+            self._jmeta(fid)
+            if is_dir:
+                self._journal({"op": "dir", "fid": fid})
+            self._journal({"op": "next_fid", "v": self._next_file_id})
         hdr = {"ino": ino, "perm": perm.pack().hex()}
         if layout:
             hdr["layout"] = layout
@@ -1249,6 +1508,8 @@ class BServer:
             self._dirs[parent][name] = DirEntry(name, h["ino"], perm,
                                                 layout=h.get("layout"))
             self._persist()
+            self._journal({"op": "dentry", "dir": parent, "name": name,
+                           "e": self._entry_rec(self._dirs[parent][name])})
             return ok()
 
         return self._two_phase(parent, [name], check, apply,
@@ -1310,6 +1571,11 @@ class BServer:
                 if self.fsync_policy == "mutating":
                     f.flush()
                     os.fsync(f.fileno())
+        # every host replicates ITS OWN object store: a chunk accepted here
+        # ships to this host's standby, so a promoted replacement can serve
+        # CHUNK_READs for the chunks that died with this disk
+        self._journal({"op": "cdata", "home": home, "fid": fid, "idx": idx,
+                       "off": h["offset"]}, p)
         return ok({"written": len(p)})
 
     @SERVER_OPS.register(MsgType.CHUNK_TRUNC, mutating=True)
@@ -1338,6 +1604,8 @@ class BServer:
                             f.truncate(new_len)
                 except FileNotFoundError:
                     pass
+        self._journal({"op": "ctrunc", "home": home, "fid": fid,
+                       "ops": h["ops"]})
         return ok()
 
     @SERVER_OPS.register(MsgType.CHUNK_UNLINK, mutating=True)
@@ -1355,6 +1623,8 @@ class BServer:
             # dead file_ids are never reused: the epoch latch has nothing
             # left to guard, and keeping it would leak one entry per unlink
             self._chunk_epochs.pop((home, fid), None)
+        self._journal({"op": "cdel", "home": home, "fid": fid,
+                       "indices": h["indices"]})
         # how many chunk files actually existed: lets a scrub retry of a
         # failed reap count true orphans exactly once cluster-wide
         return ok({"reaped": reaped})
@@ -1456,6 +1726,8 @@ class BServer:
                     counts["orphans_reaped"] += 1
                 with self._lock:
                     self._chunk_epochs.pop((home, fid), None)
+                self._journal({"op": "cdel", "home": home, "fid": fid,
+                               "indices": [idx for idx, _ in chunks]})
             else:
                 # any clipping already happened: the home fanned a
                 # CHUNK_TRUNC back at us under its file lock (with an
@@ -1523,6 +1795,7 @@ class BServer:
                     return error(errno.EIO, "scrub clip fan-out failed")
                 with self._lock:
                     self._persist()  # the epoch bump persists like a size
+                    self._jmeta(fid)
         return ok({"dead": False, "chunks_clipped": len(ops),
                    "bytes_clipped": bytes_clipped})
 

@@ -92,6 +92,15 @@ class BuffetCluster:
     # None leaves reconciliation on-demand only (the SCRUB verb /
     # BLib.scrub()) so tests and benchmarks stay deterministic by default
     scrub_interval: Optional[float] = None
+    # home-host failover: when True every server ships its commit log
+    # (metadata mutations + home-resident object writes) to its standby —
+    # replica_host(host_id) — and a dead home can be promote()d there.
+    replication: bool = False
+    # read-lease TTL handed to every server: clients stop serving cached
+    # blocks at expiry, servers wait out unacked revokes instead of
+    # force-breaking, and a promoted standby fences its first mutation
+    # behind one TTL
+    lease_ttl_s: float = 5.0
     servers: Dict[int, BServer] = field(default_factory=dict)
     config: ClusterConfig = field(default_factory=ClusterConfig)
     root_ino: int = 0
@@ -107,7 +116,8 @@ class BuffetCluster:
             addr = "127.0.0.1:0" if tcp else f"bserver:{host_id}"
             srv = BServer(host_id, backing, self.transport, addr,
                           fsync_policy=self.fsync_policy,
-                          scrub_interval=self.scrub_interval)
+                          scrub_interval=self.scrub_interval,
+                          lease_ttl_s=self.lease_ttl_s)
             self.servers[host_id] = srv
             self.config.set(host_id, srv.addr, srv.version)
         # every server holds the same "local configuration file" clients
@@ -115,6 +125,12 @@ class BuffetCluster:
         # when it orchestrates truncate/unlink/fsync over chunk objects
         for srv in self.servers.values():
             srv.peers = self.config
+        # replication starts BEFORE make_root so the log covers the
+        # namespace from genesis (the seed snapshot is empty) — but after
+        # peers are wired, since the shipper routes through them
+        if self.replication and self.n_servers > 1:
+            for host_id, srv in self.servers.items():
+                srv.start_replication(self.replica_host(host_id))
         self.root_ino = self.servers[0].make_root().pack()
 
     # --- placement -----------------------------------------------------
@@ -161,6 +177,32 @@ class BuffetCluster:
         srv = self.servers[host_id]
         srv.restart(crash=crash)
         self.config.bump_version(host_id, srv.version)
+        return srv.version
+
+    def promote(self, dead_host_id: int,
+                standby_id: Optional[int] = None) -> int:
+        """Promote the standby's replica of a dead home into the new
+        serving authority for that host id.  The standby materializes its
+        replica, boots a fresh BServer under the dead identity with a
+        bumped incarnation (fenced behind one lease TTL for its first
+        mutation), and this method re-points the cluster config — exactly
+        the out-of-band push an admin's failover runbook would do.
+        Clients recover through their ordinary ESTALE/refused retry path.
+        Returns the promoted incarnation's version."""
+        if standby_id is None:
+            standby_id = self.replica_host(dead_host_id)
+        standby = self.servers[standby_id]
+        srv = standby.promote_peer(dead_host_id)
+        self.servers[dead_host_id] = srv
+        self.config.set(dead_host_id, srv.addr, srv.version)
+        # the promoted instance lives on the standby's machine, so its own
+        # commit log ships one host further along the ring — never to the
+        # machine it already lives on
+        if self.replication and self.n_servers > 2:
+            target = self.replica_host(dead_host_id)
+            if target == standby_id:
+                target = self.replica_host(dead_host_id, 2)
+            srv.start_replication(target)
         return srv.version
 
     def ping(self, host_id: int) -> Dict:

@@ -71,6 +71,15 @@ class Transport:
     def shutdown(self, addr: Addr) -> None:
         raise NotImplementedError
 
+    def wrap_handler(self, addr: Addr,
+                     wrap: Callable[[Handler], Handler]) -> Callable[[], None]:
+        """Fault-injection hook: replace the handler serving `addr` with
+        ``wrap(original)`` and return a zero-arg restore.  Implemented by
+        every transport that can serve, so delay/partition injectors work
+        identically over in-proc and TCP clusters.  Restoring after the
+        address was shut down (or re-served) is a safe no-op."""
+        raise NotImplementedError
+
 
 class _WorkerPool:
     """Persistent bounded worker pool for `InProcTransport.request_many`.
@@ -166,6 +175,20 @@ class InProcTransport(Transport):
         with self._lock:
             self._handlers.pop(addr, None)
             self._svc_locks.pop(addr, None)
+
+    def wrap_handler(self, addr: Addr,
+                     wrap: Callable[[Handler], Handler]) -> Callable[[], None]:
+        with self._lock:
+            orig = self._handlers.get(addr)
+            if orig is None:
+                raise KeyError(f"no handler serving {addr!r}")
+            self._handlers[addr] = wrap(orig)
+
+        def restore() -> None:
+            with self._lock:
+                if addr in self._handlers:  # not shut down meanwhile
+                    self._handlers[addr] = orig
+        return restore
 
     def request(self, addr: Addr, msg: Message, *, critical: bool = True,
                 stats: Optional[RpcStats] = None) -> Message:
@@ -403,11 +426,12 @@ class _PipelinedConn:
     echoed in the response header — so multiple outstanding requests share
     one connection instead of one connection per (thread, server)."""
 
-    def __init__(self, addr: Addr, on_dead: Callable[["_PipelinedConn"], None]
-                 ) -> None:
+    def __init__(self, addr: Addr, on_dead: Callable[["_PipelinedConn"], None],
+                 connect_timeout_s: float = 10.0) -> None:
         host, _, port = addr.partition(":")
         self.addr = addr
-        self.sock = socket.create_connection((host, int(port)), timeout=10.0)
+        self.sock = socket.create_connection((host, int(port)),
+                                             timeout=connect_timeout_s)
         self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self.sock.settimeout(None)  # reader blocks; waiters carry timeouts
         self.send_lock = threading.Lock()
@@ -476,7 +500,21 @@ class TCPTransport(Transport):
 
     REQUEST_TIMEOUT_S = 15.0
 
-    def __init__(self) -> None:
+    def __init__(self, *, request_timeout_s: Optional[float] = None,
+                 connect_timeout_s: float = 10.0,
+                 connect_retries: int = 1,
+                 connect_backoff_s: float = 0.05) -> None:
+        # per-instance timeout (class attr kept as the default so existing
+        # subclass/monkeypatch call sites keep working); connect failures
+        # are retried with exponential backoff — a server restarting on
+        # the same port refuses connections for a moment, which must read
+        # as "slow network", not "host gone"
+        self.request_timeout_s = (self.REQUEST_TIMEOUT_S
+                                  if request_timeout_s is None
+                                  else request_timeout_s)
+        self.connect_timeout_s = connect_timeout_s
+        self.connect_retries = max(0, connect_retries)
+        self.connect_backoff_s = connect_backoff_s
         self._servers: Dict[Addr, _TCPServer] = {}
         self._conns: Dict[Addr, _PipelinedConn] = {}
         self._rids = itertools.count(1)
@@ -491,6 +529,22 @@ class TCPTransport(Transport):
             self._servers[real] = srv
         threading.Thread(target=srv.serve_forever, daemon=True).start()
         return real
+
+    def wrap_handler(self, addr: Addr,
+                     wrap: Callable[[Handler], Handler]) -> Callable[[], None]:
+        with self._lock:
+            srv = self._servers.get(addr)
+        if srv is None:
+            raise KeyError(f"no server bound at {addr!r}")
+        orig = srv.buffet_handler  # type: ignore[attr-defined]
+        srv.buffet_handler = wrap(orig)  # type: ignore[attr-defined]
+
+        def restore() -> None:
+            with self._lock:
+                cur = self._servers.get(addr)
+            if cur is srv:  # not shut down / re-served meanwhile
+                srv.buffet_handler = orig  # type: ignore[attr-defined]
+        return restore
 
     def shutdown(self, addr: Addr) -> None:
         with self._lock:
@@ -509,7 +563,7 @@ class TCPTransport(Transport):
             conn = self._conns.get(addr)
             if conn is not None and conn.dead is None:
                 return conn
-        conn = _PipelinedConn(addr, self._forget)
+        conn = _PipelinedConn(addr, self._forget, self.connect_timeout_s)
         loser = None
         with self._lock:
             cur = self._conns.get(addr)
@@ -523,11 +577,25 @@ class TCPTransport(Transport):
             loser._fail("superseded")
         return conn
 
+    def _connect(self, addr: Addr) -> Optional[_PipelinedConn]:
+        """Connect with bounded retry: a refused connect can be a server
+        mid-restart on the same port, worth a brief backoff before the
+        caller concludes the host is gone."""
+        delay = self.connect_backoff_s
+        for attempt in range(self.connect_retries + 1):
+            try:
+                return self._conn(addr)
+            except (OSError, ConnectionError):
+                if attempt == self.connect_retries:
+                    return None
+                time.sleep(delay)
+                delay *= 2
+        return None
+
     def _submit(self, addr: Addr, msg: Message):
         """Returns (conn, rid, waiter), or None if the server is gone."""
-        try:
-            conn = self._conn(addr)
-        except (OSError, ConnectionError):
+        conn = self._connect(addr)
+        if conn is None:
             return None
         rid = next(self._rids)
         waiter = conn.submit(rid, msg)
@@ -544,7 +612,7 @@ class TCPTransport(Transport):
         # watcher acks): scale the deadline with the sub-op count so a big
         # legitimate batch is not reported failed while the server applies it
         n_sub = msg.header.get("n", 1) if msg.type is MsgType.BATCH else 1
-        timeout_s = self.REQUEST_TIMEOUT_S + 0.05 * (n_sub - 1)
+        timeout_s = self.request_timeout_s + 0.05 * (n_sub - 1)
         if not waiter.event.wait(timeout_s):
             # abandon the waiter so a late response doesn't leak an entry;
             # the server is alive-but-slow, which is not "unreachable"

@@ -98,6 +98,17 @@ class MsgType(IntEnum):
     SCRUB_CLIP = 28     # server-to-server layout query from a scrubbing
                         # stripe host to a file's home host: "I hold these
                         # chunks at these lengths — dead, or clip to what?"
+    # --- replication / failover (home-host standby, PR 7) ---
+    REPL_APPEND = 29    # home -> standby: a seq-numbered batch of commit-log
+                        # records (metadata mutations + home-resident object
+                        # writes); the standby applies them in order and acks
+                        # the highest contiguous sequence it holds.  Shipped
+                        # asynchronously off the critical path; the ack
+                        # drives the home's bounded-lag accounting.
+    PROMOTE = 30        # ask a standby to promote its replica of a dead
+                        # home: replay the received log into a fresh serving
+                        # instance, bump the incarnation, return the new
+                        # (addr, version) so the cluster config can re-point
     # --- server -> client (callback channel) ---
     INVALIDATE = 32     # server asks client to invalidate cached tree nodes
     REVOKE_LEASE = 33   # server recalls a read lease before applying a data
@@ -148,6 +159,13 @@ _SLOT_DEFS: Tuple[Tuple[str, str], ...] = (
                         #     RECORD (a dict) rides the extension blob
     ("truncate", "B"),  # 15: bool
     ("inline", "B"),    # 16: bool (Lustre-DoM inline data marker)
+    ("lease_ttl_ms", "I"),  # 17: TTL of a granted read lease, milliseconds.
+                        #     Appended after the v2 freeze (append-only is
+                        #     wire-compatible): a grant response carries it
+                        #     next to the `lease` flag, the client stops
+                        #     serving cached blocks once it elapses, and the
+                        #     server may wait it out instead of force-
+                        #     breaking an unacked revoke.
 )
 _SLOT_INDEX = {name: i for i, (name, _) in enumerate(_SLOT_DEFS)}
 _BOOL_SLOTS = frozenset(n for n, f in _SLOT_DEFS if f == "B")

@@ -1,0 +1,536 @@
+"""Home-host failover: commit-log replication, standby promotion, TTL-bounded
+read leases, transport-generic fault injection, and client retry/redirect.
+
+Covers the three legs of the failover design:
+
+  * replication — the home's commit log converges on the standby with zero
+    lag after a drain, survives standby amnesia via snapshot resync, and
+    retries through partitions;
+  * promotion — a promoted standby serves the dead home's namespace AND
+    data (whole-file objects and home-resident chunks), fences its first
+    mutation behind one lease TTL, and clients bridge the outage through
+    capped-backoff retries plus the config redirect;
+  * TTL leases — clients stop serving cached blocks at expiry on their own
+    (earlier) clock, servers drop expired grants RPC-free and wait out
+    unacked revokes instead of force-breaking, so `lease_breaks_forced`
+    stays zero everywhere.
+"""
+
+import errno
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    BAgent,
+    BLib,
+    BuffetCluster,
+    Inode,
+    Message,
+    MsgType,
+    TCPTransport,
+)
+from repro.core.failure import delayed, partitioned, slow_server
+
+TTL = 0.5  # short enough that wait-out tests stay fast, long enough to race
+
+
+@pytest.fixture()
+def rcluster(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4,
+                      replication=True, lease_ttl_s=TTL)
+    yield c
+    c.shutdown()
+
+
+@pytest.fixture()
+def scluster(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4, replication=True,
+                      lease_ttl_s=TTL, stripe_count=4, stripe_size=64 * 1024)
+    yield c
+    c.shutdown()
+
+
+def _home(agent: BAgent, path: str) -> int:
+    node, _ = agent._walk(path)
+    return Inode.unpack(node.ino).host_id
+
+
+def _pattern(n: int) -> bytes:
+    return bytes(i % 251 for i in range(n))
+
+
+def _drain_all(cluster: BuffetCluster) -> None:
+    for srv in cluster.servers.values():
+        assert srv.repl_drain(), f"host {srv.host_id} replication lag stuck"
+
+
+# ---------------------------------------------------------------------------
+# replication
+# ---------------------------------------------------------------------------
+
+def test_replication_converges_with_zero_lag(rcluster):
+    a = BAgent(rcluster)
+    lib = BLib(a)
+    lib.makedirs("/r/sub")
+    for i in range(8):
+        lib.write_file(f"/r/sub/f{i}", b"x" * (100 + i))
+    lib.chmod("/r/sub/f0", 0o600)
+    a.drain()
+    _drain_all(rcluster)
+    for hid, srv in rcluster.servers.items():
+        st = srv.repl_stats()
+        assert st["repl_lag"] == 0, (hid, st)
+        assert st["repl_ship_errors"] == 0
+    # every host's standby holds a live replica of it
+    total_replicas = sum(len(s._replicas) for s in rcluster.servers.values())
+    assert total_replicas == rcluster.n_servers
+    home = _home(a, "/r/sub/f0")
+    standby = rcluster.servers[rcluster.replica_host(home)]
+    store = standby._replicas[home]
+    assert store.records_applied > 0
+    # the replica's metadata names the file with the right size
+    fids = {m.get("size") for m in store.meta.values()}
+    assert 100 in fids
+    a.shutdown()
+
+
+def test_standby_amnesia_triggers_snapshot_resync(rcluster):
+    a = BAgent(rcluster)
+    lib = BLib(a)
+    lib.makedirs("/rs")
+    lib.write_file("/rs/f", b"before")
+    a.drain()
+    _drain_all(rcluster)
+    home = _home(a, "/rs/f")
+    standby = rcluster.servers[rcluster.replica_host(home)]
+    # simulate a standby crash-restart that lost its in-memory replica
+    standby._replicas.clear()
+    lib.write_file("/rs/g", b"after")
+    a.drain()
+    assert rcluster.servers[home].repl_drain()
+    st = rcluster.servers[home].repl_stats()
+    assert st["repl_resyncs"] >= 1
+    store = standby._replicas[home]
+    sizes = {m.get("size") for m in store.meta.values()}
+    assert 6 in sizes and 5 in sizes  # both files made it across the resync
+    a.shutdown()
+
+
+def test_replication_rides_out_standby_partition(rcluster):
+    a = BAgent(rcluster)
+    lib = BLib(a)
+    lib.makedirs("/rp")
+    lib.write_file("/rp/f", b"seed")
+    a.drain()
+    _drain_all(rcluster)
+    home = _home(a, "/rp/f")
+    standby_id = rcluster.replica_host(home)
+    with partitioned(rcluster.transport, rcluster.config.addr(standby_id)):
+        lib.write_file("/rp/g", b"during-partition")
+        a.drain()
+        deadline = time.monotonic() + 5
+        while (rcluster.servers[home].repl_stats()["repl_ship_errors"] == 0
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        assert rcluster.servers[home].repl_stats()["repl_ship_errors"] >= 1
+    # healed: the shipper converges on its own
+    assert rcluster.servers[home].repl_drain()
+    assert rcluster.servers[home].repl_stats()["repl_lag"] == 0
+    a.shutdown()
+
+
+def test_replication_survives_crash_restart_cycle(rcluster):
+    """kill_server stops the shipper thread for good; restart must boot a
+    FRESH shipper (not just re-seed the dead one), or every mutation after
+    the reboot silently never replicates and a later promotion serves a
+    stale replica."""
+    a = BAgent(rcluster)
+    lib = BLib(a)
+    lib.makedirs("/cr")
+    lib.write_file("/cr/before", b"pre-reboot")
+    _drain_all(rcluster)
+    home = _home(a, "/cr/before")
+    rcluster.kill_server(home)
+    rcluster.restart_server(home)
+    # same path => same home: this mutation lands on the rebooted host
+    lib.write_file("/cr/before", b"post-reboot")
+    a.drain()
+    _drain_all(rcluster)  # hangs at the 10s drain timeout if the bug is back
+    rcluster.kill_server(home)
+    rcluster.promote(home)
+    b = BAgent(rcluster)
+    blib = BLib(b)
+    assert blib.read_file("/cr/before") == b"post-reboot"
+    a.shutdown()
+    b.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# promotion
+# ---------------------------------------------------------------------------
+
+def test_promote_preserves_namespace_perms_and_data(rcluster):
+    a = BAgent(rcluster)
+    lib = BLib(a)
+    lib.makedirs("/p/deep")
+    blobs = {f"/p/deep/f{i}": _pattern(300 + 17 * i) for i in range(6)}
+    for path, blob in blobs.items():
+        lib.write_file(path, blob)
+    lib.chmod("/p/deep/f0", 0o640)
+    a.drain()
+    _drain_all(rcluster)
+    home = _home(a, "/p/deep/f0")
+    old_ver = rcluster.config.version(home)
+    rcluster.kill_server(home)
+    new_ver = rcluster.promote(home)
+    assert new_ver > old_ver
+    # a FRESH agent (empty caches) sees the full namespace through the
+    # promoted authority
+    b = BAgent(rcluster)
+    lib_b = BLib(b)
+    assert sorted(lib_b.listdir("/p/deep")) == sorted(
+        p.rsplit("/", 1)[1] for p in blobs)
+    for path, blob in blobs.items():
+        assert lib_b.read_file(path) == blob, path
+    assert lib_b.stat("/p/deep/f0")["mode"] & 0o777 == 0o640
+    # the surviving agent recovers through its ESTALE/redirect path too
+    for path, blob in blobs.items():
+        assert lib.read_file(path) == blob, path
+    a.shutdown()
+    b.shutdown()
+
+
+def test_promote_preserves_striped_data(scluster):
+    a = BAgent(scluster)
+    lib = BLib(a)
+    lib.makedirs("/s")
+    blob = _pattern(300 * 1024)  # ~5 stripes of 64k
+    lib.write_file("/s/big", blob)
+    a.drain()
+    _drain_all(scluster)
+    home = _home(a, "/s/big")
+    scluster.kill_server(home)
+    scluster.promote(home)
+    b = BAgent(scluster)
+    assert BLib(b).read_file("/s/big") == blob
+    a.shutdown()
+    b.shutdown()
+
+
+def test_promoted_server_serves_foreign_chunks(scluster):
+    """A host killed mid-cluster also held CHUNK objects for files homed
+    ELSEWHERE; its standby replicated its whole object store, so striped
+    reads of those files must survive its promotion too."""
+    a = BAgent(scluster)
+    lib = BLib(a)
+    lib.makedirs("/fc")
+    blobs = {f"/fc/f{i}": _pattern(260 * 1024 + i) for i in range(6)}
+    for path, blob in blobs.items():
+        lib.write_file(path, blob)
+    a.drain()
+    _drain_all(scluster)
+    # kill a host that is a NON-home stripe host for at least one file
+    victims = {_home(a, p) for p in blobs}
+    victim = victims.pop()
+    scluster.kill_server(victim)
+    scluster.promote(victim)
+    b = BAgent(scluster)
+    lib_b = BLib(b)
+    for path, blob in blobs.items():
+        assert lib_b.read_file(path) == blob, path
+    a.shutdown()
+    b.shutdown()
+
+
+def test_client_bridges_outage_with_backoff_and_redirect(rcluster):
+    a = BAgent(rcluster)
+    lib = BLib(a)
+    lib.makedirs("/o")
+    lib.write_file("/o/f", b"bridge me")
+    a.drain()
+    _drain_all(rcluster)
+    home = _home(a, "/o/f")
+    rcluster.kill_server(home)
+    t = threading.Thread(
+        target=lambda: (time.sleep(0.15), rcluster.promote(home)))
+    t.start()
+    data = lib.read_file("/o/f")  # lands mid-outage, must retry through it
+    t.join()
+    assert data == b"bridge me"
+    st = lib.io_stats()
+    assert st["failover_retries"] >= 1
+    assert st["failover_redirects"] >= 1
+    a.shutdown()
+
+
+def test_dead_host_without_promotion_still_fails(rcluster):
+    a = BAgent(rcluster)
+    lib = BLib(a)
+    lib.makedirs("/dd")
+    lib.write_file("/dd/f", b"doomed")
+    a.drain()
+    home = _home(a, "/dd/f")
+    rcluster.kill_server(home)
+    t0 = time.monotonic()
+    with pytest.raises(OSError) as ei:
+        lib.read_file("/dd/f")
+    elapsed = time.monotonic() - t0
+    assert ei.value.errno == errno.ENOTCONN
+    assert elapsed < 5.0  # capped backoff, not forever
+    a.shutdown()
+
+
+def test_promoted_standby_fences_first_mutation(rcluster):
+    a = BAgent(rcluster, read_cache=True)
+    lib = BLib(a)
+    lib.makedirs("/fence")
+    lib.write_file("/fence/f", b"leased")
+    a.drain()
+    assert lib.read_file("/fence/f") == b"leased"  # takes a lease
+    _drain_all(rcluster)
+    home = _home(a, "/fence/f")
+    rcluster.kill_server(home)
+    rcluster.promote(home)
+    srv = rcluster.servers[home]
+    # first mutation: the promoted incarnation cannot know which grants the
+    # dead one handed out, so it waits out one full TTL before mutating
+    t0 = time.monotonic()
+    lib.write_file("/fence/f", b"fenced write")
+    first = time.monotonic() - t0
+    assert srv.promote_waits == 1
+    assert first >= TTL * 0.5, first
+    # past the barrier: mutations run unfenced
+    t0 = time.monotonic()
+    lib.write_file("/fence/f", b"second write")
+    assert time.monotonic() - t0 < TTL * 0.5
+    assert srv.promote_waits == 1
+    assert lib.read_file("/fence/f") == b"second write"
+    assert srv.lease_breaks_forced == 0
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# TTL-bounded leases
+# ---------------------------------------------------------------------------
+
+def test_lease_expires_client_side(rcluster):
+    a = BAgent(rcluster, read_cache=True)
+    lib = BLib(a)
+    lib.makedirs("/ttl")
+    lib.write_file("/ttl/f", b"cached")
+    a.drain()
+    assert lib.read_file("/ttl/f") == b"cached"
+    warm0 = lib.io_stats()["critical_path"]
+    assert lib.read_file("/ttl/f") == b"cached"
+    assert lib.io_stats()["critical_path"] == warm0  # warm: zero RPCs
+    time.sleep(TTL + 0.1)
+    assert lib.read_file("/ttl/f") == b"cached"  # silently re-validated
+    st = lib.io_stats()
+    assert st["critical_path"] > warm0  # the re-validation RPC'd
+    assert lib.cache_stats()["lease_expiries"] >= 1
+    # and the fresh grant serves warm again
+    warm1 = lib.io_stats()["critical_path"]
+    assert lib.read_file("/ttl/f") == b"cached"
+    assert lib.io_stats()["critical_path"] == warm1
+    a.shutdown()
+
+
+def test_expired_grant_dropped_without_revoke_rpc(rcluster):
+    a = BAgent(rcluster, read_cache=True)
+    b = BAgent(rcluster)
+    lib_a, lib_b = BLib(a), BLib(b)
+    lib_a.makedirs("/ex")
+    lib_a.write_file("/ex/f", b"old")
+    a.drain()
+    assert lib_a.read_file("/ex/f") == b"old"  # A holds a grant
+    home = _home(a, "/ex/f")
+    srv = rcluster.servers[home]
+    time.sleep(TTL + 0.1)  # both clocks past expiry
+    t0 = time.monotonic()
+    lib_b.write_file("/ex/f", b"new")
+    wrote = time.monotonic() - t0
+    assert srv.lease_expired_drops >= 1  # dropped RPC-free
+    assert srv.lease_breaks_forced == 0
+    assert a._cache.revocations == 0    # no REVOKE ever reached A
+    assert wrote < TTL * 0.5            # and nobody waited a TTL out
+    assert lib_a.read_file("/ex/f") == b"new"
+    a.shutdown()
+    b.shutdown()
+
+
+def test_unacked_revoke_waited_out_not_broken(rcluster):
+    a = BAgent(rcluster, read_cache=True)
+    b = BAgent(rcluster)
+    lib_a, lib_b = BLib(a), BLib(b)
+    lib_a.makedirs("/wo")
+    lib_a.write_file("/wo/f", b"stale soon")
+    a.drain()
+    assert lib_a.read_file("/wo/f") == b"stale soon"  # grant at ~t0
+    home = _home(a, "/wo/f")
+    srv = rcluster.servers[home]
+    with partitioned(rcluster.transport, a.cb_addr):
+        # A is unreachable for callbacks: B's write cannot get the revoke
+        # acked and must wait out the remainder of A's grant instead of
+        # force-breaking it
+        t0 = time.monotonic()
+        lib_b.write_file("/wo/f", b"the new data")
+        waited = time.monotonic() - t0
+    assert srv.lease_ttl_waits >= 1
+    assert srv.lease_breaks_forced == 0
+    assert waited >= 0.1, waited  # genuinely outwaited part of the TTL
+    # A's own clock expired FIRST (it stamped t0 before the READ left), so
+    # the moment B's write returned, A was already refusing its cache
+    assert lib_a.read_file("/wo/f") == b"the new data"
+    assert a._cache.lease_expiries >= 1
+    a.shutdown()
+    b.shutdown()
+
+
+def test_expiry_vs_fill_race_never_installs_dead_grant(rcluster):
+    """A fill computed from a pre-expiry t0 that lands after the deadline
+    installs an already-expired grant — serve() must refuse it rather than
+    treat the install time as a fresh clock."""
+    a = BAgent(rcluster, read_cache=True)
+    lib = BLib(a)
+    lib.makedirs("/race")
+    lib.write_file("/race/f", b"r" * 64)
+    a.drain()
+    home = _home(a, "/race/f")
+    with slow_server(rcluster, home, extra_delay_s=TTL + 0.1):
+        # the READ response arrives after the grant it carries has expired
+        assert lib.read_file("/race/f") == b"r" * 64
+    key = (home, Inode.unpack(a._walk("/race/f")[0].ino).file_id)
+    assert a._cache.serve(key, 0, 64, rcluster.config.version(home)) is None
+    assert a._cache.lease_expiries >= 1
+    a.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# injectors and transport knobs over TCP
+# ---------------------------------------------------------------------------
+
+def test_injectors_are_transport_generic_over_tcp(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=2,
+                      transport=TCPTransport(), replication=True,
+                      lease_ttl_s=TTL)
+    try:
+        a = BAgent(c)
+        a.failover_retry_max = 2  # keep the dead-host probe fast
+        lib = BLib(a)
+        lib.makedirs("/t")
+        lib.write_file("/t/f", b"tcp bytes")
+        a.drain()
+        home = _home(a, "/t/f")
+        with slow_server(c, home, extra_delay_s=0.2):
+            t0 = time.monotonic()
+            assert lib.read_file("/t/f") == b"tcp bytes"
+            assert time.monotonic() - t0 >= 0.2
+        with partitioned(c.transport, c.config.addr(home)):
+            with pytest.raises(OSError) as ei:
+                lib.read_file("/t/f")
+            assert ei.value.errno == errno.ENOTCONN
+        assert lib.read_file("/t/f") == b"tcp bytes"  # healed
+        a.shutdown()
+    finally:
+        c.shutdown()
+
+
+def test_tcp_request_timeout_is_configurable(tmp_path):
+    tr = TCPTransport(request_timeout_s=0.3)
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=1, transport=tr)
+    try:
+        addr = c.config.addr(0)
+        with delayed(tr, addr, extra_delay_s=2.0):
+            t0 = time.monotonic()
+            resp = tr.request(addr, Message(MsgType.PING))
+            elapsed = time.monotonic() - t0
+        assert resp.type is MsgType.ERROR
+        assert resp.header["errno"] == errno.ETIMEDOUT
+        assert elapsed < 1.5
+        # the connection survives the timeout; later requests still work
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            if tr.request(addr, Message(MsgType.PING)).type is MsgType.OK:
+                break
+            time.sleep(0.05)
+        else:
+            pytest.fail("server never answered after the injected delay")
+    finally:
+        c.shutdown()
+
+
+def test_tcp_failover_kill_promote(tmp_path):
+    """Full failover over real sockets: the promoted standby binds a fresh
+    port and clients follow the config redirect there."""
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=3,
+                      transport=TCPTransport(), replication=True,
+                      lease_ttl_s=TTL)
+    try:
+        a = BAgent(c)
+        lib = BLib(a)
+        lib.makedirs("/tf")
+        lib.write_file("/tf/f", b"over tcp")
+        a.drain()
+        _drain_all(c)
+        home = _home(a, "/tf/f")
+        old_addr = c.config.addr(home)
+        c.kill_server(home)
+        c.promote(home)
+        assert c.config.addr(home) != old_addr
+        assert lib.read_file("/tf/f") == b"over tcp"
+        lib.write_file("/tf/f", b"post-promote")  # rides the TTL fence
+        assert lib.read_file("/tf/f") == b"post-promote"
+        a.shutdown()
+    finally:
+        c.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# property test: kill/promote mixed into a striped workload
+# ---------------------------------------------------------------------------
+
+def test_property_mixed_workload_survives_promotions(tmp_path):
+    rng = random.Random(1138)
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4, replication=True,
+                      lease_ttl_s=0.2, stripe_count=3, stripe_size=8 * 1024)
+    try:
+        a = BAgent(c, read_cache=True)
+        lib = BLib(a)
+        lib.makedirs("/mix")
+        shadow = {}
+        paths = [f"/mix/f{i}" for i in range(6)]
+        for r in range(4):
+            for _ in range(12):
+                p = rng.choice(paths)
+                op = rng.random()
+                if op < 0.40 or p not in shadow:
+                    # fresh write, often crossing stripe boundaries
+                    blob = bytes(rng.getrandbits(8)
+                                 for _ in range(rng.randrange(1, 40 * 1024)))
+                    lib.write_file(p, blob)
+                    shadow[p] = blob
+                elif op < 0.70:
+                    assert lib.read_file(p) == shadow[p], p
+                elif op < 0.90:
+                    # O_TRUNC rewrite shorter: exercises truncate + chunk
+                    # clipping on whatever host currently serves the home
+                    blob = shadow[p][: rng.randrange(0, len(shadow[p]) + 1)]
+                    lib.write_file(p, blob)
+                    shadow[p] = blob
+                else:
+                    lib.unlink(p)
+                    del shadow[p]
+            a.drain()
+            # crash-promote a rotating victim between rounds
+            victim = r % c.n_servers
+            _drain_all(c)
+            c.kill_server(victim)
+            c.promote(victim)
+        for p, blob in shadow.items():
+            assert lib.read_file(p) == blob, p
+        a.shutdown()
+    finally:
+        c.shutdown()
