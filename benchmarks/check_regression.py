@@ -136,6 +136,34 @@ def extract(rows: List[dict]) -> Dict[str, float]:
                 out[key + "/stale_reads"] = r["stale_reads"]
                 out[key + "/revoke_rpcs_to_client"] = (
                     r["revoke_rpcs_to_client"])
+        elif bench == "fig12_perms":
+            # serve-yourself permission gates: warm ACL/group checks and
+            # denials must stay RPC-free (raw zero ceilings), expected
+            # events (granted reads, denials, revoke-driven denials) are
+            # inverted into DEFICITS so a grant that stops admitting — or
+            # a revoke that stops denying — fails the ceiling-only gate
+            mode = r.get("mode")
+            key = f"fig12/{mode}"
+            out[key + "/lease_breaks_forced"] = r["lease_breaks_forced"]
+            if mode == "warm_grants":
+                out[key + "/warm_crit_rpcs"] = r["warm_crit_rpcs"]
+                out[key + "/warm_group_fetch_rpcs"] = (
+                    r["warm_group_fetch_rpcs"])
+                out[key + "/group_fetch_rpcs"] = r["group_fetch_rpcs"]
+                out[key + "/granted_deficit"] = (
+                    r["granted_expected"] - r["granted_ok"])
+                out[key + "/denied_deficit"] = (
+                    r["denied_expected"] - r["denied"])
+                out[key + "/repl_lag_after"] = r["repl_lag_after"]
+            elif mode == "revoke":
+                out[key + "/stale_allows"] = r["stale_allows"]
+                out[key + "/allowed_deficit"] = (
+                    r["allowed_expected"] - r["allowed_before"])
+                out[key + "/acl_deny_deficit"] = (
+                    r["acl_denies_expected"] - r["denied_after_acl_revoke"])
+                out[key + "/group_deny_deficit"] = (
+                    r["group_denies_expected"]
+                    - r["denied_after_group_revoke"])
     return out
 
 

@@ -23,6 +23,8 @@ Three deterministic scenarios, each gated on RPC/counter arithmetic
 """
 from __future__ import annotations
 
+import argparse
+import json
 import tempfile
 import threading
 import time
@@ -232,3 +234,90 @@ def run(n_files: int = 64, warm_passes: int = 3,
         _failover(n_files, size),
         _ttl_waitout(size),
     ]
+
+
+def check(rows: List[Dict]) -> List[str]:
+    """Acceptance gates over `run()` rows; returns failure strings.
+
+    Shared by the `--check` CLI (the CI fault-smoke lane) and
+    benchmarks.run so the two gate sets can never drift.  Every gate is
+    a counter comparison — never wall-clock.
+    """
+    failures: List[str] = []
+    by_mode = {r.get("mode"): r for r in rows
+               if r.get("bench") == "fig11_failover"}
+    wl = by_mode.get("warm_lease")
+    if wl:
+        if wl["warm_crit_per_read"] > 0.01 or wl["lease_expiries"] > 0:
+            failures.append(
+                f"fig11 warm_lease: {wl['warm_crit_per_read']} crit "
+                f"RPCs/read, {wl['lease_expiries']} expiries (warm reads "
+                f"under an unexpired TTL must stay RPC-free)")
+        if wl["repl_lag_after"] != 0:
+            failures.append(
+                f"fig11 warm_lease: replication lag {wl['repl_lag_after']} "
+                f"after drain (the commit-log shipper stalled)")
+    fo = by_mode.get("failover")
+    if fo:
+        if fo["client_errors"] or fo["data_bad"]:
+            failures.append(
+                f"fig11 failover: {fo['client_errors']} client errors, "
+                f"{fo['data_bad']} corrupt files after promotion (failover "
+                f"must be invisible and lossless)")
+        if fo["failover_redirects"] < 1:
+            failures.append(
+                "fig11 failover: client never followed the promotion "
+                "redirect (the retry/redirect path regressed)")
+        if fo["promote_waits"] < 1:
+            failures.append(
+                "fig11 failover: promoted standby did not fence its first "
+                "mutation behind the lease TTL")
+        if fo["repl_lag_after"] != 0:
+            failures.append(
+                f"fig11 failover: promoted host lag {fo['repl_lag_after']} "
+                f"after drain (re-replication to the next standby broke)")
+    tw = by_mode.get("ttl_waitout")
+    if tw:
+        if tw["lease_ttl_waits"] < 1 or tw["lease_expired_drops"] < 1:
+            failures.append(
+                f"fig11 ttl_waitout: waits={tw['lease_ttl_waits']} "
+                f"expired_drops={tw['lease_expired_drops']} (the server "
+                f"stopped waiting out / dropping TTL-bounded grants)")
+        if tw["stale_reads"]:
+            failures.append(
+                f"fig11 ttl_waitout: {tw['stale_reads']} stale reads "
+                f"(a client served a cached block past its lease)")
+    for mode, r in by_mode.items():
+        if r["lease_breaks_forced"]:
+            failures.append(
+                f"fig11 {mode}: {r['lease_breaks_forced']} forced lease "
+                f"breaks (TTL discipline must keep this at zero)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-files", type=int, default=64)
+    ap.add_argument("--warm-passes", type=int, default=3)
+    ap.add_argument("--out", help="write scenario rows to this JSON file")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless every acceptance gate holds")
+    args = ap.parse_args(argv)
+    rows = run(n_files=args.n_files, warm_passes=args.warm_passes)
+    print(json.dumps(rows, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+            f.write("\n")
+    if args.check:
+        failures = check(rows)
+        for msg in failures:
+            print(f"GATE FAIL: {msg}")
+        if failures:
+            return 1
+        print("fig11 gates: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

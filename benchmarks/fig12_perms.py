@@ -1,0 +1,342 @@
+"""Fig 12: rich serve-yourself permissions — ACL/group grants under leases.
+
+Two deterministic multi-tenant scenarios, gated on RPC/counter
+arithmetic (never wall-clock), pinning the paper's "serve yourself"
+claim after the permission model grows past plain mode bits:
+
+  * warm_grants — N tenants share one project tree at depth 4.  A third
+    of the files are readable through per-user ACL entries, a third
+    through a group entry resolved against the cluster group table, and
+    a third carry no grant at all (mode 0o640, root-owned).  After one
+    cold pass, every warm permission check — allowed AND denied — must
+    cost ZERO critical-path RPCs and ZERO group-table fetches: the ACL
+    rides in the cached dentry, the group table is cached client-side,
+    and a denial is decided locally without ever touching a server.
+    Exactly one group-table fetch per tenant is allowed, on the cold
+    pass.  Replication is ON the whole time, so the gate also pins that
+    ACL and group-table records ship through the commit log without
+    touching the read path.
+  * revoke — grants are withdrawn two ways (SETACL clearing the entry
+    list, SETGROUPS dropping the membership) while every tenant holds
+    warm dentries AND cached data blocks.  Because both verbs
+    invalidate-before-ack (§3.4 two-phase for SETACL, a blocking
+    group-watcher fan-out for SETGROUPS), the very next open() by every
+    tenant must fail EACCES — `stale_allows` counts any read that still
+    succeeds after the revoking verb returned, and must be zero.
+"""
+
+from __future__ import annotations
+
+import argparse
+import errno
+import json
+import tempfile
+from typing import Dict, List
+
+from repro.core import BAgent, BLib, BuffetCluster
+from repro.core.perms import Credentials
+
+# one TTL, long enough that no grant expires mid-scenario: every denial
+# in the revoke scenario must come from the invalidation protocol, never
+# from a lease quietly timing out
+TTL_S = 30.0
+
+TEAM_GID = 500
+UID_BASE = 1001
+DEPTH4 = "/proj/team/src/deep"
+
+
+def _pattern(i: int, size: int) -> bytes:
+    return bytes((i * 11 + j) % 251 for j in range(size))
+
+
+def _sum_srv(cluster: BuffetCluster, attr: str) -> int:
+    return sum(getattr(s, attr) for s in cluster.servers.values())
+
+
+def _tenants(cluster: BuffetCluster, n_users: int) -> List[BLib]:
+    return [
+        BLib(
+            BAgent(
+                cluster,
+                cred=Credentials(uid=UID_BASE + k, gid=100 + k),
+                read_cache=True,
+            )
+        )
+        for k in range(n_users)
+    ]
+
+
+def _read_all(
+    lib: BLib, grants: Dict[str, bytes], denials: List[str], counts: Dict[str, int]
+) -> None:
+    """One full pass by one tenant: every granted file must read back
+    intact, every ungranted file must deny with EACCES — both decided
+    against cached state on a warm pass."""
+    for p, want in grants.items():
+        if lib.read_file(p) == want:
+            counts["granted_ok"] += 1
+    for p in denials:
+        try:
+            lib.read_file(p)
+        except OSError as e:
+            if e.errno == errno.EACCES:
+                counts["denied"] += 1
+
+
+def _warm_grants(n_users: int, n_files: int, warm_passes: int, size: int) -> Dict:
+    with tempfile.TemporaryDirectory() as root:
+        cluster = BuffetCluster(
+            root_dir=root, n_servers=4, replication=True, lease_ttl_s=TTL_S
+        )
+        try:
+            admin = BLib(BAgent(cluster))
+            admin.makedirs(DEPTH4)
+            blobs: Dict[str, bytes] = {}
+            for i in range(n_files):
+                p = f"{DEPTH4}/f{i:03d}"
+                blobs[p] = _pattern(i, size)
+                admin.write_file(p, blobs[p], perm=0o640)
+            paths = sorted(blobs)
+            by_user = [p for i, p in enumerate(paths) if i % 3 == 0]
+            by_group = [p for i, p in enumerate(paths) if i % 3 == 1]
+            ungranted = [p for i, p in enumerate(paths) if i % 3 == 2]
+
+            uids = [UID_BASE + k for k in range(n_users)]
+            for p in by_user:
+                admin.setacl(p, [["u", u, 4, 0] for u in uids])
+            for p in by_group:
+                admin.setacl(p, [["g", TEAM_GID, 4, 0]])
+            for u in uids:
+                admin.setgroups(u, [TEAM_GID])
+
+            tenants = _tenants(cluster, n_users)
+            grants = {p: blobs[p] for p in by_user + by_group}
+            cold = {"granted_ok": 0, "denied": 0}
+            for lib in tenants:
+                lib.warm_tree("/")
+                _read_all(lib, grants, ungranted, cold)
+            cold_crit = sum(
+                t.agent.stats.snapshot()["critical_path"] for t in tenants
+            )
+            cold_fetches = sum(t.agent.perm_check_rpcs for t in tenants)
+
+            for t in tenants:
+                t.agent.stats.reset()
+            warm = {"granted_ok": 0, "denied": 0}
+            for _ in range(warm_passes):
+                for lib in tenants:
+                    _read_all(lib, grants, ungranted, warm)
+            warm_crit = sum(
+                t.agent.stats.snapshot()["critical_path"] for t in tenants
+            )
+            warm_fetches = (
+                sum(t.agent.perm_check_rpcs for t in tenants) - cold_fetches
+            )
+
+            lag = 0
+            for srv in cluster.servers.values():
+                srv.repl_drain()
+                lag += srv.repl_stats().get("repl_lag", 0)
+            return {
+                "bench": "fig12_perms",
+                "mode": "warm_grants",
+                "users": n_users,
+                "n_files": n_files,
+                "depth": 4,
+                "warm_passes": warm_passes,
+                "cold_crit_rpcs": cold_crit,
+                "warm_crit_rpcs": warm_crit,
+                "group_fetch_rpcs": cold_fetches,
+                "group_fetch_expected": n_users,
+                "warm_group_fetch_rpcs": warm_fetches,
+                "granted_ok": cold["granted_ok"] + warm["granted_ok"],
+                "granted_expected": n_users * len(grants) * (1 + warm_passes),
+                "denied": cold["denied"] + warm["denied"],
+                "denied_expected": n_users * len(ungranted) * (1 + warm_passes),
+                "lease_breaks_forced": _sum_srv(cluster, "lease_breaks_forced"),
+                "repl_lag_after": lag,
+            }
+        finally:
+            cluster.shutdown()
+
+
+def _revoke(n_users: int, size: int) -> Dict:
+    with tempfile.TemporaryDirectory() as root:
+        cluster = BuffetCluster(
+            root_dir=root, n_servers=4, replication=True, lease_ttl_s=TTL_S
+        )
+        try:
+            admin = BLib(BAgent(cluster))
+            admin.makedirs("/rv")
+            va, vb = _pattern(1, size), _pattern(2, size)
+            admin.write_file("/rv/by_acl", va, perm=0o640)
+            admin.write_file("/rv/by_group", vb, perm=0o640)
+
+            uids = [UID_BASE + k for k in range(n_users)]
+            admin.setacl("/rv/by_acl", [["u", u, 4, 0] for u in uids])
+            admin.setacl("/rv/by_group", [["g", TEAM_GID, 4, 0]])
+            for u in uids:
+                admin.setgroups(u, [TEAM_GID])
+
+            tenants = _tenants(cluster, n_users)
+            allowed_before = 0
+            for lib in tenants:
+                lib.warm_tree("/")
+                if lib.read_file("/rv/by_acl") == va:
+                    allowed_before += 1
+                if lib.read_file("/rv/by_group") == vb:
+                    allowed_before += 1
+
+            # every tenant now holds a warm dentry (with the granting
+            # ACL) and cached data blocks for both files: the revokes
+            # below must beat all of that state on the very next open
+            stale_allows = 0
+            admin.setacl("/rv/by_acl", None)
+            denied_acl = 0
+            for lib in tenants:
+                try:
+                    lib.read_file("/rv/by_acl")
+                    stale_allows += 1
+                except OSError as e:
+                    if e.errno == errno.EACCES:
+                        denied_acl += 1
+
+            for u in uids:
+                admin.setgroups(u, [])
+            denied_group = 0
+            for lib in tenants:
+                try:
+                    lib.read_file("/rv/by_group")
+                    stale_allows += 1
+                except OSError as e:
+                    if e.errno == errno.EACCES:
+                        denied_group += 1
+            return {
+                "bench": "fig12_perms",
+                "mode": "revoke",
+                "users": n_users,
+                "allowed_before": allowed_before,
+                "allowed_expected": 2 * n_users,
+                "denied_after_acl_revoke": denied_acl,
+                "acl_denies_expected": n_users,
+                "denied_after_group_revoke": denied_group,
+                "group_denies_expected": n_users,
+                "stale_allows": stale_allows,
+                "lease_breaks_forced": _sum_srv(cluster, "lease_breaks_forced"),
+            }
+        finally:
+            cluster.shutdown()
+
+
+def run(
+    n_users: int = 6, n_files: int = 18, warm_passes: int = 3, size: int = 2048
+) -> List[Dict]:
+    return [
+        _warm_grants(n_users, n_files, warm_passes, size),
+        _revoke(n_users, size),
+    ]
+
+
+def check(rows: List[Dict]) -> List[str]:
+    """Acceptance gates over `run()` rows; returns failure strings.
+
+    Shared by the `--check` CLI (the CI fault-smoke lane) and
+    benchmarks.run so the two gate sets can never drift.  Every gate is
+    a counter comparison — never wall-clock."""
+    failures: List[str] = []
+    by_mode = {r.get("mode"): r for r in rows if r.get("bench") == "fig12_perms"}
+    wg = by_mode.get("warm_grants")
+    if wg:
+        if wg["warm_crit_rpcs"] or wg["warm_group_fetch_rpcs"]:
+            failures.append(
+                f"fig12 warm_grants: {wg['warm_crit_rpcs']} critical RPCs, "
+                f"{wg['warm_group_fetch_rpcs']} group fetches across warm "
+                f"passes (every warm ACL/group check must be served from "
+                f"client state)"
+            )
+        if wg["group_fetch_rpcs"] > wg["group_fetch_expected"]:
+            failures.append(
+                f"fig12 warm_grants: {wg['group_fetch_rpcs']} group-table "
+                f"fetches (> {wg['group_fetch_expected']}: more than one "
+                f"cold fetch per tenant)"
+            )
+        if wg["granted_ok"] != wg["granted_expected"]:
+            failures.append(
+                f"fig12 warm_grants: {wg['granted_ok']}/"
+                f"{wg['granted_expected']} granted reads succeeded "
+                f"(an ACL or group grant stopped admitting)"
+            )
+        if wg["denied"] != wg["denied_expected"]:
+            failures.append(
+                f"fig12 warm_grants: {wg['denied']}/{wg['denied_expected']} "
+                f"ungranted opens denied (mode-bit fallback leaked access)"
+            )
+        if wg["repl_lag_after"] != 0:
+            failures.append(
+                f"fig12 warm_grants: replication lag {wg['repl_lag_after']} "
+                f"after drain (ACL/group records stalled the shipper)"
+            )
+    rv = by_mode.get("revoke")
+    if rv:
+        if rv["stale_allows"]:
+            failures.append(
+                f"fig12 revoke: {rv['stale_allows']} reads succeeded after "
+                f"their grant was revoked (invalidate-before-ack broke)"
+            )
+        if rv["allowed_before"] != rv["allowed_expected"]:
+            failures.append(
+                f"fig12 revoke: only {rv['allowed_before']}/"
+                f"{rv['allowed_expected']} pre-revoke reads succeeded"
+            )
+        if rv["denied_after_acl_revoke"] != rv["acl_denies_expected"]:
+            failures.append(
+                f"fig12 revoke: {rv['denied_after_acl_revoke']}/"
+                f"{rv['acl_denies_expected']} tenants denied after SETACL"
+            )
+        if rv["denied_after_group_revoke"] != rv["group_denies_expected"]:
+            failures.append(
+                f"fig12 revoke: {rv['denied_after_group_revoke']}/"
+                f"{rv['group_denies_expected']} tenants denied after SETGROUPS"
+            )
+    for mode, r in by_mode.items():
+        if r["lease_breaks_forced"]:
+            failures.append(
+                f"fig12 {mode}: {r['lease_breaks_forced']} forced lease "
+                f"breaks (TTL discipline must keep this at zero)"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="smaller sweep")
+    ap.add_argument("--out", help="write scenario rows to this JSON file")
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit nonzero unless every acceptance gate holds",
+    )
+    args = ap.parse_args(argv)
+    rows = run(
+        n_users=4 if args.quick else 6,
+        n_files=9 if args.quick else 18,
+        warm_passes=2 if args.quick else 3,
+    )
+    print(json.dumps(rows, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+            f.write("\n")
+    if args.check:
+        failures = check(rows)
+        for msg in failures:
+            print(f"GATE FAIL: {msg}")
+        if failures:
+            return 1
+        print("fig12 gates: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,8 +22,8 @@ def main() -> None:
 
     from benchmarks import (fig3_latency, fig4_concurrency, fig5_batch,
                             fig6_write, fig7_readcache, fig8_stripe,
-                            fig10_mlstack, fig11_failover, invalidation,
-                            rpc_table)
+                            fig10_mlstack, fig11_failover, fig12_perms,
+                            invalidation, rpc_table)
 
     print("name,us_per_call,derived")
     rows = []
@@ -142,6 +142,24 @@ def main() -> None:
                   f"waits={r['lease_ttl_waits']} "
                   f"forced={r['lease_breaks_forced']} "
                   f"stale={r['stale_reads']}", flush=True)
+
+    # Figure 12 (extension): serve-yourself ACL/group grants under leases
+    for r in fig12_perms.run(n_users=4 if args.quick else 6,
+                             n_files=9 if args.quick else 18,
+                             warm_passes=2 if args.quick else 3):
+        rows.append(r)
+        if r["mode"] == "warm_grants":
+            print(f"fig12_warm_grants_u{r['users']}_n{r['n_files']},"
+                  f"{r['warm_crit_rpcs']},"
+                  f"group_fetches={r['group_fetch_rpcs']} "
+                  f"granted={r['granted_ok']}/{r['granted_expected']} "
+                  f"denied={r['denied']}/{r['denied_expected']}", flush=True)
+        else:
+            print(f"fig12_revoke_u{r['users']},{r['stale_allows']},"
+                  f"acl_denies={r['denied_after_acl_revoke']}/"
+                  f"{r['acl_denies_expected']} "
+                  f"group_denies={r['denied_after_group_revoke']}/"
+                  f"{r['group_denies_expected']}", flush=True)
 
     # RPC table (the mechanism itself)
     for r in rpc_table.run():
@@ -288,54 +306,10 @@ def main() -> None:
         failures.append(
             f"fig10: ingest {ing['crit_per_sample']} critical RPCs/sample "
             f"(>1.25: the one-RPC-per-file property regressed)")
-    f11 = {r.get("mode"): r for r in rows
-           if r.get("bench") == "fig11_failover"}
-    wl = f11.get("warm_lease")
-    if wl:
-        if wl["warm_crit_per_read"] > 0.01 or wl["lease_expiries"] > 0:
-            failures.append(
-                f"fig11 warm_lease: {wl['warm_crit_per_read']} crit "
-                f"RPCs/read, {wl['lease_expiries']} expiries (warm reads "
-                f"under an unexpired TTL must stay RPC-free)")
-        if wl["repl_lag_after"] != 0:
-            failures.append(
-                f"fig11 warm_lease: replication lag {wl['repl_lag_after']} "
-                f"after drain (the commit-log shipper stalled)")
-    fo = f11.get("failover")
-    if fo:
-        if fo["client_errors"] or fo["data_bad"]:
-            failures.append(
-                f"fig11 failover: {fo['client_errors']} client errors, "
-                f"{fo['data_bad']} corrupt files after promotion (failover "
-                f"must be invisible and lossless)")
-        if fo["failover_redirects"] < 1:
-            failures.append(
-                "fig11 failover: client never followed the promotion "
-                "redirect (the retry/redirect path regressed)")
-        if fo["promote_waits"] < 1:
-            failures.append(
-                "fig11 failover: promoted standby did not fence its first "
-                "mutation behind the lease TTL")
-        if fo["repl_lag_after"] != 0:
-            failures.append(
-                f"fig11 failover: promoted host lag {fo['repl_lag_after']} "
-                f"after drain (re-replication to the next standby broke)")
-    tw = f11.get("ttl_waitout")
-    if tw:
-        if tw["lease_ttl_waits"] < 1 or tw["lease_expired_drops"] < 1:
-            failures.append(
-                f"fig11 ttl_waitout: waits={tw['lease_ttl_waits']} "
-                f"expired_drops={tw['lease_expired_drops']} (the server "
-                f"stopped waiting out / dropping TTL-bounded grants)")
-        if tw["stale_reads"]:
-            failures.append(
-                f"fig11 ttl_waitout: {tw['stale_reads']} stale reads "
-                f"(a client served a cached block past its lease)")
-    for mode, r in f11.items():
-        if r["lease_breaks_forced"]:
-            failures.append(
-                f"fig11 {mode}: {r['lease_breaks_forced']} forced lease "
-                f"breaks (TTL discipline must keep this at zero)")
+    # fig11/fig12 gate sets live next to their scenarios (shared with the
+    # --check CLIs the CI fault-smoke lane runs) so the two never drift
+    failures += fig11_failover.check(rows)
+    failures += fig12_perms.check(rows)
     if failures:
         for f in failures:
             print(f"VERDICT FAIL: {f}", file=sys.stderr)

@@ -50,7 +50,8 @@ from typing import Dict, List, Optional, Tuple
 from .cluster import BuffetCluster, ClusterConfig
 from .inode import Inode
 from .perms import (Credentials, FSError, O_CREAT, PermRecord, R_OK, W_OK,
-                    X_OK, access_ok, err, flags_to_access, O_TRUNC)
+                    X_OK, access_ok, err, flags_to_access, normalize_groups,
+                    validate_acl, O_TRUNC)
 from .service import MAX_TREE_DEPTH
 from .transport import Transport
 from .wire import (EPOCHSTALE, Message, MsgType, RpcStats,
@@ -104,11 +105,12 @@ class TreeNode:
     """Node of the client-cached partial directory tree."""
 
     __slots__ = ("name", "ino", "perm", "children", "valid", "parent",
-                 "layout")
+                 "layout", "acl")
 
     def __init__(self, name: str, ino: int, perm: PermRecord,
                  parent: Optional["TreeNode"] = None,
-                 layout: Optional[Dict] = None) -> None:
+                 layout: Optional[Dict] = None,
+                 acl: Optional[List] = None) -> None:
         self.name = name
         self.ino = ino
         self.perm = perm
@@ -117,6 +119,9 @@ class TreeNode:
         # 10-byte perm record, it lets the client plan a striped
         # scatter-gather with zero metadata RPCs
         self.layout = layout
+        # per-file ACL from the dentry (None => mode bits alone): the rich
+        # grants are evaluated client-side too, still 0 RPCs warm
+        self.acl = acl
         # None => directory data not fetched (or not a directory)
         self.children: Optional[Dict[str, TreeNode]] = None
         self.valid = True  # False => server invalidated; must REVALIDATE
@@ -580,6 +585,20 @@ class BAgent:
         self.failover_retries = 0    # backoff retries issued
         self.failover_redirects = 0  # retries that switched address
 
+        # client-cached cluster group-membership table (uid -> extra gids),
+        # fetched lazily from the authority host the first time an ACL "g"
+        # entry needs a membership the local cred cannot answer, then served
+        # RPC-free until invalidated.  `_groups_gen` is its invalidation
+        # generation (same pre-RPC snapshot discipline as _inval_gen);
+        # `_groups_gver` the latest table version seen in any response.
+        self._groups_table: Optional[Dict[int, List[int]]] = None
+        self._groups_gen = 0
+        self._groups_gver = 0
+        # critical RPCs issued FROM permission evaluation (group-table
+        # fetches): warm permission checks must keep this flat — the
+        # fig12 "serve yourself" gate
+        self.perm_check_rpcs = 0
+
         # lease-consistent page cache (None => every read RPCs as before)
         self._cache: Optional[_PageCache] = (
             _PageCache(cache_block, cache_budget) if read_cache else None)
@@ -771,6 +790,15 @@ class BAgent:
     # ------------------------------------------------------------------
     def _handle_callback(self, msg: Message) -> Message:
         if msg.type is MsgType.INVALIDATE:
+            if msg.header.get("groups"):
+                # group-table invalidation (blocking SETGROUPS fan-out):
+                # drop the table and bump its generation BEFORE acking, so
+                # once the server applies the change no check here can
+                # evaluate against the withdrawn membership
+                with self._tree_lock:
+                    self._groups_gen += 1
+                    self._groups_table = None
+                return ok()
             dir_ino = msg.header["dir_ino"]
             with self._tree_lock:
                 key = _ino_key(dir_ino)
@@ -831,6 +859,7 @@ class BAgent:
         response was in flight, the data is merged (still useful) but the
         node stays invalid so the next access revalidates."""
         with self._tree_lock:
+            self._note_gver(record.get("gver"))
             node.perm = PermRecord.unpack(bytes.fromhex(record["perm"]))
             old = node.children or {}
             fresh: Dict[str, TreeNode] = {}
@@ -841,16 +870,19 @@ class BAgent:
                     # unseen name, or the name now points at a different
                     # object: start a fresh node
                     child = TreeNode(e["name"], e["ino"], perm, parent=node,
-                                     layout=e.get("layout"))
+                                     layout=e.get("layout"),
+                                     acl=e.get("acl"))
                     self._node_index[_ino_key(child.ino)] = child
                 else:
                     # refresh what the parent's entries carry (ino version,
-                    # perm, layout) but do NOT touch child.valid: that flag
-                    # covers the child's OWN listing, whose invalidations
-                    # arrive separately — re-marking it valid here would
-                    # resurrect a stale child dentry cache (§3.4 violation)
+                    # perm, layout, acl) but do NOT touch child.valid: that
+                    # flag covers the child's OWN listing, whose
+                    # invalidations arrive separately — re-marking it valid
+                    # here would resurrect a stale child dentry cache (§3.4
+                    # violation)
                     child.ino, child.perm = e["ino"], perm
                     child.layout = e.get("layout")
+                    child.acl = e.get("acl")
                 fresh[e["name"]] = child
             for name, old_child in old.items():
                 if fresh.get(name) is not old_child:
@@ -870,6 +902,64 @@ class BAgent:
         assert node.children is not None
         return node.children
 
+    # ------------------------------------------------------------------
+    # rich permission evaluation (ACL + group grants, still client-side)
+    # ------------------------------------------------------------------
+    def _note_gver(self, gver: Optional[int]) -> None:
+        """Track the newest group-table version seen in any response
+        (caller holds _tree_lock).  A newer version than the cached table
+        drops it — the lazy-refetch safety net for revocations whose
+        blocking callback could not reach us (e.g. the table authority
+        failed over and the promoted standby never knew this watcher)."""
+        if gver and gver > self._groups_gver:
+            self._groups_gver = gver
+            if self._groups_table is not None:
+                self._groups_table = None
+                self._groups_gen += 1
+
+    def _group_table(self) -> Dict[int, List[int]]:
+        """The cluster group table, cached under the invalidation-generation
+        discipline: snapshot the generation before the RPC and refuse to
+        cache (retrying instead) if an invalidation crossed the fetch —
+        otherwise a pre-SETGROUPS snapshot could authorize a withdrawn
+        membership after the mutation acked."""
+        authority = Inode.unpack(self.root.ino).host_id
+        while True:
+            with self._tree_lock:
+                if self._groups_table is not None:
+                    return self._groups_table
+                gen = self._groups_gen
+            resp = self._rpc(authority, Message(MsgType.LOOKUP_GROUPS, {
+                "client_id": self.client_id, "cb_addr": self.cb_addr}))
+            self.perm_check_rpcs += 1
+            table = normalize_groups(resp.header.get("groups"))
+            gver = resp.header.get("gver", 0)
+            with self._tree_lock:
+                if self._groups_gen == gen and gver >= self._groups_gver:
+                    self._groups_table = table
+                    self._groups_gver = max(self._groups_gver, gver)
+                    return table
+
+    def _extra_groups(self, acl: List) -> Tuple[int, ...]:
+        """Extra group memberships relevant to evaluating `acl` for this
+        credential.  RPC-free unless the ACL carries a "g" entry the local
+        cred cannot answer AND the table is not cached yet — after that
+        one cold fetch, every check is served from the cached table."""
+        if not any(kind == "g" and not self.cred.in_group(ident)
+                   for kind, ident, _a, _d in acl):
+            return ()
+        return tuple(self._group_table().get(self.cred.uid, ()))
+
+    def _access(self, node: TreeNode, want: int) -> bool:
+        """The paper's client-side check, grown rich: mode bits from the
+        10-byte record plus the dentry's ACL entries plus group-table
+        memberships — all evaluated locally."""
+        acl = node.acl
+        if not acl:
+            return access_ok(node.perm, self.cred, want)
+        return access_ok(node.perm, self.cred, want, acl=acl,
+                         groups=self._extra_groups(acl))
+
     def _walk(self, path: str, *, want_parent: bool = False
               ) -> Tuple[TreeNode, Optional[str]]:
         """Traverse the cached tree, checking X permission on every directory
@@ -882,7 +972,7 @@ class BAgent:
         # root perm comes with the first LOOKUP_DIR; check X on each dir
         stop = len(parts) - 1 if want_parent else len(parts)
         for i in range(stop):
-            if not access_ok(node.perm, self.cred, X_OK):
+            if not self._access(node, X_OK):
                 raise err(errno.EACCES, f"search permission denied: {node.path()}")
             children = self._ensure_children(node)
             child = children.get(parts[i])
@@ -890,7 +980,7 @@ class BAgent:
                 raise err(errno.ENOENT, "/" + "/".join(parts[: i + 1]))
             node = child
         if want_parent:
-            if not access_ok(node.perm, self.cred, X_OK):
+            if not self._access(node, X_OK):
                 raise err(errno.EACCES, f"search permission denied: {node.path()}")
             self._ensure_children(node)
             return node, (parts[-1] if parts else None)
@@ -914,12 +1004,12 @@ class BAgent:
         if node is None:
             if not (flags & O_CREAT):
                 raise err(errno.ENOENT, path)
-            if not access_ok(parent.perm, self.cred, W_OK):
+            if not self._access(parent, W_OK):
                 raise err(errno.EACCES, f"cannot create in {parent.path()}")
             node = self._create(parent, name, mode)
         else:
             want = flags_to_access(flags)
-            if not access_ok(node.perm, self.cred, want):
+            if not self._access(node, want):
                 raise err(errno.EACCES, path)
             if node.perm.is_dir and (want & W_OK):
                 raise err(errno.EISDIR, path)
@@ -951,7 +1041,8 @@ class BAgent:
         perm = PermRecord.unpack(bytes.fromhex(header["perm"]))
         with self._tree_lock:
             node = TreeNode(name, header["ino"], perm, parent=parent,
-                            layout=header.get("layout"))
+                            layout=header.get("layout"),
+                            acl=header.get("acl"))
             self._node_index[_ino_key(node.ino)] = node
             if parent.children is not None:
                 parent.children[name] = node
@@ -1998,13 +2089,13 @@ class BAgent:
 
     def readdir(self, path: str) -> List[str]:
         node, _ = self._walk(path)
-        if not access_ok(node.perm, self.cred, R_OK):
+        if not self._access(node, R_OK):
             raise err(errno.EACCES, path)
         return sorted(self._ensure_children(node))
 
     def mkdir(self, path: str, mode: int = 0o755) -> None:
         parent, name = self._walk(path, want_parent=True)
-        if not access_ok(parent.perm, self.cred, W_OK):
+        if not self._access(parent, W_OK):
             raise err(errno.EACCES, parent.path())
         pino = Inode.unpack(parent.ino)
         target_host = self.cluster.place_dir(path)
@@ -2036,7 +2127,7 @@ class BAgent:
 
     def unlink(self, path: str) -> None:
         parent, name = self._walk(path, want_parent=True)
-        if not access_ok(parent.perm, self.cred, W_OK):
+        if not self._access(parent, W_OK):
             raise err(errno.EACCES, parent.path())
         target = (parent.children or {}).get(name)
         if target is not None:
@@ -2076,9 +2167,43 @@ class BAgent:
         self._rpc(pino.host_id, Message(MsgType.CHOWN, {
             "parent": pino.file_id, "name": name, "uid": uid, "gid": gid}))
 
+    def setacl(self, path: str, acl: Optional[List]) -> None:
+        """Replace a file/dir's ACL ([kind, id, allow, deny] entries; None
+        or [] clears it).  Owner-or-root, like chmod; the server's §3.4
+        two-phase guarantees every cached copy of the old ACL is
+        invalidated before the new one applies."""
+        acl = validate_acl(acl)
+        parent, name = self._walk(path, want_parent=True)
+        node = (parent.children or {}).get(name)
+        if node is not None and self.cred.uid not in (0, node.perm.uid):
+            raise err(errno.EPERM, path)
+        pino = Inode.unpack(parent.ino)
+        self._rpc(pino.host_id, Message(MsgType.SETACL, {
+            "parent": pino.file_id, "name": name, "acl": acl}))
+
+    def getacl(self, path: str) -> Optional[List]:
+        """The ACL as this client's cache sees it (0 RPCs warm — the same
+        dentry data access checks run against)."""
+        node, _ = self._walk(path)
+        return node.acl
+
+    def setgroups(self, uid: int, gids: List[int]) -> None:
+        """Replace `uid`'s extra group memberships in the cluster table
+        (root only, like chown).  Blocking invalidation of every client
+        holding the table happens before the change applies."""
+        if self.cred.uid != 0:
+            raise err(errno.EPERM, f"setgroups uid={uid}")
+        authority = Inode.unpack(self.root.ino).host_id
+        self._rpc(authority, Message(MsgType.SETGROUPS, {
+            "uid": uid, "gids": list(gids)}))
+
+    def groups(self) -> Dict[int, List[int]]:
+        """The cluster group table (cached copy; fetches once if cold)."""
+        return dict(self._group_table())
+
     def rename(self, path: str, new_name: str) -> None:
         parent, name = self._walk(path, want_parent=True)
-        if not access_ok(parent.perm, self.cred, W_OK):
+        if not self._access(parent, W_OK):
             raise err(errno.EACCES, parent.path())
         pino = Inode.unpack(parent.ino)
         self._rpc(pino.host_id, Message(MsgType.RENAME, {
@@ -2166,6 +2291,8 @@ class BAgent:
                     for r in self._rpc_batch(host, chunk):
                         if r.type is MsgType.ERROR:
                             continue  # e.g. dir unlinked mid-prefetch
+                        with self._tree_lock:
+                            self._note_gver(r.header.get("gver"))
                         for d in r.header["dirs"]:
                             n = nodes.get(_ino_key(d["ino"]))
                             if n is None:
@@ -2263,7 +2390,7 @@ class BAgent:
                 raise err(errno.EISDIR, p)
             if name in (parent.children or {}):
                 continue
-            if not access_ok(parent.perm, self.cred, W_OK):
+            if not self._access(parent, W_OK):
                 raise err(errno.EACCES, f"cannot create in {parent.path()}")
             pino = Inode.unpack(parent.ino)
             by_host.setdefault(pino.host_id, []).append(

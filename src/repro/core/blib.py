@@ -203,6 +203,22 @@ class BLib:
     def chown(self, path: str, uid: int, gid: int) -> None:
         self.agent.chown(path, uid, gid)
 
+    def setacl(self, path: str, acl) -> None:
+        """Replace `path`'s ACL: a list of [kind, id, allow, deny] entries
+        (kind "u"/"g", allow/deny rwx masks), or None to clear it."""
+        self.agent.setacl(path, acl)
+
+    def getacl(self, path: str):
+        return self.agent.getacl(path)
+
+    def setgroups(self, uid: int, gids) -> None:
+        """Replace `uid`'s extra group memberships in the cluster-wide
+        group table (root only)."""
+        self.agent.setgroups(uid, list(gids))
+
+    def groups(self) -> dict:
+        return self.agent.groups()
+
     def rename(self, path: str, new_name: str) -> None:
         self.agent.rename(path, new_name)
 

@@ -36,7 +36,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
 from .inode import Inode, ROOT_FILE_ID
-from .perms import PermRecord, S_IFDIR, S_IFREG
+from .perms import (FSError, PermRecord, S_IFDIR, S_IFREG, normalize_groups,
+                    validate_acl)
 from .repl import ReplicaStore, ReplicationLog
 from .service import MAX_TREE_DEPTH, SERVER_OPS
 from .transport import Transport
@@ -75,6 +76,10 @@ class FileMeta:
     # wseq): a restart must not let a pre-restart scatter commit over a
     # post-truncate chunk store.
     epoch: int = 0
+    # per-file ACL ([kind, id, allow, deny] entries, see perms.validate_acl)
+    # mirrored from the dentry so STAT-side state and the persist blob agree
+    # with what clients evaluate; None = mode bits alone decide.
+    acl: Optional[List] = None
 
 
 @dataclass
@@ -87,6 +92,10 @@ class DirEntry:
     # zero metadata RPCs — the same trick the 10 permission bytes pull for
     # open()
     layout: Optional[Dict] = None
+    # per-file ACL entries ride the dentry too (same trick again): a client
+    # holding the parent directory evaluates user/group allow-deny grants
+    # for any child locally, 0 RPCs.  None = plain mode bits.
+    acl: Optional[List] = None
 
 
 class BServer:
@@ -144,6 +153,20 @@ class BServer:
         self._opened: Dict[int, Set[Tuple[str, int, int]]] = {}
         # per-directory caching clients: dir_file_id -> {client_id: callback_addr}
         self._watchers: Dict[int, Dict[str, str]] = {}
+        # cluster-wide group-membership table (uid -> extra gids) and its
+        # version.  Authoritative only on the root's home (host 0 by
+        # convention) — other hosts keep it empty — but the machinery is
+        # host-agnostic: a promoted standby restores it from the replica
+        # blob and serves it under the same incarnation rules.
+        self._groups: Dict[int, List[int]] = {}
+        self._gver = 0
+        # clients holding a fetched group table (the table's twin of
+        # _watchers): client_id -> callback_addr, registered by
+        # LOOKUP_GROUPS, invalidated (blocking) before SETGROUPS applies
+        self._group_watchers: Dict[str, str] = {}
+        # serializes SETGROUPS' invalidate-then-apply window (the group
+        # table's _dir_mutex); LOOKUP_GROUPS snapshots under it too
+        self._groups_mutex = threading.Lock()
         # read leases (data-plane twin of _watchers): file_id ->
         # {client_id: (callback_addr, grant_expiry)}.  Granted on READ with
         # a `lease_ttl_s` bound, recalled with a blocking REVOKE_LEASE
@@ -242,12 +265,14 @@ class BServer:
             "xattrs": m.xattrs,
             **({"layout": m.layout} if m.layout else {}),
             **({"epoch": m.epoch} if m.epoch else {}),
+            **({"acl": m.acl} if m.acl else {}),
         }
 
     @staticmethod
     def _entry_rec(e: DirEntry) -> Dict:
         return {"ino": e.ino, "perm": e.perm.pack().hex(),
-                **({"layout": e.layout} if e.layout else {})}
+                **({"layout": e.layout} if e.layout else {}),
+                **({"acl": e.acl} if e.acl else {})}
 
     def _meta_blob_locked(self) -> Dict:
         return {
@@ -259,6 +284,11 @@ class BServer:
                            for name, e in entries.items()}
                 for fid, entries in self._dirs.items()
             },
+            # group table + version ride the same blob so a promoted
+            # standby (materialize -> _load_meta) restores grants intact
+            "groups": {str(uid): gids
+                       for uid, gids in self._groups.items()},
+            "gver": self._gver,
         }
 
     def _persist_now(self) -> None:
@@ -279,17 +309,20 @@ class BServer:
                 perm=PermRecord(d["mode"], d["uid"], d["gid"]), size=d["size"],
                 is_dir=d["is_dir"], nlink=d["nlink"], atime=d["atime"],
                 mtime=d["mtime"], ctime=d["ctime"], xattrs=d.get("xattrs", {}),
-                layout=d.get("layout"), epoch=d.get("epoch", 0))
+                layout=d.get("layout"), epoch=d.get("epoch", 0),
+                acl=d.get("acl"))
             for fid, d in blob["meta"].items()
         }
         self._dirs = {
             int(fid): {
                 name: DirEntry(name, e["ino"],
                                PermRecord.unpack(bytes.fromhex(e["perm"])),
-                               layout=e.get("layout"))
+                               layout=e.get("layout"), acl=e.get("acl"))
                 for name, e in entries.items()
             } for fid, entries in blob["dirs"].items()
         }
+        self._groups = normalize_groups(blob.get("groups"))
+        self._gver = blob.get("gver", 0)
 
     def shutdown(self) -> None:
         self._scrub_stop.set()
@@ -314,6 +347,7 @@ class BServer:
             self.version += 1
             self._opened.clear()
             self._watchers.clear()
+            self._group_watchers.clear()
             self._leases.clear()
             # the stripe-host epoch latch is volatile too; the home host's
             # persisted per-file epoch is what stale commits die against
@@ -767,13 +801,18 @@ class BServer:
                     return error(errno.ENOTDIR, "not a directory")
                 entries = [
                     {"name": e.name, "ino": e.ino, "perm": e.perm.pack().hex(),
-                     **({"layout": e.layout} if e.layout else {})}
+                     **({"layout": e.layout} if e.layout else {}),
+                     **({"acl": e.acl} if e.acl else {})}
                     for e in self._dirs[fid].values()
                 ]
                 if "client_id" in h and h.get("cb_addr"):
                     self._watchers.setdefault(fid, {})[h["client_id"]] = h["cb_addr"]
                 dperm = meta.perm.pack().hex()
-        return ok({"entries": entries, "perm": dperm, "ino": self._inode(fid)})
+                gver = self._gver
+        hdr = {"entries": entries, "perm": dperm, "ino": self._inode(fid)}
+        if gver:  # group-table authority: advertise the version (slot 18)
+            hdr["gver"] = gver
+        return ok(hdr)
 
     @SERVER_OPS.register(MsgType.STAT)
     def _op_stat(self, h: Dict, _p: bytes) -> Message:
@@ -979,10 +1018,11 @@ class BServer:
         def apply() -> Message:
             pdir = self._dirs[parent]
             e = pdir.pop(old)
-            # the layout travels WITH the dentry: dropping it here would
-            # turn a renamed striped file into an unreadable one for every
-            # client that resolves the new name
-            pdir[new] = DirEntry(new, e.ino, e.perm, layout=e.layout)
+            # the layout (and ACL) travels WITH the dentry: dropping it
+            # here would turn a renamed striped file into an unreadable one
+            # for every client that resolves the new name
+            pdir[new] = DirEntry(new, e.ino, e.perm, layout=e.layout,
+                                 acl=e.acl)
             self._persist()
             self._journal({"op": "dentry_del", "dir": parent, "name": old})
             self._journal({"op": "dentry", "dir": parent, "name": new,
@@ -1014,8 +1054,10 @@ class BServer:
             pdir = self._dirs[parent]
             e = pdir[name]
             new_perm = f(e.perm)
-            # preserve the stripe layout riding in the dentry (see rename)
-            pdir[name] = DirEntry(name, e.ino, new_perm, layout=e.layout)
+            # preserve the stripe layout and ACL riding in the dentry (see
+            # rename)
+            pdir[name] = DirEntry(name, e.ino, new_perm, layout=e.layout,
+                                  acl=e.acl)
             ino = Inode.unpack(e.ino)
             if ino.host_id == self.host_id and ino.file_id in self._meta:
                 self._meta[ino.file_id].perm = new_perm
@@ -1028,6 +1070,95 @@ class BServer:
 
         # no exclude_client: even the caller's own cache must revalidate
         return self._two_phase(parent, [name], check, apply)
+
+    @SERVER_OPS.register(MsgType.SETACL, mutating=True)
+    def _op_setacl(self, h: Dict, _p: bytes) -> Message:
+        """Replace one dentry's ACL.  Same shape as CHMOD (§3.4: every
+        watcher invalidated and acked BEFORE the new ACL applies), so a
+        client-cached grant can never authorize an access after the
+        withdrawal is acknowledged — revoke-before-ack, like writes."""
+        parent, name = h["parent"], h["name"]
+        try:
+            acl = validate_acl(h.get("acl"))
+        except FSError as e:
+            return error(e.errno, str(e))
+
+        def check() -> Optional[Message]:
+            if name not in self._dirs[parent]:
+                return error(errno.ENOENT, name)
+            return None
+
+        def apply() -> Message:
+            pdir = self._dirs[parent]
+            e = pdir[name]
+            pdir[name] = DirEntry(name, e.ino, e.perm, layout=e.layout,
+                                  acl=acl)
+            ino = Inode.unpack(e.ino)
+            if ino.host_id == self.host_id and ino.file_id in self._meta:
+                self._meta[ino.file_id].acl = acl
+                self._meta[ino.file_id].ctime = time.time()
+                self._jmeta(ino.file_id)
+            self._persist()
+            self._journal({"op": "dentry", "dir": parent, "name": name,
+                           "e": self._entry_rec(pdir[name])})
+            return ok({"acl": acl})
+
+        # no exclude_client: even the caller's own cache must revalidate
+        return self._two_phase(parent, [name], check, apply)
+
+    def _invalidate_group_watchers(self) -> None:
+        """Group-table twin of `_invalidate_watchers`: block until every
+        client holding a fetched table acks the invalidation, THEN the
+        caller applies the membership change.  Unreachable clients are
+        dropped from the registry (their next table use refetches)."""
+        with self._lock:
+            watchers = dict(self._group_watchers)
+        for client_id, cb_addr in watchers.items():
+            resp = self.transport.request(
+                cb_addr, Message(MsgType.INVALIDATE, {"groups": True}),
+                critical=True)
+            if resp.type is not MsgType.OK:
+                with self._lock:
+                    self._group_watchers.pop(client_id, None)
+
+    @SERVER_OPS.register(MsgType.SETGROUPS, mutating=True)
+    def _op_setgroups(self, h: Dict, _p: bytes) -> Message:
+        """Replace one uid's extra group memberships in the cluster-wide
+        table.  Invalidate-then-apply under the table's own mutex: by the
+        time the caller is acked, no client can evaluate a "g" ACL entry
+        against the withdrawn membership."""
+        uid, gids = h["uid"], h.get("gids") or []
+        if (not isinstance(uid, int) or uid < 0
+                or not all(isinstance(g, int) and g >= 0 for g in gids)):
+            return error(errno.EINVAL, "uid/gids must be non-negative ints")
+        with self._groups_mutex:
+            self._invalidate_group_watchers()
+            with self._lock:
+                if gids:
+                    self._groups[uid] = list(gids)
+                else:
+                    self._groups.pop(uid, None)
+                self._gver += 1
+                self._persist()
+                self._journal({"op": "groups",
+                               "g": {str(u): g
+                                     for u, g in self._groups.items()},
+                               "gver": self._gver})
+                return ok({"gver": self._gver})
+
+    @SERVER_OPS.register(MsgType.LOOKUP_GROUPS)
+    def _op_lookup_groups(self, h: Dict, _p: bytes) -> Message:
+        """Fetch the group table and register for its invalidations — the
+        table's LOOKUP_DIR.  The mutex serializes the snapshot against a
+        SETGROUPS invalidate+apply window, exactly as the dir mutex does
+        for §3.4 namespace mutations."""
+        with self._groups_mutex:
+            with self._lock:
+                if h.get("client_id") and h.get("cb_addr"):
+                    self._group_watchers[h["client_id"]] = h["cb_addr"]
+                return ok({"groups": {str(u): g
+                                      for u, g in self._groups.items()},
+                           "gver": self._gver})
 
     @SERVER_OPS.register(MsgType.REVALIDATE)
     def _op_revalidate(self, h: Dict, p: bytes) -> Message:
@@ -1076,6 +1207,8 @@ class BServer:
                                "perm": e.perm.pack().hex()}
                         if e.layout:
                             rec["layout"] = e.layout
+                        if e.acl:
+                            rec["acl"] = e.acl
                         entries.append(rec)
                         if e.perm.is_dir:
                             ci = Inode.unpack(e.ino)
@@ -1092,7 +1225,11 @@ class BServer:
                     queue.append((Inode.unpack(ino).file_id, d + 1))
                 else:
                     frontier.append(ino)
-        return ok({"dirs": dirs, "frontier": frontier})
+        hdr = {"dirs": dirs, "frontier": frontier}
+        with self._lock:
+            if self._gver:
+                hdr["gver"] = self._gver
+        return ok(hdr)
 
     # --- data ops --------------------------------------------------------
     def _record_open(self, io_h: Dict) -> None:
@@ -1506,7 +1643,8 @@ class BServer:
 
         def apply() -> Message:
             self._dirs[parent][name] = DirEntry(name, h["ino"], perm,
-                                                layout=h.get("layout"))
+                                                layout=h.get("layout"),
+                                                acl=h.get("acl"))
             self._persist()
             self._journal({"op": "dentry", "dir": parent, "name": name,
                            "e": self._entry_rec(self._dirs[parent][name])})

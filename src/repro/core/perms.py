@@ -13,8 +13,10 @@ child locally — the core mechanism of the paper.
 """
 from __future__ import annotations
 
+import errno
 import struct
 from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional
 
 # mode bit layout (subset of POSIX st_mode)
 S_IFDIR = 0o040000
@@ -74,16 +76,46 @@ class Credentials:
         return gid == self.gid or gid in self.groups
 
 
-def access_ok(perm: PermRecord, cred: Credentials, want: int) -> bool:
+def access_ok(perm: PermRecord, cred: Credentials, want: int,
+              acl: Optional[List] = None, groups: Iterable[int] = ()) -> bool:
     """POSIX rwx check of `want` (mask of R_OK/W_OK/X_OK) against a record.
 
     This is the check the kernel performs per path component; in BuffetFS it
     runs on the *client* against cached parent-directory entries.
+
+    `acl` is the optional per-file ACL that rides in the dentry next to the
+    10-byte record (see `validate_acl` for the entry shape), and `groups`
+    extends the credential's group set with memberships granted by the
+    cluster-wide group table — they are what make the check "rich" without
+    changing its 0-RPC character: both travel with (or are cached next to)
+    the data the client already holds.  Evaluation order:
+
+      * root keeps its POSIX shortcut (everything, except X on a file with
+        no x bit anywhere) — ACLs cannot lock root out;
+      * if any ACL entry MATCHES the caller (a "u" entry with its uid, or a
+        "g" entry with a gid in cred.gid/cred.groups/`groups`), the ACL
+        decides alone: `want` must be covered by the union of matching
+        allow masks and must not touch any matching deny mask (deny wins);
+      * otherwise the plain mode bits decide, exactly as before.
     """
     if cred.uid == 0:  # root: X still requires some x bit for files
         if want & X_OK and not perm.is_dir and not (perm.mode & 0o111):
             return False
         return True
+    if acl:
+        allowed = denied = 0
+        matched = False
+        for kind, ident, allow, deny in acl:
+            if kind == "u":
+                hit = ident == cred.uid
+            else:
+                hit = cred.in_group(ident) or ident in groups
+            if hit:
+                matched = True
+                allowed |= allow
+                denied |= deny
+        if matched:
+            return not (want & denied) and (allowed & want) == want
     if cred.uid == perm.uid:
         bits = (perm.mode >> 6) & 7
     elif cred.in_group(perm.gid):
@@ -91,6 +123,39 @@ def access_ok(perm: PermRecord, cred: Credentials, want: int) -> bool:
     else:
         bits = perm.mode & 7
     return (bits & want) == want
+
+
+def validate_acl(acl: Optional[List]) -> Optional[List]:
+    """Normalize/validate an ACL: a list of `[kind, id, allow, deny]` entries
+    (kind "u"=user or "g"=group, id a uid/gid, allow/deny rwx masks 0..7).
+    Entries are plain JSON-serializable lists so an ACL rides wire headers,
+    the persist blob, and the replication log without any codec support.
+    Returns the normalized list (or None for empty) and raises FSError
+    EINVAL on malformed input."""
+    if not acl:
+        return None
+    out: List[List] = []
+    for entry in acl:
+        try:
+            kind, ident, allow, deny = entry
+        except (TypeError, ValueError):
+            raise err(errno.EINVAL, f"malformed ACL entry: {entry!r}")
+        if (kind not in ("u", "g") or not isinstance(ident, int)
+                or ident < 0 or not isinstance(allow, int)
+                or not isinstance(deny, int)
+                or not 0 <= allow <= 7 or not 0 <= deny <= 7):
+            raise err(errno.EINVAL, f"malformed ACL entry: {entry!r}")
+        out.append([kind, ident, allow, deny])
+    return out
+
+
+def normalize_groups(table: Optional[Dict]) -> Dict[int, List[int]]:
+    """Group-membership table (uid -> extra gids) with int keys restored:
+    the table crosses JSON boundaries (wire ext blob, persist blob, commit
+    log), where object keys become strings."""
+    if not table:
+        return {}
+    return {int(uid): [int(g) for g in gids] for uid, gids in table.items()}
 
 
 def flags_to_access(flags: int) -> int:

@@ -44,6 +44,7 @@ the record inside the REPL_APPEND frame, concatenated in record order):
      "off": o, "plen": n}                            chunk write (payload)
     {"op": "ctrunc", "home": h, "fid": f, "ops": L}  chunk clip/delete plan
     {"op": "cdel", "home": h, "fid": f, "indices": L} chunk unlink
+    {"op": "groups", "g": {uid: [gid,..]}, "gver": n} group-table replace
 """
 from __future__ import annotations
 
@@ -259,6 +260,10 @@ class ReplicaStore:
         self.next_file_id = 0
         self.meta: Dict[int, Dict] = {}
         self.dirs: Dict[int, Dict[str, Dict]] = {}
+        # group-membership table + version, stored verbatim (JSON string
+        # keys); BServer._load_meta normalizes after materialize()
+        self.groups: Dict = {}
+        self.gver = 0
         self.records_applied = 0
 
     # --- apply ---------------------------------------------------------
@@ -325,6 +330,8 @@ class ReplicaStore:
             self.next_file_id = blob["next_file_id"]
             self.meta = {int(f): dict(m) for f, m in blob["meta"].items()}
             self.dirs = {int(f): dict(es) for f, es in blob["dirs"].items()}
+            self.groups = dict(blob.get("groups", {}))
+            self.gver = blob.get("gver", 0)
             # the snapshot restarts the data stream too: whatever object
             # bytes we held may predate or postdate it, and the home
             # re-ships them right behind the snap
@@ -345,6 +352,12 @@ class ReplicaStore:
             self.dirs.pop(rec["fid"], None)
         elif op == "next_fid":
             self.next_file_id = max(self.next_file_id, rec["v"])
+        elif op == "groups":
+            # full-table replacement, idempotent by construction; gver is
+            # monotonic so duplicate re-ships cannot roll grants back
+            if rec["gver"] >= self.gver:
+                self.groups = dict(rec["g"])
+                self.gver = rec["gver"]
         elif op == "odata":
             if rec.get("trunc"):
                 self._truncate(self._obj_path(rec["fid"]), 0)
@@ -378,6 +391,8 @@ class ReplicaStore:
                 "next_file_id": self.next_file_id,
                 "meta": {str(f): m for f, m in self.meta.items()},
                 "dirs": {str(f): es for f, es in self.dirs.items()},
+                "groups": dict(self.groups),
+                "gver": self.gver,
             }
             tmp = os.path.join(self.dir, "meta.json.tmp")
             with open(tmp, "w") as f:

@@ -109,6 +109,13 @@ class MsgType(IntEnum):
                         # home: replay the received log into a fresh serving
                         # instance, bump the incarnation, return the new
                         # (addr, version) so the cluster config can re-point
+    # --- rich permissions (ACL + group grants, PR 8) ---
+    SETACL = 31         # replace one dentry's ACL (list of [kind, id,
+                        # allow, deny] entries riding the ext blob, like the
+                        # lease record).  Same §3.4 two-phase as CHMOD: every
+                        # watcher is invalidated BEFORE the new ACL applies,
+                        # so no client can serve a withdrawn grant after the
+                        # mutation acks.
     # --- server -> client (callback channel) ---
     INVALIDATE = 32     # server asks client to invalidate cached tree nodes
     REVOKE_LEASE = 33   # server recalls a read lease before applying a data
@@ -117,7 +124,19 @@ class MsgType(IntEnum):
                         # record in its header is granted one ("lease": true
                         # in the response); the grant entitles the client to
                         # serve that file's blocks from its local page cache
-                        # with zero RPCs until revoked.
+                        # with zero RPCs until revoked.  An INVALIDATE with
+                        # a truthy "groups" header targets the client's
+                        # cached group-membership table instead of a tree
+                        # node (same blocking mark-before-ack discipline).
+    SETGROUPS = 34      # replace one uid's extra group memberships in the
+                        # cluster-wide group table (authority: host 0, the
+                        # root's home).  Every client that fetched the table
+                        # is invalidated (blocking) BEFORE the change
+                        # applies — a withdrawn membership can never
+                        # authorize after the ack.
+    LOOKUP_GROUPS = 35  # fetch the group table (+ its version `gver`) and
+                        # register for its invalidation callbacks — the
+                        # group-table twin of LOOKUP_DIR.
     # --- generic ---
     OK = 64
     ERROR = 65
@@ -166,6 +185,14 @@ _SLOT_DEFS: Tuple[Tuple[str, str], ...] = (
                         #     serving cached blocks once it elapses, and the
                         #     server may wait it out instead of force-
                         #     breaking an unacked revoke.
+    ("gver", "I"),      # 18: group-table version.  The authority host
+                        #     stamps it on LOOKUP_DIR/LOOKUP_TREE/
+                        #     LOOKUP_GROUPS responses; a client holding an
+                        #     older table drops it and refetches lazily —
+                        #     the belt-and-braces path for grants revoked
+                        #     while the client was not yet registered for
+                        #     the blocking callback (e.g. across a
+                        #     failover to a promoted standby).
 )
 _SLOT_INDEX = {name: i for i, (name, _) in enumerate(_SLOT_DEFS)}
 _BOOL_SLOTS = frozenset(n for n, f in _SLOT_DEFS if f == "B")

@@ -1,0 +1,321 @@
+"""Rich serve-yourself permissions: ACL/group grants, revocation, and the
+pre-existing edge cases of the 10-byte-record check itself.
+
+Three layers:
+
+  * unit — `access_ok` POSIX corners (root X on a file with no x bit,
+    owner bits winning even when more restrictive than group/other) and
+    the ACL evaluation rules (deny wins, allow union, fallback to mode
+    bits when no entry matches, root immune to ACL lockout);
+  * property — `access_ok` against an independently written oracle over
+    randomized records, credentials, ACLs, and extra-group sets;
+  * end-to-end — grants propagate inside LOOKUP responses and evaluate
+    client-side at zero critical RPCs warm; SETACL and SETGROUPS revoke
+    before they ack, so the very next open() denies; grants and the
+    group table survive home-host failover via the replicated log.
+"""
+
+import errno
+
+import pytest
+
+from repro.core import BAgent, BLib, BuffetCluster, Inode
+from repro.core.perms import (
+    Credentials,
+    FSError,
+    PermRecord,
+    R_OK,
+    S_IFDIR,
+    S_IFREG,
+    W_OK,
+    X_OK,
+    access_ok,
+    validate_acl,
+)
+
+TTL = 30.0  # long: every denial below must come from invalidation, not expiry
+
+
+# ---------------------------------------------------------------------------
+# unit: POSIX corners of the 10-byte record check
+# ---------------------------------------------------------------------------
+ROOT = Credentials(uid=0, gid=0)
+
+
+def test_root_x_on_file_without_any_x_bit_is_denied():
+    plain = PermRecord(S_IFREG | 0o644, 5, 5)
+    assert not access_ok(plain, ROOT, X_OK)
+    assert access_ok(plain, ROOT, R_OK | W_OK)
+    # any single x bit anywhere is enough for root
+    assert access_ok(PermRecord(S_IFREG | 0o001, 5, 5), ROOT, X_OK)
+
+
+def test_root_x_on_dir_needs_no_x_bit():
+    assert access_ok(PermRecord(S_IFDIR | 0o600, 5, 5), ROOT, X_OK)
+
+
+def test_owner_bits_win_even_when_more_restrictive():
+    # owner class is consulted FIRST and alone: mode 0o007 denies the
+    # owner everything even though "other" would allow rwx
+    perm = PermRecord(S_IFREG | 0o007, 5, 5)
+    assert not access_ok(perm, Credentials(uid=5, gid=5), R_OK)
+    assert access_ok(perm, Credentials(uid=6, gid=6), R_OK | W_OK | X_OK)
+
+
+def test_group_bits_win_over_other_bits():
+    perm = PermRecord(S_IFREG | 0o604, 5, 9)
+    assert not access_ok(perm, Credentials(uid=6, gid=9), R_OK)
+    assert access_ok(perm, Credentials(uid=6, gid=7), R_OK)
+
+
+# ---------------------------------------------------------------------------
+# unit: ACL evaluation
+# ---------------------------------------------------------------------------
+def test_acl_user_grant_overrides_mode_bits():
+    perm = PermRecord(S_IFREG | 0o640, 0, 0)
+    cred = Credentials(uid=7, gid=70)
+    assert not access_ok(perm, cred, R_OK)
+    assert access_ok(perm, cred, R_OK, acl=[["u", 7, 4, 0]])
+
+
+def test_acl_deny_wins_over_allow():
+    cred = Credentials(uid=7, gid=70)
+    perm = PermRecord(S_IFREG | 0o777, 0, 0)
+    acl = [["u", 7, 7, 0], ["g", 70, 0, 2]]
+    assert access_ok(perm, cred, R_OK, acl=acl)
+    assert not access_ok(perm, cred, W_OK, acl=acl)
+    assert not access_ok(perm, cred, R_OK | W_OK, acl=acl)
+
+
+def test_acl_match_decides_alone_mode_bits_ignored():
+    # a matching entry takes over completely: mode 0o777 no longer helps
+    perm = PermRecord(S_IFREG | 0o777, 0, 0)
+    assert not access_ok(perm, Credentials(uid=7), W_OK, acl=[["u", 7, 4, 0]])
+
+
+def test_acl_unmatched_falls_back_to_mode_bits():
+    perm = PermRecord(S_IFREG | 0o644, 0, 0)
+    cred = Credentials(uid=7, gid=70)
+    assert access_ok(perm, cred, R_OK, acl=[["u", 8, 0, 7]])
+    assert not access_ok(perm, cred, W_OK, acl=[["u", 8, 7, 0]])
+
+
+def test_acl_group_entry_matches_via_extra_groups_table():
+    perm = PermRecord(S_IFREG | 0o640, 0, 0)
+    cred = Credentials(uid=7, gid=70)
+    acl = [["g", 500, 4, 0]]
+    assert not access_ok(perm, cred, R_OK, acl=acl)
+    assert access_ok(perm, cred, R_OK, acl=acl, groups=(500,))
+
+
+def test_acl_cannot_lock_out_root():
+    perm = PermRecord(S_IFREG | 0o640, 0, 0)
+    assert access_ok(perm, ROOT, R_OK | W_OK, acl=[["u", 0, 0, 7]])
+
+
+def test_validate_acl_normalizes_and_rejects():
+    assert validate_acl(None) is None
+    assert validate_acl([]) is None
+    assert validate_acl([("u", 7, 4, 0)]) == [["u", 7, 4, 0]]
+    for bad in (
+        [["x", 7, 4, 0]],
+        [["u", -1, 4, 0]],
+        [["u", 7, 8, 0]],
+        [["u", 7, 4, -1]],
+        [["u", 7, 4]],
+        [["u", "7", 4, 0]],
+        ["not-an-entry"],
+    ):
+        with pytest.raises(FSError) as ei:
+            validate_acl(bad)
+        assert ei.value.errno == errno.EINVAL
+
+
+# ---------------------------------------------------------------------------
+# property: access_ok vs an independently written oracle.  Only this section
+# needs hypothesis — guarded import (not module-level importorskip) so the
+# unit and end-to-end tests above/below still run without it.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _oracle(perm, cred, want, acl, groups):
+    """Reference semantics, written straight from the docstring."""
+    if cred.uid == 0:
+        if want & X_OK and not (perm.mode & S_IFDIR) and not (perm.mode & 0o111):
+            return False
+        return True
+    allow = deny = 0
+    matched = False
+    for kind, ident, a, d in acl or []:
+        if kind == "u":
+            hit = ident == cred.uid
+        else:
+            hit = ident == cred.gid or ident in cred.groups or ident in groups
+        if hit:
+            matched = True
+            allow |= a
+            deny |= d
+    if matched:
+        return not (want & deny) and (allow & want) == want
+    if cred.uid == perm.uid:
+        bits = (perm.mode >> 6) & 7
+    elif perm.gid == cred.gid or perm.gid in cred.groups:
+        bits = (perm.mode >> 3) & 7
+    else:
+        bits = perm.mode & 7
+    return (bits & want) == want
+
+
+if HAVE_HYPOTHESIS:
+    _ids = st.integers(0, 4)
+    _entry = st.tuples(
+        st.sampled_from(["u", "g"]), _ids, st.integers(0, 7), st.integers(0, 7)
+    ).map(list)
+
+    @given(
+        mode=st.integers(0, 0o777),
+        is_dir=st.booleans(),
+        file_uid=_ids,
+        file_gid=_ids,
+        uid=_ids,
+        gid=_ids,
+        extra=st.lists(_ids, max_size=3),
+        table=st.lists(_ids, max_size=3),
+        want=st.integers(1, 7),
+        acl=st.lists(_entry, max_size=4),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_access_ok_matches_oracle(
+        mode, is_dir, file_uid, file_gid, uid, gid, extra, table, want, acl
+    ):
+        perm = PermRecord(
+            (S_IFDIR if is_dir else S_IFREG) | mode, file_uid, file_gid
+        )
+        cred = Credentials(uid=uid, gid=gid, groups=tuple(extra))
+        groups = tuple(table)
+        assert access_ok(perm, cred, want, acl=acl, groups=groups) == _oracle(
+            perm, cred, want, acl, groups
+        )
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_access_ok_matches_oracle():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: grants over the wire, revocation, failover
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def cluster(tmp_path):
+    c = BuffetCluster(
+        root_dir=str(tmp_path), n_servers=4, replication=True, lease_ttl_s=TTL
+    )
+    yield c
+    c.shutdown()
+
+
+def _user(cluster, uid, gid, **kw):
+    return BLib(BAgent(cluster, cred=Credentials(uid=uid, gid=gid), **kw))
+
+
+def _denied(lib, path):
+    with pytest.raises(OSError) as ei:
+        lib.read_file(path)
+    assert ei.value.errno == errno.EACCES
+
+
+def test_setacl_grants_then_revoke_denies_next_open(cluster):
+    admin = BLib(BAgent(cluster))
+    admin.makedirs("/d")
+    admin.write_file("/d/f", b"secret", perm=0o640)
+    user = _user(cluster, 7, 70)
+    _denied(user, "/d/f")
+    admin.setacl("/d/f", [["u", 7, 4, 0]])
+    assert user.read_file("/d/f") == b"secret"
+    assert admin.getacl("/d/f") == [["u", 7, 4, 0]]
+    admin.setacl("/d/f", None)
+    _denied(user, "/d/f")  # the very next open, no re-poll needed
+
+
+def test_group_grant_via_cluster_table_and_revoke(cluster):
+    admin = BLib(BAgent(cluster))
+    admin.makedirs("/d")
+    admin.write_file("/d/f", b"team", perm=0o640)
+    admin.setacl("/d/f", [["g", 500, 4, 0]])
+    user = _user(cluster, 7, 70)
+    _denied(user, "/d/f")
+    admin.setgroups(7, [500])
+    assert user.read_file("/d/f") == b"team"
+    assert user.agent.groups().get(7) == [500]
+    admin.setgroups(7, [])
+    _denied(user, "/d/f")  # membership loss bites on the next open
+
+
+def test_warm_acl_and_group_checks_cost_zero_rpcs(cluster):
+    admin = BLib(BAgent(cluster))
+    admin.makedirs("/a/b/c/d")
+    admin.write_file("/a/b/c/d/f", b"x" * 512, perm=0o640)
+    admin.write_file("/a/b/c/d/closed", b"y", perm=0o640)
+    admin.setacl("/a/b/c/d/f", [["g", 500, 4, 0]])
+    admin.setgroups(7, [500])
+    user = _user(cluster, 7, 70, read_cache=True)
+    user.warm_tree("/")
+    assert user.read_file("/a/b/c/d/f") == b"x" * 512
+    fetches = user.agent.perm_check_rpcs
+    assert fetches == 1  # exactly one cold group-table fetch
+    user.agent.stats.reset()
+    for _ in range(5):
+        assert user.read_file("/a/b/c/d/f") == b"x" * 512
+        _denied(user, "/a/b/c/d/closed")  # denial is also served locally
+    assert user.agent.stats.snapshot()["critical_path"] == 0
+    assert user.agent.perm_check_rpcs == fetches
+
+
+def test_setacl_requires_owner_or_root(cluster):
+    admin = BLib(BAgent(cluster))
+    admin.makedirs("/d")
+    admin.write_file("/d/f", b"x", perm=0o644)
+    user = _user(cluster, 7, 70)
+    with pytest.raises(OSError) as ei:
+        user.setacl("/d/f", [["u", 7, 7, 0]])
+    assert ei.value.errno == errno.EPERM
+
+
+def test_setgroups_requires_root(cluster):
+    user = _user(cluster, 7, 70)
+    with pytest.raises(OSError) as ei:
+        user.setgroups(7, [500])
+    assert ei.value.errno == errno.EPERM
+
+
+def test_grants_survive_home_host_failover(cluster):
+    admin = BLib(BAgent(cluster))
+    admin.makedirs("/d")
+    admin.write_file("/d/f", b"data", perm=0o640)
+    admin.setacl("/d/f", [["g", 500, 4, 0]])
+    admin.setgroups(7, [500])
+    for srv in cluster.servers.values():
+        assert srv.repl_drain()
+
+    authority = Inode.unpack(admin.agent.root.ino).host_id
+    cluster.kill_server(authority)
+    cluster.promote(authority)
+
+    # fresh clients against the promoted authority: the ACL and the
+    # group table both came back through the replicated log
+    member = _user(cluster, 7, 70)
+    assert member.read_file("/d/f") == b"data"
+    _denied(_user(cluster, 8, 80), "/d/f")
+
+    # and the promoted authority can still revoke with the same
+    # deny-on-next-open guarantee
+    admin2 = BLib(BAgent(cluster))
+    admin2.setgroups(7, [])
+    _denied(member, "/d/f")
