@@ -136,6 +136,33 @@ def extract(rows: List[dict]) -> Dict[str, float]:
                 out[key + "/stale_reads"] = r["stale_reads"]
                 out[key + "/revoke_rpcs_to_client"] = (
                     r["revoke_rpcs_to_client"])
+        elif bench == "fig13_durability":
+            # replication durability: zero ceilings for anything a user
+            # would see (errors, corrupt reads, forced lease breaks,
+            # residual under-replication) plus DEFICITS of the expected
+            # replication events — a hedge that stops firing, a read that
+            # stops failing over, or a scrub that stops repairing fails
+            # the ceiling-only gate instead of "improving" to zero
+            mode = r.get("mode")
+            key = f"fig13/{mode}"
+            out[key + "/lease_breaks_forced"] = r["lease_breaks_forced"]
+            out[key + "/client_errors"] = r["client_errors"]
+            out[key + "/data_bad"] = r["data_bad"]
+            if mode == "kill_stripe":
+                out[key + "/failover_deficit"] = max(
+                    0, 1 - r["read_failovers"])
+                out[key + "/hedged_reads"] = r["hedged_reads"]
+            elif mode == "slow_replica":
+                out[key + "/hedge_deficit"] = max(0, 1 - r["hedged_reads"])
+                out[key + "/hedge_win_deficit"] = max(
+                    0, 1 - r["hedge_wins"])
+            elif mode == "scrub_repair":
+                out[key + "/under_replicated_deficit"] = max(
+                    0, 1 - r["under_replicated_first"])
+                out[key + "/repair_deficit"] = max(
+                    0, 1 - r["repaired_chunks"])
+                out[key + "/under_replicated_after"] = (
+                    r["under_replicated_after"])
         elif bench == "fig12_perms":
             # serve-yourself permission gates: warm ACL/group checks and
             # denials must stay RPC-free (raw zero ceilings), expected

@@ -1,0 +1,316 @@
+"""Fig 13: chunk-replication durability — hedged reads, failover, repair.
+
+Three deterministic scenarios, each gated on counter arithmetic (never
+wall-clock), matching the replication design's three claims:
+
+  * kill_stripe — kill one stripe host mid-stream under r=3: every write
+    still reaches its W=2 quorum, every read fails over from the dead
+    primary to a surviving replica, and the client sees ZERO errors and
+    zero corrupt files.  The hedge timer is parked (huge delay) so the
+    scenario isolates the error-driven failover path: the hedge counter
+    must stay exactly 0.
+  * slow_replica — one stripe host answers slowly; the hedge timer fires
+    a duplicate CHUNK_READ at the next replica and first-full-response
+    wins, so the read's tail latency tracks the fast copy, not the
+    straggler.  Gated on the hedged/won counters (and zero forced lease
+    breaks — hedging must never lean on coherence shortcuts); the p50/p99
+    latencies are reported for the figure but not gated.
+  * scrub_repair — files written while a replica host was down are
+    under-replicated; once the host returns, scrub passes re-replicate
+    every missing copy from the survivors and the under-replication gauge
+    converges to ZERO with contents intact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from typing import Dict, List
+
+from repro.core import BAgent, BLib, BuffetCluster
+
+SS = 64 * 1024
+
+
+def _pattern(i: int, size: int) -> bytes:
+    return bytes((i * 11 + j) % 251 for j in range(size))
+
+
+def _impatient(a: BAgent) -> BAgent:
+    # shrink the dead-host retry budget: the scenarios kill hosts on
+    # purpose and the default capped backoff would dominate the runtime
+    a.failover_retry_max = 2
+    a.failover_backoff_s = 0.005
+    a.failover_backoff_cap_s = 0.01
+    return a
+
+
+def _sum_srv(cluster: BuffetCluster, attr: str) -> int:
+    return sum(getattr(s, attr) for s in cluster.servers.values())
+
+
+def _non_home_host(agent: BAgent, path: str) -> int:
+    node, _ = agent._walk(path)
+    return node.layout["hosts"][1]
+
+
+def _scrub_until_converged(lib: BLib, deadline_s: float = 30.0) -> Dict:
+    """Scrub repeatedly until the under-replication gauge hits zero (or
+    the deadline passes); returns totals across the passes."""
+    totals = {"passes": 0, "repaired_chunks": 0, "under_replicated_first": 0,
+              "under_replicated_after": -1}
+    deadline = time.time() + deadline_s
+    while True:
+        s = lib.scrub()
+        if totals["passes"] == 0:
+            totals["under_replicated_first"] = s["under_replicated"]
+        totals["passes"] += 1
+        totals["repaired_chunks"] += s["repaired_chunks"]
+        totals["under_replicated_after"] = s["under_replicated"]
+        if s["under_replicated"] == 0 or time.time() > deadline:
+            return totals
+
+
+def _kill_stripe(n_files: int, size: int) -> Dict:
+    with tempfile.TemporaryDirectory() as root:
+        cluster = BuffetCluster(root_dir=root, n_servers=4, stripe_count=4,
+                                stripe_size=SS, replicas=3)
+        try:
+            # hedge parked: failover must be driven by errors, not timers
+            a = _impatient(BAgent(cluster, hedge_delay_s=30.0))
+            lib = BLib(a)
+            lib.makedirs("/ks")  # one dir => every file homed on one host
+            blobs: Dict[str, bytes] = {}
+            client_errors = data_bad = 0
+            victim = None
+            t0 = time.perf_counter()
+            for i in range(n_files):
+                p = f"/ks/f{i:04d}"
+                blobs[p] = _pattern(i, size)
+                try:
+                    lib.write_file(p, blobs[p])
+                    if lib.read_file(p) != blobs[p]:
+                        data_bad += 1
+                except OSError:
+                    client_errors += 1
+                if i == 0:
+                    victim = _non_home_host(a, p)
+                if i == n_files // 2 - 1:
+                    cluster.kill_server(victim)
+            # full re-read: everything written before AND after the kill
+            for p, want in sorted(blobs.items()):
+                try:
+                    if lib.read_file(p) != want:
+                        data_bad += 1
+                except OSError:
+                    client_errors += 1
+            stream_s = time.perf_counter() - t0
+            return {
+                "bench": "fig13_durability",
+                "mode": "kill_stripe",
+                "n_files": n_files,
+                "stream_seconds": round(stream_s, 3),
+                "client_errors": client_errors,
+                "data_bad": data_bad,
+                "read_failovers": a.read_failovers,
+                "hedged_reads": a.hedged_reads,
+                "lease_breaks_forced": _sum_srv(cluster,
+                                                "lease_breaks_forced"),
+            }
+        finally:
+            cluster.shutdown()
+
+
+def _slow_replica(n_files: int, passes: int, size: int,
+                  extra_delay_s: float = 0.25) -> Dict:
+    from repro.core.failure import delayed
+    with tempfile.TemporaryDirectory() as root:
+        cluster = BuffetCluster(root_dir=root, n_servers=4, stripe_count=4,
+                                stripe_size=SS, replicas=2)
+        try:
+            a = BAgent(cluster, hedge_delay_s=0.02)
+            lib = BLib(a)
+            lib.makedirs("/sl")
+            blobs: Dict[str, bytes] = {}
+            for i in range(n_files):
+                p = f"/sl/f{i:04d}"
+                blobs[p] = _pattern(i, size)
+                lib.write_file(p, blobs[p])
+            slow = _non_home_host(a, sorted(blobs)[0])
+            client_errors = data_bad = 0
+            lat: List[float] = []
+            with delayed(cluster.transport, cluster.config.addr(slow),
+                         extra_delay_s=extra_delay_s):
+                for _ in range(passes):
+                    for p, want in sorted(blobs.items()):
+                        t0 = time.perf_counter()
+                        try:
+                            if lib.read_file(p) != want:
+                                data_bad += 1
+                        except OSError:
+                            client_errors += 1
+                        lat.append(time.perf_counter() - t0)
+            lat.sort()
+            return {
+                "bench": "fig13_durability",
+                "mode": "slow_replica",
+                "n_files": n_files,
+                "passes": passes,
+                "extra_delay_s": extra_delay_s,
+                "read_p50_ms": round(lat[len(lat) // 2] * 1e3, 3),
+                "read_p99_ms": round(lat[int(len(lat) * 0.99)] * 1e3, 3),
+                "client_errors": client_errors,
+                "data_bad": data_bad,
+                "hedged_reads": a.hedged_reads,
+                "hedge_wins": a.hedge_wins,
+                "lease_breaks_forced": _sum_srv(cluster,
+                                                "lease_breaks_forced"),
+            }
+        finally:
+            cluster.shutdown()
+
+
+def _scrub_repair(n_files: int, size: int) -> Dict:
+    with tempfile.TemporaryDirectory() as root:
+        cluster = BuffetCluster(root_dir=root, n_servers=4, stripe_count=4,
+                                stripe_size=SS, replicas=3)
+        try:
+            a = _impatient(BAgent(cluster, hedge_delay_s=0.05))
+            lib = BLib(a)
+            lib.makedirs("/sr")
+            lib.write_file("/sr/probe", b"x")
+            victim = _non_home_host(a, "/sr/probe")
+            cluster.kill_server(victim)
+            blobs: Dict[str, bytes] = {}
+            client_errors = data_bad = 0
+            for i in range(n_files):  # written DEGRADED: W=2 of r=3
+                p = f"/sr/f{i:04d}"
+                blobs[p] = _pattern(i, size)
+                try:
+                    lib.write_file(p, blobs[p])
+                except OSError:
+                    client_errors += 1
+            cluster.restart_server(victim)
+            t0 = time.perf_counter()
+            totals = _scrub_until_converged(lib)
+            repair_s = time.perf_counter() - t0
+            for p, want in sorted(blobs.items()):
+                try:
+                    if lib.read_file(p) != want:
+                        data_bad += 1
+                except OSError:
+                    client_errors += 1
+            return {
+                "bench": "fig13_durability",
+                "mode": "scrub_repair",
+                "n_files": n_files,
+                "repair_seconds": round(repair_s, 3),
+                "scrub_passes": totals["passes"],
+                "under_replicated_first": totals["under_replicated_first"],
+                "repaired_chunks": totals["repaired_chunks"],
+                "under_replicated_after": totals["under_replicated_after"],
+                "client_errors": client_errors,
+                "data_bad": data_bad,
+                "lease_breaks_forced": _sum_srv(cluster,
+                                                "lease_breaks_forced"),
+            }
+        finally:
+            cluster.shutdown()
+
+
+def run(n_files: int = 24, passes: int = 2, size: int = 2 * SS + 123
+        ) -> List[Dict]:
+    return [
+        _kill_stripe(n_files, size),
+        _slow_replica(max(4, n_files // 3), passes, size),
+        _scrub_repair(max(4, n_files // 3), size),
+    ]
+
+
+def check(rows: List[Dict]) -> List[str]:
+    """Acceptance gates over `run()` rows; returns failure strings.
+
+    Shared by the `--check` CLI (the CI fault-smoke lane) and
+    benchmarks.run so the two gate sets can never drift.  Every gate is
+    a counter comparison — never wall-clock."""
+    failures: List[str] = []
+    by_mode = {r.get("mode"): r for r in rows
+               if r.get("bench") == "fig13_durability"}
+    ks = by_mode.get("kill_stripe")
+    if ks:
+        if ks["client_errors"] or ks["data_bad"]:
+            failures.append(
+                f"fig13 kill_stripe: {ks['client_errors']} client errors, "
+                f"{ks['data_bad']} corrupt files (losing one of three "
+                f"replicas must be invisible)")
+        if ks["read_failovers"] < 1:
+            failures.append(
+                "fig13 kill_stripe: no read ever failed over to a replica "
+                "(the error-driven failover path regressed)")
+        if ks["hedged_reads"] != 0:
+            failures.append(
+                f"fig13 kill_stripe: {ks['hedged_reads']} hedged reads "
+                f"with the hedge timer parked (hedge count must be bounded "
+                f"by the timer, not fired spuriously)")
+    sl = by_mode.get("slow_replica")
+    if sl:
+        if sl["hedged_reads"] < 1 or sl["hedge_wins"] < 1:
+            failures.append(
+                f"fig13 slow_replica: hedged={sl['hedged_reads']} "
+                f"won={sl['hedge_wins']} (the hedge timer never rescued a "
+                f"read from the slow replica)")
+        if sl["client_errors"] or sl["data_bad"]:
+            failures.append(
+                f"fig13 slow_replica: {sl['client_errors']} errors, "
+                f"{sl['data_bad']} bad reads (hedging corrupted a result)")
+    sr = by_mode.get("scrub_repair")
+    if sr:
+        if sr["under_replicated_first"] < 1 or sr["repaired_chunks"] < 1:
+            failures.append(
+                f"fig13 scrub_repair: first={sr['under_replicated_first']} "
+                f"repaired={sr['repaired_chunks']} (degraded writes never "
+                f"registered as under-replicated / were never repaired)")
+        if sr["under_replicated_after"] != 0:
+            failures.append(
+                f"fig13 scrub_repair: gauge {sr['under_replicated_after']} "
+                f"after convergence loop (scrub repair stopped converging)")
+        if sr["client_errors"] or sr["data_bad"]:
+            failures.append(
+                f"fig13 scrub_repair: {sr['client_errors']} errors, "
+                f"{sr['data_bad']} corrupt files after repair")
+    for mode, r in by_mode.items():
+        if r["lease_breaks_forced"]:
+            failures.append(
+                f"fig13 {mode}: {r['lease_breaks_forced']} forced lease "
+                f"breaks (replication must never lean on coherence "
+                f"shortcuts)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-files", type=int, default=24)
+    ap.add_argument("--passes", type=int, default=2)
+    ap.add_argument("--out", help="write scenario rows to this JSON file")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless every acceptance gate holds")
+    args = ap.parse_args(argv)
+    rows = run(n_files=args.n_files, passes=args.passes)
+    print(json.dumps(rows, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+            f.write("\n")
+    if args.check:
+        failures = check(rows)
+        for msg in failures:
+            print(f"GATE FAIL: {msg}")
+        if failures:
+            return 1
+        print("fig13 gates: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

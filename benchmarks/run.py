@@ -23,7 +23,7 @@ def main() -> None:
     from benchmarks import (fig3_latency, fig4_concurrency, fig5_batch,
                             fig6_write, fig7_readcache, fig8_stripe,
                             fig10_mlstack, fig11_failover, fig12_perms,
-                            invalidation, rpc_table)
+                            fig13_durability, invalidation, rpc_table)
 
     print("name,us_per_call,derived")
     rows = []
@@ -160,6 +160,29 @@ def main() -> None:
                   f"{r['acl_denies_expected']} "
                   f"group_denies={r['denied_after_group_revoke']}/"
                   f"{r['group_denies_expected']}", flush=True)
+
+    # Figure 13 (extension): chunk replication durability
+    for r in fig13_durability.run(n_files=12 if args.quick else 24,
+                                  passes=2):
+        rows.append(r)
+        if r["mode"] == "kill_stripe":
+            print(f"fig13_kill_stripe_n{r['n_files']},"
+                  f"{round(r['stream_seconds'] * 1e6 / r['n_files'], 1)},"
+                  f"errors={r['client_errors']} bad={r['data_bad']} "
+                  f"failovers={r['read_failovers']} "
+                  f"hedged={r['hedged_reads']}", flush=True)
+        elif r["mode"] == "slow_replica":
+            print(f"fig13_slow_replica_n{r['n_files']},"
+                  f"{r['read_p99_ms']}ms_p99,"
+                  f"hedged={r['hedged_reads']} won={r['hedge_wins']} "
+                  f"delay={r['extra_delay_s']}s", flush=True)
+        else:
+            print(f"fig13_scrub_repair_n{r['n_files']},"
+                  f"{round(r['repair_seconds'] * 1e6, 1)},"
+                  f"under={r['under_replicated_first']}->"
+                  f"{r['under_replicated_after']} "
+                  f"repaired={r['repaired_chunks']} "
+                  f"passes={r['scrub_passes']}", flush=True)
 
     # RPC table (the mechanism itself)
     for r in rpc_table.run():
@@ -310,6 +333,7 @@ def main() -> None:
     # --check CLIs the CI fault-smoke lane runs) so the two never drift
     failures += fig11_failover.check(rows)
     failures += fig12_perms.check(rows)
+    failures += fig13_durability.check(rows)
     if failures:
         for f in failures:
             print(f"VERDICT FAIL: {f}", file=sys.stderr)

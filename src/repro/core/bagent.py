@@ -54,7 +54,7 @@ from .perms import (Credentials, FSError, O_CREAT, PermRecord, R_OK, W_OK,
                     validate_acl, O_TRUNC)
 from .service import MAX_TREE_DEPTH
 from .transport import Transport
-from .wire import (EPOCHSTALE, Message, MsgType, RpcStats,
+from .wire import (EPOCHSTALE, Message, MsgType, RpcStats, chunk_hosts,
                    error as wire_error, ok, pack_batch, stripe_spans,
                    unpack_batch)
 
@@ -88,6 +88,13 @@ DEFAULT_READAHEAD_WINDOW = 512 * 1024
 # epoch mid-write: each retry means ANOTHER truncate interleaved, so more
 # than a handful signals pathological contention, not a transient race
 _EPOCH_RETRIES = 8
+
+# hedged-read default: how long a replicated (r>1) gather waits on the
+# primary replica before duplicating the outstanding CHUNK_READs to the
+# next one — a p99-ish bound for a healthy in-proc/LAN chunk fetch, so a
+# straggling stripe host costs one extra RPC instead of its whole stall.
+# BAgent(hedge_delay_s=...) overrides it per agent.
+DEFAULT_HEDGE_DELAY_S = 0.05
 
 
 def _chunks(items: List, n: int) -> List[List]:
@@ -162,6 +169,32 @@ def _coalesce(extents: List[_Extent]) -> List[_Extent]:
             last.data[e.offset - last.offset : e.end - last.offset] = e.data
         else:
             out.append(e)
+    return out
+
+
+def _subtract_extents(stalled: List[_Extent],
+                      newer: List[_Extent]) -> List[_Extent]:
+    """Punch out of ``stalled`` every byte range covered by ``newer``.
+    Used when restaging extents from a retryable flush failure back into
+    the dirty list: the stalled bytes are OLDER than anything buffered
+    since, and _coalesce's later-splices-over-earlier rule would let them
+    resurface over newer data unless the overlap is removed first."""
+    out: List[_Extent] = []
+    for e in stalled:
+        pieces: List[Tuple[int, bytearray]] = [(e.offset, e.data)]
+        for d in newer:
+            nxt: List[Tuple[int, bytearray]] = []
+            for off, data in pieces:
+                end = off + len(data)
+                if d.end <= off or d.offset >= end:
+                    nxt.append((off, data))
+                    continue
+                if d.offset > off:
+                    nxt.append((off, data[: d.offset - off]))
+                if d.end < end:
+                    nxt.append((d.end, data[d.end - off:]))
+            pieces = nxt
+        out.extend(_Extent(off, data) for off, data in pieces if data)
     return out
 
 
@@ -492,6 +525,14 @@ class FileHandle:
     wb_inflight: bool = False      # a flusher is carrying this handle's data
     wb_closing: bool = False       # closed with unflushed state: flush, then CLOSE
     wb_error: Optional[FSError] = None  # latched flush error (CannyFS-style)
+    # retryable-latch refinement: a flush that died on a TRANSIENT errno
+    # (host unreachable — plausibly mid-failover, awaiting promotion) keeps
+    # its bytes in wb_stalled and marks the latch retryable; the next sync
+    # point (write/fsync/close) clears the latch and restages the bytes for
+    # another flush, which lands once _rpc_recover's config redirect does.
+    # A non-transient failure latches permanent and re-raises as before.
+    wb_retryable: bool = False
+    wb_stalled: List[_Extent] = field(default_factory=list)
 
 
 class BAgent:
@@ -584,6 +625,14 @@ class BAgent:
         self.failover_backoff_cap_s = 0.25
         self.failover_retries = 0    # backoff retries issued
         self.failover_redirects = 0  # retries that switched address
+
+        # replicated-chunk read health (r>1 layouts only): spans whose
+        # CHUNK_READ was duplicated to the next replica by the hedge
+        # timer, spans the hedge answered first, and error-driven
+        # replica-failover waves (a dead primary bridged transparently)
+        self.hedged_reads = 0
+        self.hedge_wins = 0
+        self.read_failovers = 0
 
         # client-cached cluster group-membership table (uid -> extra gids),
         # fetched lazily from the authority host the first time an ACL "g"
@@ -1238,7 +1287,11 @@ class BAgent:
         their file-order slots (zero-padded to the span length — a short
         response is a hole) and ONE join produces the result: on a
         GIL-bound client, minimizing memcpy passes matters as much as
-        overlapping the RPCs."""
+        overlapping the RPCs.  Replicated layouts (r>1) take the hedged/
+        failover path instead."""
+        if min(layout.get("r", 1), len(layout["hosts"])) > 1:
+            return self._gather_replicated(ino, layout, start, end,
+                                           critical=critical)
         n_spans = 0
         per_host: Dict[int, List[Tuple[int, Message]]] = {}
         for idx, host, coff, clen in stripe_spans(layout, start, end):
@@ -1268,6 +1321,134 @@ class BAgent:
             return parts[0]
         return b"".join(parts)  # type: ignore[arg-type]
 
+    def _gather_replicated(self, ino: Inode, layout: Dict, start: int,
+                           end: int, *, critical: bool) -> bytes:
+        """Gather from a replicated (r>1) layout: primary replicas first,
+        a hedge timer (`hedge_delay_s`, default DEFAULT_HEDGE_DELAY_S)
+        duplicating the still-outstanding spans to the next replica —
+        first response wins, the loser's bytes are discarded — and
+        error-driven failover to the next replica the moment a replica
+        errors, so a dead stripe host is a latency blip, not an outage.
+
+        Winner rule (stale-copy safety): an absent or short chunk reads
+        as a truncated payload — a hole — but a hole is indistinguishable
+        from an under-replicated copy on a host that rejoined before the
+        scrubber repaired it (the primary included: a restart makes it no
+        more authoritative than any replica).  So only a FULL-length
+        response may win a span immediately; every short response is kept
+        as a last-resort fallback, and only once ALL replicas have
+        answered or failed does the longest fallback zero-pad the span —
+        a genuinely sparse span costs a full fan-out, a stale short copy
+        never shadows a complete one.  EIO only when ALL replicas of some
+        span failed."""
+        spans = list(stripe_spans(layout, start, end))
+        n = len(spans)
+        r = min(layout.get("r", 1), len(layout["hosts"]))
+        cond = threading.Condition()
+        results: List[Optional[bytes]] = [None] * n
+        fallback: List[Optional[bytes]] = [None] * n
+        filled = [False] * n
+        state = {"remaining": n, "active": 0, "errors": 0, "failover": False}
+
+        def attempt(rank: int) -> None:
+            try:
+                per_host: Dict[int, List[Tuple[int, Message]]] = {}
+                with cond:
+                    todo = [i for i in range(n) if not filled[i]]
+                for i in todo:
+                    idx, _, coff, clen = spans[i]
+                    per_host.setdefault(chunk_hosts(layout, idx)[rank],
+                                        []).append((i, Message(
+                                            MsgType.CHUNK_READ, {
+                                                "home": ino.host_id,
+                                                "file_id": ino.file_id,
+                                                "index": idx,
+                                                "offset": coff,
+                                                "length": clen})))
+
+                def fetch(host: int, items) -> None:
+                    resps = self._rpc_many(host, [m for _, m in items],
+                                           critical=critical)
+                    with cond:
+                        for (slot, m), resp in zip(items, resps):
+                            if resp.type is MsgType.ERROR:
+                                state["errors"] += 1
+                                state["failover"] = True
+                                cond.notify_all()
+                                continue
+                            want = m.header["length"]
+                            p = bytes(resp.payload)  # own the bytes NOW
+                            if len(p) < want:
+                                # hole OR unrepaired stale copy: fallback
+                                # of last resort, never an immediate win
+                                fb = fallback[slot]
+                                if fb is None or len(p) > len(fb):
+                                    fallback[slot] = p
+                                continue
+                            if not filled[slot]:
+                                filled[slot] = True
+                                results[slot] = p
+                                state["remaining"] -= 1
+                                if rank > 0:
+                                    self.hedge_wins += 1
+                                cond.notify_all()
+
+                self._fanout_hosts(per_host, fetch)
+            except Exception:
+                # a whole-attempt failure (transport raise) is just "this
+                # rank lost" for its spans: flag it so the orchestrator
+                # fails over instead of letting the hedge timer run out
+                with cond:
+                    state["errors"] += 1
+                    state["failover"] = True
+            finally:
+                with cond:
+                    state["active"] -= 1
+                    cond.notify_all()
+
+        def launch(rank: int) -> None:
+            state["active"] += 1
+            threading.Thread(target=attempt, args=(rank,),
+                             daemon=True).start()
+
+        hedge = (self.hedge_delay_s if self.hedge_delay_s is not None
+                 else DEFAULT_HEDGE_DELAY_S)
+        with cond:
+            launch(0)
+            for rank in range(1, r):
+                deadline = time.monotonic() + hedge
+                while state["remaining"] > 0 and not state["failover"]:
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        break
+                    cond.wait(left)
+                if state["remaining"] == 0:
+                    break
+                if state["failover"]:
+                    state["failover"] = False
+                    self.read_failovers += 1
+                else:
+                    self.hedged_reads += state["remaining"]
+                launch(rank)
+            # every rank launched (or results complete): wait out the
+            # attempts that still matter, WITHOUT joining losers — a slow
+            # straggler must not stall the read its hedge already won
+            while state["remaining"] > 0 and state["active"] > 0:
+                cond.wait()
+            out: List[bytes] = []
+            for i in range(n):
+                if filled[i]:
+                    out.append(results[i])  # type: ignore[arg-type]
+                elif fallback[i] is not None:
+                    want = spans[i][3]
+                    fb = fallback[i]
+                    out.append(fb + bytes(want - len(fb)))
+                else:
+                    raise err(errno.EIO,
+                              f"all {r} replicas of chunk {spans[i][0]} "
+                              "failed")
+        return out[0] if len(out) == 1 else b"".join(out)
+
     def _scatter_chunks(self, ino: Inode, layout: Dict,
                         extents: List[Tuple[int, bytes]], *,
                         critical: bool, epoch: int = 0) -> None:
@@ -1286,7 +1467,11 @@ class BAgent:
         is unordered (the unstriped path's per-call atomicity is a
         single-server artifact striping gives up), but such a torn gather
         can never be SERVED later: the commit's revoke bumps the reader's
-        generation, so its fill is discarded."""
+        generation, so its fill is discarded.  Replicated layouts (r>1)
+        take the write-quorum fan-out path instead."""
+        if min(layout.get("r", 1), len(layout["hosts"])) > 1:
+            return self._scatter_replicated(ino, layout, extents,
+                                            critical=critical, epoch=epoch)
         per_host: Dict[int, List[Message]] = {}
         for eoff, edata in extents:
             # zero-copy scatter: each CHUNK_WRITE carries a memoryview
@@ -1310,6 +1495,57 @@ class BAgent:
                     raise self._wire_err(r)
 
         self._fanout_hosts(per_host, send)
+
+    def _scatter_replicated(self, ino: Inode, layout: Dict,
+                            extents: List[Tuple[int, bytes]], *,
+                            critical: bool, epoch: int = 0) -> None:
+        """Scatter to a replicated (r>1) layout: every chunk-write unit
+        fans out to ALL of its chunk's replica hosts (same zero-copy
+        memoryview payload, one header dict per copy), and the scatter
+        succeeds only with a write quorum of W = r//2 + 1 acks per unit —
+        a majority of live copies, so a hedged read that loses the
+        primary still finds a full copy, and the scrubber can tell a
+        torn minority apart from the committed majority.  An EPOCHSTALE
+        refusal from ANY replica outranks a quorum failure: the caller
+        must re-plan at the newer epoch, not shrink the quorum."""
+        n_units = 0
+        per_host: Dict[int, List[Tuple[int, Message]]] = {}
+        for eoff, edata in extents:
+            ev = edata if type(edata) is memoryview else memoryview(edata)
+            for idx, _, coff, clen in stripe_spans(layout, eoff,
+                                                   eoff + len(edata)):
+                pos = idx * layout["ss"] + coff
+                payload = ev[pos - eoff : pos - eoff + clen]
+                for host in chunk_hosts(layout, idx):
+                    per_host.setdefault(host, []).append(
+                        (n_units, Message(
+                            MsgType.CHUNK_WRITE,
+                            {"home": ino.host_id, "file_id": ino.file_id,
+                             "index": idx, "offset": coff, "epoch": epoch},
+                            payload)))
+                n_units += 1
+        r = min(layout.get("r", 1), len(layout["hosts"]))
+        w = r // 2 + 1
+        acks = [0] * n_units
+        stale: List[Message] = []
+        lock = threading.Lock()
+
+        def send(host: int, items) -> None:
+            resps = self._rpc_many(host, [m for _, m in items],
+                                   critical=critical)
+            with lock:
+                for (unit, _), resp in zip(items, resps):
+                    if resp.type is MsgType.ERROR:
+                        if resp.header.get("errno") == EPOCHSTALE:
+                            stale.append(resp)
+                        continue
+                    acks[unit] += 1
+
+        self._fanout_hosts(per_host, send)
+        if stale:
+            raise self._wire_err(stale[0])
+        if any(a < w for a in acks):
+            raise err(errno.EIO, f"write quorum {w}/{r} not met")
 
     def _scatter_with_retry(self, ino: Inode, layout: Dict,
                             extents: List[Tuple[int, bytes]], *,
@@ -1574,6 +1810,9 @@ class BAgent:
         have the server flush object data + metadata to disk (FSYNC verb).
         On a synchronous agent only the server-side FSYNC remains."""
         fh = self._fh(fd)
+        if self.write_behind:
+            with self._wb_cond:
+                self._wb_restage(fh)
         self._wb_drain_key(_ino_key(fh.ino))
         e = self._take_latched(fh)
         if e is not None:
@@ -1653,6 +1892,7 @@ class BAgent:
     # ------------------------------------------------------------------
     def _wb_write(self, fh: FileHandle, data: bytes) -> int:
         with self._wb_cond:
+            self._wb_restage(fh)
             e, fh.wb_error = fh.wb_error, None
             if e is not None:
                 raise e  # latched flush failure: this is the next sync point
@@ -1673,6 +1913,7 @@ class BAgent:
 
     def _wb_close(self, fh: FileHandle) -> None:
         with self._wb_cond:
+            self._wb_restage(fh)
             e, fh.wb_error = fh.wb_error, None
             if e is not None:
                 # broken handle: drop its buffered data and report now
@@ -1736,6 +1977,35 @@ class BAgent:
         with self._wb_cond:
             e, fh.wb_error = fh.wb_error, None
         return e
+
+    def _wb_restage(self, fh: FileHandle) -> None:
+        """Clear a RETRYABLE latched flush error and put its stalled
+        extents back on the dirty list (newer buffered data punched out
+        first — restaged bytes are older and must never win an overlap).
+        Called at every sync point BEFORE the latch is inspected, so a
+        transient failure (dead home awaiting promotion) turns into a
+        retried flush instead of a surfaced error.  A permanent latch
+        (wb_retryable False) is left for the caller to re-raise.
+        Caller holds _wb_cond."""
+        if not fh.wb_retryable:
+            return
+        fh.wb_error = None
+        fh.wb_retryable = False
+        stalled, fh.wb_stalled = fh.wb_stalled, []
+        # "newer" = buffered dirty extents AND extents riding a flush still
+        # in flight — the per-host flusher is sequential, so anything in
+        # flight was snapshotted after the stalled job failed.  If that
+        # flight fails transiently its extents rejoin wb_stalled intact;
+        # if it lands, the punched-out ranges were exactly right.
+        newer = list(fh.dirty)
+        for j in self._wb_inflight_jobs.get(_ino_key(fh.ino), []):
+            newer.extend(j.extents)
+        stalled = _subtract_extents(stalled, newer)
+        if stalled:
+            fh.dirty[:0] = stalled
+            self._wb_dirty_bytes += sum(len(x.data) for x in stalled)
+        if stalled or fh.pending_trunc:
+            self._wb_register(fh)
 
     def _flusher_loop(self, host: int) -> None:
         """One flusher per host: snapshot every pending handle's extents
@@ -2054,6 +2324,11 @@ class BAgent:
                 if e is None:
                     if j.trunc:
                         fh.pending_trunc = False
+                    if fh.wb_stalled and j.extents:
+                        # newer bytes just LANDED: the stalled (older)
+                        # extents must never overwrite them when restaged
+                        fh.wb_stalled = _subtract_extents(fh.wb_stalled,
+                                                          j.extents)
                 else:
                     if j.first_sub_failed and "incomplete_open" in j.io_h:
                         # the deferred open record never landed: restore the
@@ -2064,6 +2339,15 @@ class BAgent:
                         self.async_errors += 1  # nobody left to re-raise to
                     else:
                         fh.wb_error = e
+                        # transient errno (host dead / awaiting promotion):
+                        # keep the bytes — the next sync point restages
+                        # them and the retried flush follows the promoted
+                        # standby's redirect.  Anything else is permanent:
+                        # the latch re-raises and the bytes are gone.
+                        fh.wb_retryable = e.errno in _TRANSIENT_ERRNOS
+                        if fh.wb_retryable:
+                            fh.wb_stalled = _subtract_extents(
+                                fh.wb_stalled, j.extents) + list(j.extents)
                 if not fh.dirty:  # no new writes arrived during the flush
                     self._wb_unregister(fh)
                     if fh.wb_closing:

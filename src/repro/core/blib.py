@@ -157,7 +157,7 @@ class BLib:
     def io_stats(self) -> dict:
         """RPC counters of the underlying agent (critical path, per-type,
         per-host fan-out) — what the paper benchmarks report on — plus the
-        agent's epoch-retry and failover-retry counts and, under
+        agent's epoch-retry, failover-retry and hedged-read counts and, under
         ``servers``, each BServer's health counters: forced lease breaks,
         outstanding unlink chunk-reap failures (orphan debt the scrubber
         drains back to zero), EPOCHSTALE rejections served, and the
@@ -167,6 +167,9 @@ class BLib:
         snap["epoch_retries"] = self.agent.epoch_retries
         snap["failover_retries"] = self.agent.failover_retries
         snap["failover_redirects"] = self.agent.failover_redirects
+        snap["hedged_reads"] = self.agent.hedged_reads
+        snap["hedge_wins"] = self.agent.hedge_wins
+        snap["read_failovers"] = self.agent.read_failovers
         servers = getattr(self.agent.cluster, "servers", None)
         if servers:
             snap["servers"] = {
@@ -174,6 +177,8 @@ class BLib:
                       "chunk_reap_failures": srv.chunk_reap_failures,
                       "epoch_rejects": srv.epoch_rejects,
                       "scrub_failures": srv.scrub_failures,
+                      "under_replicated": srv.under_replicated,
+                      "repaired_chunks": srv.repaired_chunks,
                       **srv.repl_stats()}
                 for hid, srv in servers.items()
             }

@@ -31,6 +31,7 @@ import json
 import os
 import threading
 import time
+import zlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
@@ -41,7 +42,8 @@ from .perms import (FSError, PermRecord, S_IFDIR, S_IFREG, normalize_groups,
 from .repl import ReplicaStore, ReplicationLog
 from .service import MAX_TREE_DEPTH, SERVER_OPS
 from .transport import Transport
-from .wire import EPOCHSTALE, Message, MsgType, error, ok, stripe_spans
+from .wire import (EPOCHSTALE, Message, MsgType, chunk_hosts, error, ok,
+                   stripe_spans)
 
 
 @dataclass
@@ -222,6 +224,19 @@ class BServer:
         # to see that its hygiene loop is broken (same discipline as the
         # agent's async_errors)
         self.scrub_failures = 0
+        # chunk-replication health (r>1 layouts): missing replica copies
+        # detected in the LAST scrub pass (a gauge — repair converges it
+        # to zero) and copies successfully re-replicated from here, ever
+        self.under_replicated = 0
+        self.repaired_chunks = 0
+        # peer heartbeat probing: last monotonic instant each peer
+        # answered a HEARTBEAT probe sent from this server.  The cluster's
+        # auto-promote monitor polls this view (HEARTBEAT {"view": true})
+        # to gather its quorum of observers.
+        self._hb_seen: Dict[int, float] = {}
+        self._hb_stop = threading.Event()
+        self._hb_interval: Optional[float] = None
+        self.heartbeats_sent = 0
         self._stopped = False
         self.scrub_interval = scrub_interval
         self._scrub_stop = threading.Event()
@@ -326,6 +341,7 @@ class BServer:
 
     def shutdown(self) -> None:
         self._scrub_stop.set()
+        self._hb_stop.set()
         if self._repl is not None:
             self._repl.stop()
         with self._lock:
@@ -352,6 +368,13 @@ class BServer:
             # the stripe-host epoch latch is volatile too; the home host's
             # persisted per-file epoch is what stale commits die against
             self._chunk_epochs.clear()
+            # staged replicas of OTHER homes are dropped like any volatile
+            # state: a real reboot loses the in-memory handle.  What makes
+            # this cheap instead of catastrophic is the ReplicaStore's
+            # persisted repl_state.json — the store lazily rebuilt by the
+            # next REPL_APPEND reloads it and resumes incrementally, so a
+            # standby reboot no longer forces a full snapshot resync.
+            self._replicas.clear()
             if os.path.exists(self._meta_path):
                 self._load_meta()
             self._stopped = False
@@ -369,6 +392,46 @@ class BServer:
         # incarnation now serves
         if self._repl is not None:
             self.start_replication(self._repl.target_host)
+        if self._hb_interval is not None:
+            self.start_heartbeats(self._hb_interval)
+
+    def start_heartbeats(self, interval_s: float) -> None:
+        """Probe every peer with a HEARTBEAT frame each `interval_s` on a
+        background thread, recording the last instant each answered.
+        Idempotent: a restart (or reconfiguration) replaces the thread."""
+        self._hb_stop.set()
+        self._hb_stop = threading.Event()
+        self._hb_interval = interval_s
+        stop = self._hb_stop
+        # seed the view so "never answered yet" ages from thread start,
+        # not from the epoch — a freshly booted cluster must not look
+        # like every peer has been dead forever
+        now = time.monotonic()
+        if self.peers is not None:
+            for peer in self.peers.hosts():
+                if peer != self.host_id:
+                    self._hb_seen.setdefault(peer, now)
+
+        def loop() -> None:
+            while not stop.wait(interval_s):
+                if self._stopped or self.peers is None:
+                    continue
+                for peer in self.peers.hosts():
+                    if peer == self.host_id:
+                        continue
+                    try:
+                        resp = self.transport.request(
+                            self.peers.addr(peer),
+                            Message(MsgType.HEARTBEAT,
+                                    {"home": self.host_id}))
+                    except Exception:
+                        continue
+                    self.heartbeats_sent += 1
+                    if resp.type is not MsgType.ERROR:
+                        self._hb_seen[peer] = time.monotonic()
+
+        threading.Thread(target=loop, name=f"hb-{self.host_id}",
+                         daemon=True).start()
 
     def _start_scrub_worker(self) -> None:
         """Periodic scrubber: every `scrub_interval` seconds run one scrub
@@ -609,7 +672,7 @@ class BServer:
         new EOF is clipped, chunks below it are untouched.  Physical
         clipping matters: a later extend-write must read the reclaimed
         range as zeros, not as resurrected pre-truncate bytes."""
-        ss, hosts = layout["ss"], layout["hosts"]
+        ss = layout["ss"]
         plan: Dict[int, List[List[int]]] = {}
         for idx in range((old_size + ss - 1) // ss):
             start = idx * ss
@@ -619,16 +682,24 @@ class BServer:
                 op = [idx, new_size - start]
             else:
                 continue
-            plan.setdefault(hosts[idx % len(hosts)], []).append(op)
+            # every replica holds the chunk, so every replica gets the clip
+            for host in chunk_hosts(layout, idx):
+                plan.setdefault(host, []).append(op)
         return plan
 
     @staticmethod
     def _chunk_indices_by_host(layout: Dict, size: int
                                ) -> Dict[int, List[int]]:
-        ss, hosts = layout["ss"], layout["hosts"]
+        """Which chunk indices each host holds (ALL replicas, not just
+        primaries): the unlink-reap and fsync fan-outs cover every copy,
+        and the reap debt recorded for an unreachable host covers the
+        replica copies it held too — without this, k-1 orphan copies of
+        every chunk would leak forever."""
+        ss = layout["ss"]
         out: Dict[int, List[int]] = {}
         for idx in range((size + ss - 1) // ss):
-            out.setdefault(hosts[idx % len(hosts)], []).append(idx)
+            for host in chunk_hosts(layout, idx):
+                out.setdefault(host, []).append(idx)
         return out
 
     def _inode(self, file_id: int) -> int:
@@ -781,7 +852,11 @@ class BServer:
         if self._stopped:
             return error(errno.ECONNREFUSED, "server stopped")
         stale = self._check_version(msg.header)
-        if stale is not None and msg.type is not MsgType.PING:
+        # PING and HEARTBEAT answer regardless of the sender's incarnation
+        # belief: both exist precisely so a peer with a stale config can
+        # re-learn the live version / observe liveness
+        if stale is not None and msg.type not in (MsgType.PING,
+                                                  MsgType.HEARTBEAT):
             return stale
         return SERVER_OPS.dispatch(self, msg)
 
@@ -1835,7 +1910,8 @@ class BServer:
         bytes_clipped, plus scrub_errors for hosts that could not be
         reached (their work is left alone and retried next pass)."""
         counts = {"orphans_reaped": 0, "chunks_clipped": 0,
-                  "bytes_clipped": 0, "scrub_errors": 0}
+                  "bytes_clipped": 0, "scrub_errors": 0,
+                  "under_replicated": 0, "repaired_chunks": 0}
         with self._lock:
             pending = dict(self._reap_pending)
         for (host, fid), idxs in sorted(pending.items()):
@@ -1873,7 +1949,96 @@ class BServer:
                 # trailing bytes are gone and no stale scatter can redo them
                 counts["chunks_clipped"] += resp.header.get("chunks_clipped", 0)
                 counts["bytes_clipped"] += resp.header.get("bytes_clipped", 0)
+                layout = resp.header.get("layout")
+                if layout is not None:
+                    self._repair_replicas(home, fid, layout,
+                                          resp.header.get("size", 0),
+                                          resp.header.get("epoch", 0),
+                                          chunks, counts)
+        # standing health counters: the gauge is THIS pass's missing-copy
+        # count (a healthy cluster converges it to 0), repairs accumulate
+        with self._lock:
+            self.under_replicated = counts["under_replicated"]
+            self.repaired_chunks += counts["repaired_chunks"]
         return counts
+
+    def _repair_replicas(self, home: int, fid: int, layout: Dict,
+                         size: int, epoch: int,
+                         chunks: List[Tuple[int, int]],
+                         counts: Dict[str, int]) -> None:
+        """Re-replicate missing/divergent copies of chunks THIS host holds.
+        For each local chunk, CHUNK_STAT the other members of its replica
+        set (length + crc32 of our copy's prefix) and push our copy
+        (CHUNK_WRITE at the epoch the home just vouched for) to peers
+        holding less than we do.  Authority rules:
+
+          * a peer SHORTER than us is under-replicated, full stop —
+            committed writes only grow a chunk within an epoch (truncates
+            bump it and clip everywhere), so the longer copy is the newer
+            one and is pushed unconditionally;
+          * a peer of EQUAL-OR-GREATER length whose prefix checksum
+            diverges from ours is ambiguous: we push only when our bytes
+            agree with a write quorum of the replica set (ourselves + W-1
+            checksum-matching peers) — a stale rejoined host can never
+            out-vote the surviving majority and smear its bytes back.
+
+        The push is fenced twice: the bytes are re-read AFTER the home's
+        clip fan-out (so they never exceed the committed size), and the
+        receiving host's epoch latch refuses the write if a newer truncate
+        passed it in the meantime — repair can delay convergence, never
+        resurrect clipped bytes."""
+        ss = layout["ss"]
+        for idx, _ in sorted(chunks):
+            replicas = chunk_hosts(layout, idx)
+            if self.host_id not in replicas:
+                continue  # not ours to guard (layout moved under us)
+            allowed = min(max(size - idx * ss, 0), ss)
+            if allowed <= 0:
+                continue
+            with self._chunk_lock(home, fid, idx):
+                try:
+                    with open(self._chunk_path(home, fid, idx), "rb") as f:
+                        data = f.read(allowed)
+                except OSError:
+                    continue  # reaped since the scan: nothing to push
+            if not data:
+                continue
+            csum = zlib.crc32(data)
+            short: List[int] = []
+            divergent: List[int] = []
+            matching = 0
+            for peer in replicas:
+                if peer == self.host_id:
+                    continue
+                resp = self._request_host(peer, Message(MsgType.CHUNK_STAT, {
+                    "home": home, "file_id": fid, "index": idx,
+                    "length": len(data)}))
+                if resp.type is MsgType.ERROR:
+                    counts["scrub_errors"] += 1
+                elif resp.header.get("clen", -1) < len(data):
+                    short.append(peer)
+                elif resp.header.get("csum") != csum:
+                    divergent.append(peer)
+                else:
+                    matching += 1
+            quorum = len(replicas) // 2 + 1
+            if divergent and 1 + matching < quorum:
+                # our bytes lack a quorum behind them: we may BE the stale
+                # copy — flag the divergence, let the majority's pass fix it
+                counts["under_replicated"] += len(divergent)
+                divergent = []
+            for peer in short + divergent:
+                counts["under_replicated"] += 1
+                resp = self._request_host(peer, Message(
+                    MsgType.CHUNK_WRITE,
+                    {"home": home, "file_id": fid, "index": idx,
+                     "offset": 0, "epoch": epoch}, data))
+                if resp.type is MsgType.ERROR:
+                    # EPOCHSTALE (a truncate won the race) or unreachable:
+                    # leave it for the next pass, the gauge stays nonzero
+                    counts["scrub_errors"] += 1
+                else:
+                    counts["repaired_chunks"] += 1
 
     @SERVER_OPS.register(MsgType.SCRUB, mutating=True)
     def _op_scrub(self, h: Dict, _p: bytes) -> Message:
@@ -1914,6 +2079,7 @@ class BServer:
                     self._reap_pending.pop((requester, fid), None)
                     return ok({"dead": True})
                 size, ss = m.size, m.layout["ss"]
+                layout, cur_epoch = m.layout, m.epoch
                 ops: List[List[int]] = []
                 bytes_clipped = 0
                 for idx, clen in h["chunks"]:
@@ -1923,7 +2089,7 @@ class BServer:
                         bytes_clipped += clen - allowed
                 if ops:
                     m.epoch += 1
-                    epoch = m.epoch
+                    epoch = cur_epoch = m.epoch
             if ops:
                 failed = self._fanout_chunks({requester: Message(
                     MsgType.CHUNK_TRUNC,
@@ -1934,8 +2100,19 @@ class BServer:
                 with self._lock:
                     self._persist()  # the epoch bump persists like a size
                     self._jmeta(fid)
-        return ok({"dead": False, "chunks_clipped": len(ops),
-                   "bytes_clipped": bytes_clipped})
+        hdr = {"dead": False, "chunks_clipped": len(ops),
+               "bytes_clipped": bytes_clipped}
+        if layout.get("r", 1) > 1:
+            # replicated layout: hand the requester everything its repair
+            # scan needs — the replica sets, the committed size (so a hole
+            # is never "repaired" into existence) and the current chunk
+            # epoch (so a repair push into a host that saw a newer
+            # truncate dies EPOCHSTALE instead of resurrecting clipped
+            # bytes)
+            hdr["layout"] = layout
+            hdr["size"] = size
+            hdr["epoch"] = cur_epoch
+        return ok(hdr)
 
     # NOTE: the Lustre baseline verbs (OPEN_RECORD, READ_INLINE) register
     # into the same SERVER_OPS registry from repro.core.baselines — the
@@ -1944,6 +2121,42 @@ class BServer:
     @SERVER_OPS.register(MsgType.PING)
     def _op_ping(self, h: Dict, _p: bytes) -> Message:
         return ok({"host_id": self.host_id, "version": self.version})
+
+    @SERVER_OPS.register(MsgType.HEARTBEAT)
+    def _op_heartbeat(self, h: Dict, _p: bytes) -> Message:
+        """Liveness probe (answered regardless of the sender's incarnation
+        belief — see handle()).  With {"view": true} the response carries
+        this server's per-peer last-seen ages in seconds, the raw material
+        of the monitor's quorum vote."""
+        hdr: Dict = {"host_id": self.host_id, "version": self.version}
+        if h.get("view"):
+            now = time.monotonic()
+            hdr["hb_seen"] = {str(p): now - t
+                              for p, t in dict(self._hb_seen).items()}
+        return ok(hdr)
+
+    @SERVER_OPS.register(MsgType.CHUNK_STAT)
+    def _op_chunk_stat(self, h: Dict, _p: bytes) -> Message:
+        """Blind storage probe: the byte length this host holds for one
+        chunk object, -1 when absent (a hole or a missing replica copy —
+        the caller knows which, because it holds its own copy).  With
+        "length" N in the request the response also carries "csum", the
+        crc32 of the first min(clen, N) bytes, so the scrubber can tell a
+        divergent same-length copy from a healthy one."""
+        home, fid, idx = h["home"], h["file_id"], h["index"]
+        hdr: Dict = {"index": idx}
+        path = self._chunk_path(home, fid, idx)
+        want = h.get("length")
+        with self._chunk_lock(home, fid, idx):
+            try:
+                hdr["clen"] = os.path.getsize(path)
+                with open(path, "rb") as f:
+                    hdr["csum"] = zlib.crc32(
+                        f.read() if want is None else f.read(want))
+            except OSError:
+                hdr["clen"] = -1
+                hdr.pop("csum", None)
+        return ok(hdr)
 
     # --- introspection ---------------------------------------------------
     def opened_count(self) -> int:

@@ -79,6 +79,13 @@ class BuffetCluster:
     n_servers: int = 4
     transport: Transport = None  # type: ignore[assignment]
     latency: Optional[LatencyModel] = None
+    # chunk replication factor: striped files place every chunk on
+    # `replicas` hosts (primary + the next r-1 clockwise on the layout
+    # ring), the scatter path requires a write quorum, reads hedge/fail
+    # over between copies, and the scrubber re-replicates missing copies.
+    # replicas=1 (default) keeps the original single-copy placement and
+    # byte-identical RPC behavior; replicas=2 is the recommended
+    # durability setting.
     replicas: int = 1
     fsync_policy: str = "none"
     # data-plane striping policy: files created while stripe_count > 1 get
@@ -101,9 +108,26 @@ class BuffetCluster:
     # force-breaking, and a promoted standby fences its first mutation
     # behind one TTL
     lease_ttl_s: float = 5.0
+    # heartbeat failure detection: when set, every server probes its peers
+    # with HEARTBEAT frames on a background thread at this period, and the
+    # cluster (with auto_promote=True) runs a monitor that declares a host
+    # dead — and drives the existing promote() — only after
+    # heartbeat_misses consecutive missed beats AND a quorum of observers
+    # (n//2 + 1, counting the monitor itself) agreeing the host is gone.
+    # The quorum is what makes a partitioned observer safe: cut off from
+    # the majority it can gather at most a minority of votes, so it never
+    # promotes a healthy host it merely cannot see.
+    heartbeat_interval_s: Optional[float] = None
+    auto_promote: bool = False
+    heartbeat_misses: int = 3
     servers: Dict[int, BServer] = field(default_factory=dict)
     config: ClusterConfig = field(default_factory=ClusterConfig)
     root_ino: int = 0
+    # monitor observability: promotions the monitor drove, promotions it
+    # attempted that raised, and dead-host declarations vetoed by quorum
+    auto_promotes: int = 0
+    auto_promote_failures: int = 0
+    quorum_vetoes: int = 0
 
     def __post_init__(self) -> None:
         if self.transport is None:
@@ -132,6 +156,15 @@ class BuffetCluster:
             for host_id, srv in self.servers.items():
                 srv.start_replication(self.replica_host(host_id))
         self.root_ino = self.servers[0].make_root().pack()
+        self._monitor_stop = threading.Event()
+        self._monitor: Optional[threading.Thread] = None
+        if self.heartbeat_interval_s is not None and self.n_servers > 1:
+            for srv in self.servers.values():
+                srv.start_heartbeats(self.heartbeat_interval_s)
+            if self.auto_promote:
+                self._monitor = threading.Thread(
+                    target=self._monitor_loop, name="hb-monitor", daemon=True)
+                self._monitor.start()
 
     # --- placement -----------------------------------------------------
     def place_dir(self, path: str) -> int:
@@ -160,7 +193,16 @@ class BuffetCluster:
             h = (start + i) % self.n_servers
             if h != home:
                 hosts.append(h)
-        return {"ss": self.stripe_size, "hosts": hosts}
+        layout = {"ss": self.stripe_size, "hosts": hosts}
+        # replication factor rides in the layout record itself (chunk i's
+        # replica j lives on hosts[(i + j) % k] — a rotation offset on the
+        # same path-hash ring), so every party that can read the dentry
+        # knows the full replica set with zero extra RPCs.  Omitted at
+        # r=1: pre-PR-9 layouts stay byte-identical.
+        r = min(self.replicas, len(hosts))
+        if r > 1:
+            layout["r"] = r
+        return layout
 
     def replica_host(self, host_id: int, k: int = 1) -> int:
         return (host_id + k) % self.n_servers
@@ -203,7 +245,74 @@ class BuffetCluster:
             if target == standby_id:
                 target = self.replica_host(dead_host_id, 2)
             srv.start_replication(target)
+        if self.heartbeat_interval_s is not None and self.n_servers > 1:
+            srv.start_heartbeats(self.heartbeat_interval_s)
         return srv.version
+
+    # --- heartbeat monitor (auto-promote) --------------------------------
+    def _hb_request(self, host_id: int, header: Optional[Dict] = None
+                    ) -> Optional[Dict]:
+        """One HEARTBEAT round trip to `host_id`; None if unreachable."""
+        try:
+            resp = self.transport.request(
+                self.config.addr(host_id),
+                Message(MsgType.HEARTBEAT, dict(header or {})))
+        except OSError:
+            return None
+        if resp.type is MsgType.ERROR:
+            return None
+        return resp.header
+
+    def _monitor_loop(self) -> None:
+        """Declare hosts dead and drive promote() — with a quorum check.
+
+        A host D is promoted only when (a) the monitor's own probes have
+        missed `heartbeat_misses` beats in a row AND (b) at least
+        n//2 + 1 observers — the monitor plus peers whose HEARTBEAT view
+        reports D unseen for >= misses*interval — agree.  A monitor on
+        the wrong side of a partition fails (b): the peers it can still
+        reach keep seeing D, so the vote stays in the minority and the
+        healthy host is never usurped."""
+        interval = float(self.heartbeat_interval_s or 1.0)
+        stale_after = self.heartbeat_misses * interval
+        quorum = self.n_servers // 2 + 1
+        misses: Dict[int, int] = {}
+        while not self._monitor_stop.wait(interval):
+            for host_id in self.config.hosts():
+                if self._hb_request(host_id) is not None:
+                    misses[host_id] = 0
+                    continue
+                misses[host_id] = misses.get(host_id, 0) + 1
+                if misses[host_id] < self.heartbeat_misses:
+                    continue
+                votes = 1  # the monitor itself
+                for peer in self.config.hosts():
+                    if peer == host_id:
+                        continue
+                    view = self._hb_request(peer, {"view": True})
+                    if view is None:
+                        continue
+                    age = view.get("hb_seen", {}).get(str(host_id))
+                    if age is not None and age >= stale_after:
+                        votes += 1
+                if votes < quorum:
+                    self.quorum_vetoes += 1
+                    continue
+                try:
+                    self.promote(host_id)
+                    self.auto_promotes += 1
+                    misses[host_id] = 0
+                except Exception:
+                    # promotion is retried on the next tick; a standby
+                    # that cannot promote (no replication) must not kill
+                    # the monitor thread
+                    self.auto_promote_failures += 1
+
+    def stop_monitor(self) -> None:
+        self._monitor_stop.set()
+        if self._monitor is not None:
+            self._monitor.join(timeout=5.0)
+            self._monitor = None
 
     def ping(self, host_id: int) -> Dict:
         resp = self.transport.request(self.config.addr(host_id),
@@ -219,6 +328,7 @@ class BuffetCluster:
         raise ConnectionError(f"host {host_id} unreachable")
 
     def shutdown(self) -> None:
+        self.stop_monitor()
         for srv in self.servers.values():
             srv.shutdown()
 

@@ -247,7 +247,18 @@ class ReplicaStore:
     records apply straight into `<dir>/objs` using the same object/chunk
     file naming as `BServer`, so `materialize()` only has to write
     `meta.json` to turn the replica into a loadable backing directory.
+
+    The staged state is CRASH-PERSISTENT: every applied batch checkpoints
+    the metadata dicts together with `applied`/`hver` to
+    `repl_state.json` (tmp + fsync + replace, beside where meta.json will
+    land), and a store rebuilt after a standby reboot reloads it — so the
+    home's next REPL_APPEND continues incrementally from `applied + 1`
+    instead of tripping the resync path and re-shipping a full snapshot.
+    (The object/chunk bytes were already on disk under `objs/`; it was
+    only this index that used to be memory-only.)
     """
+
+    STATE_FILE = "repl_state.json"
 
     def __init__(self, home: int, root_dir: str) -> None:
         self.home = home
@@ -265,6 +276,44 @@ class ReplicaStore:
         self.groups: Dict = {}
         self.gver = 0
         self.records_applied = 0
+        self._load_state()
+
+    # --- crash persistence ---------------------------------------------
+    def _state_path(self) -> str:
+        return os.path.join(self.dir, self.STATE_FILE)
+
+    def _load_state(self) -> None:
+        try:
+            with open(self._state_path()) as f:
+                blob = json.load(f)
+        except (OSError, ValueError):
+            return  # fresh standby (or torn tmp file): start from nothing
+        self.applied = blob.get("applied", -1)
+        self.hver = blob.get("hver", 0)
+        self.next_file_id = blob.get("next_file_id", 0)
+        self.meta = {int(f): m for f, m in blob.get("meta", {}).items()}
+        self.dirs = {int(f): es for f, es in blob.get("dirs", {}).items()}
+        self.groups = dict(blob.get("groups", {}))
+        self.gver = blob.get("gver", 0)
+        self.records_applied = blob.get("records_applied", 0)
+
+    def _save_state_locked(self) -> None:
+        blob = {
+            "applied": self.applied,
+            "hver": self.hver,
+            "next_file_id": self.next_file_id,
+            "meta": {str(f): m for f, m in self.meta.items()},
+            "dirs": {str(f): es for f, es in self.dirs.items()},
+            "groups": dict(self.groups),
+            "gver": self.gver,
+            "records_applied": self.records_applied,
+        }
+        tmp = self._state_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(blob, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._state_path())
 
     # --- apply ---------------------------------------------------------
     def apply_batch(self, seq: int, recs: List[Dict], payload,
@@ -285,6 +334,7 @@ class ReplicaStore:
             elif seq > self.applied + 1:
                 return {"acked": self.applied, "resync": True}
             off = 0
+            advanced = False
             for i, rec in enumerate(recs):
                 plen = rec.get("plen", 0)
                 data = bytes(payload[off:off + plen]) if plen else b""
@@ -294,7 +344,13 @@ class ReplicaStore:
                 self._apply(rec, data)
                 self.applied = seq + i
                 self.records_applied += 1
+                advanced = True
             self.hver = max(self.hver, hver)
+            if advanced:
+                # checkpoint BEFORE acking: the home trims its log up to
+                # the ack, so an acked-but-unpersisted prefix would be
+                # unrecoverable after a standby crash
+                self._save_state_locked()
             return {"acked": self.applied}
 
     def _obj_path(self, fid: int) -> str:
@@ -400,4 +456,11 @@ class ReplicaStore:
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, os.path.join(self.dir, "meta.json"))
+            # the staging checkpoint has served its purpose: the promoted
+            # server owns this directory now, and a stale repl_state.json
+            # must not masquerade as resumable standby state
+            try:
+                os.unlink(self._state_path())
+            except FileNotFoundError:
+                pass
         return self.dir

@@ -137,6 +137,21 @@ class MsgType(IntEnum):
     LOOKUP_GROUPS = 35  # fetch the group table (+ its version `gver`) and
                         # register for its invalidation callbacks — the
                         # group-table twin of LOOKUP_DIR.
+    # --- failure detection / chunk replication (PR 9) ---
+    HEARTBEAT = 36      # server-to-server liveness probe.  Cheaper than PING
+                        # in one crucial way: the receiver answers REGARDLESS
+                        # of the sender's `ver` stamp (no ESTALE), because a
+                        # prober that has not yet learned a promoted
+                        # incarnation must still be able to observe the host
+                        # as alive.  Each server probes its peers on a
+                        # background thread; the cluster's auto-promote
+                        # monitor reads the resulting per-peer last-seen
+                        # table and triggers promote() only with a QUORUM of
+                        # observers agreeing a host is gone.
+    CHUNK_STAT = 37     # blind storage probe: "what length do you hold for
+                        # chunk (home, file_id, index)?" — the scrubber's
+                        # repair scan uses it to find replicas missing their
+                        # copy without moving data.
     # --- generic ---
     OK = 64
     ERROR = 65
@@ -445,17 +460,21 @@ class Message:
 
 
 # ---------------------------------------------------------------------------
-# Stripe layout record: {"ss": stripe_size, "hosts": [home, h1, ...]}.
-# Allocated at CREATE, stored in the dentry next to the 10-byte perm record
-# and in the home host's FileMeta; chunk `index` covers file bytes
-# [index*ss, (index+1)*ss) and lives on hosts[index % len(hosts)].
+# Stripe layout record: {"ss": stripe_size, "hosts": [home, h1, ...]} plus an
+# optional replication factor {"r": k}.  Allocated at CREATE, stored in the
+# dentry next to the 10-byte perm record and in the home host's FileMeta;
+# chunk `index` covers file bytes [index*ss, (index+1)*ss) and its j-th
+# replica (j in 0..r-1) lives on hosts[(index + j) % len(hosts)] — replica 0
+# is the PRIMARY, the only copy a layout without "r" (r=1, every pre-PR-9
+# file) ever had, so old layouts decode and place identically.
 # ---------------------------------------------------------------------------
 
 def stripe_spans(layout: Dict[str, Any], offset: int, end: int):
     """Split the byte span [offset, end) at stripe boundaries: yields
-    (chunk_index, host_id, offset_within_chunk, length) tuples in file
-    order — the unit both the scatter (write) and gather (read) paths
-    fan out by."""
+    (chunk_index, primary_host_id, offset_within_chunk, length) tuples in
+    file order — the unit both the scatter (write) and gather (read) paths
+    fan out by.  The host yielded is the chunk's PRIMARY replica; callers
+    that care about the full replica set use chunk_hosts()."""
     ss = layout["ss"]
     hosts = layout["hosts"]
     idx = offset // ss
@@ -464,6 +483,17 @@ def stripe_spans(layout: Dict[str, Any], offset: int, end: int):
         hi = min(end, (idx + 1) * ss)
         yield idx, hosts[idx % len(hosts)], lo - idx * ss, hi - lo
         idx += 1
+
+
+def chunk_hosts(layout: Dict[str, Any], index: int) -> List[int]:
+    """The ordered replica set of chunk `index`: primary first, then the
+    next r-1 hosts clockwise on the layout's host ring.  r is clamped to
+    the ring size (replicating a chunk onto the same host twice protects
+    nothing)."""
+    hosts = layout["hosts"]
+    n = len(hosts)
+    r = min(layout.get("r", 1), n)
+    return [hosts[(index + j) % n] for j in range(r)]
 
 
 def ok(header: Optional[Dict[str, Any]] = None, payload: Buf = b"") -> Message:

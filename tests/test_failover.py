@@ -17,6 +17,7 @@ Covers the three legs of the failover design:
 """
 
 import errno
+import os
 import random
 import threading
 import time
@@ -106,7 +107,14 @@ def test_standby_amnesia_triggers_snapshot_resync(rcluster):
     _drain_all(rcluster)
     home = _home(a, "/rs/f")
     standby = rcluster.servers[rcluster.replica_host(home)]
-    # simulate a standby crash-restart that lost its in-memory replica
+    # simulate a standby that lost BOTH its in-memory replica and its
+    # on-disk checkpoint (disk wipe, not a mere reboot — a rebooted
+    # standby reloads repl_state.json and resumes incrementally)
+    for store in standby._replicas.values():
+        try:
+            os.unlink(store._state_path())
+        except FileNotFoundError:
+            pass
     standby._replicas.clear()
     lib.write_file("/rs/g", b"after")
     a.drain()

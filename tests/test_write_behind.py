@@ -484,6 +484,150 @@ def test_backpressure_blocks_writer_over_tiny_budget(cluster):
 
 
 # ---------------------------------------------------------------------------
+# retryable latches: transient flush failures keep their bytes and restage
+# ---------------------------------------------------------------------------
+
+def _impatient(a: BAgent) -> BAgent:
+    a.failover_retry_max = 2
+    a.failover_backoff_s = 0.005
+    a.failover_backoff_cap_s = 0.01
+    return a
+
+
+def _wait_latch(a: BAgent, fd: int, timeout: float = 10.0):
+    fh = a._fh(fd)
+    deadline = time.time() + timeout
+    while fh.wb_error is None and time.time() < deadline:
+        time.sleep(0.01)
+    assert fh.wb_error is not None, "flush failure never latched"
+    return fh
+
+
+def test_transient_flush_failure_restages_and_retries(cluster):
+    """A flush that dies on a TRANSIENT errno (dead host, partition) must
+    keep its bytes: the latch is marked retryable and the next sync point
+    restages the stalled extents instead of surfacing the error — the
+    data lands once the host is back.  (A permanent errno still raises
+    and drops the bytes: test_flush_error_reraised_at_fsync_then_cleared.)"""
+    a = _impatient(_wb_agent(cluster))
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"")
+    assert a.drain() == 0
+    trap = _WriteTrap(cluster, _file_host(a, "/d/f"),
+                      fail_with=errno.ETIMEDOUT)
+    try:
+        fd = a.open("/d/f", O_WRONLY)
+        a.write(fd, b"survives")
+        fh = _wait_latch(a, fd)
+        assert fh.wb_retryable and fh.wb_stalled, \
+            "transient failure must keep its extents"
+        trap.restore()             # host is back
+        a.fsync(fd)                # restage + retry: must NOT raise
+        a.close(fd)
+        assert a.drain() == 0
+        assert lib.read_file("/d/f") == b"survives"
+    finally:
+        trap.restore()
+        a.shutdown()
+
+
+def test_restage_never_resurrects_over_newer_bytes(cluster):
+    """Stalled extents are OLDER than anything buffered while their flush
+    was failing: restaging must punch out the overlap, or the retried
+    flush would splice pre-failure bytes over the newer write (the
+    coalescer's later-wins rule keys on list order, and a restaged extent
+    at a higher offset would be processed later)."""
+    a = _impatient(_wb_agent(cluster))
+    lib = BLib(a)
+    lib.makedirs("/d")
+    lib.write_file("/d/f", b"")
+    assert a.drain() == 0
+    trap = _WriteTrap(cluster, _file_host(a, "/d/f"),
+                      fail_with=errno.ETIMEDOUT, gated=True)
+    try:
+        fd = a.open("/d/f", O_WRONLY)
+        a._fh(fd).offset = 5
+        a.write(fd, b"A" * 10)     # [5, 15): flush parks at the gate
+        fh = a._fh(fd)
+        deadline = time.time() + 10
+        while not fh.wb_inflight and time.time() < deadline:
+            time.sleep(0.01)
+        assert fh.wb_inflight, "flush never started"
+        a._fh(fd).offset = 0
+        a.write(fd, b"B" * 10)     # [0, 10): NEWER, buffered mid-flight
+        trap.gate.set()            # the A-flush now fails (transient)
+        _wait_latch(a, fd)
+        trap.restore()
+        a.fsync(fd)                # restage: A minus [0,10), then flush
+        a.close(fd)
+        assert a.drain() == 0
+        assert lib.read_file("/d/f") == b"B" * 10 + b"A" * 5
+    finally:
+        trap.restore()
+        a.shutdown()
+
+
+def test_transient_latch_survives_until_promotion(tmp_path):
+    """The awaiting-promotion story end to end: the home dies with dirty
+    bytes buffered, the flush fails transient (bytes kept), the standby is
+    promoted, and the next sync point's restaged flush lands through the
+    client's ordinary redirect path — zero data loss across a failover."""
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4, replication=True,
+                      lease_ttl_s=0.3)
+    try:
+        a = _impatient(_wb_agent(c))
+        lib = BLib(a)
+        lib.makedirs("/p")
+        lib.write_file("/p/f", b"")
+        assert a.drain() == 0
+        home = _file_host(a, "/p/f")
+        assert c.servers[home].repl_drain()
+        fd = a.open("/p/f", O_WRONLY)
+        c.kill_server(home)
+        a.write(fd, b"over the failover")
+        fh = _wait_latch(a, fd)
+        assert fh.wb_retryable, "dead-host errno must mark the latch retryable"
+        c.promote(home)
+        a.fsync(fd)                # restage + flush redirects to the standby
+        a.close(fd)
+        assert a.drain() == 0
+        fresh = BAgent(c)
+        assert BLib(fresh).read_file("/p/f") == b"over the failover"
+        fresh.shutdown()
+        a.shutdown()
+    finally:
+        c.shutdown()
+
+
+def test_subtract_extents_punches_all_overlap_shapes():
+    from repro.core.bagent import _Extent, _subtract_extents
+
+    def ext(off, blob):
+        return _Extent(off, bytearray(blob))
+
+    def flat(extents):
+        return [(e.offset, bytes(e.data)) for e in extents]
+
+    # disjoint: untouched
+    assert flat(_subtract_extents([ext(0, b"aa")], [ext(5, b"bb")])) \
+        == [(0, b"aa")]
+    # newer covers the tail / the head / the middle / everything
+    assert flat(_subtract_extents([ext(0, b"aaaa")], [ext(2, b"bbbb")])) \
+        == [(0, b"aa")]
+    assert flat(_subtract_extents([ext(4, b"aaaa")], [ext(2, b"bbbb")])) \
+        == [(6, b"aa")]
+    assert flat(_subtract_extents([ext(0, b"aaaaaa")], [ext(2, b"bb")])) \
+        == [(0, b"aa"), (4, b"aa")]
+    assert flat(_subtract_extents([ext(2, b"aa")], [ext(0, b"bbbbbb")])) \
+        == []
+    # several newer extents carve one stalled run
+    assert flat(_subtract_extents([ext(0, b"aaaaaaaa")],
+                                  [ext(1, b"b"), ext(5, b"bb")])) \
+        == [(0, b"a"), (2, b"aaa"), (7, b"a")]
+
+
+# ---------------------------------------------------------------------------
 # opened-file list wrap-up + TCP end-to-end
 # ---------------------------------------------------------------------------
 
