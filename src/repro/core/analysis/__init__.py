@@ -1,0 +1,15 @@
+"""Static analysis over the BuffetFS core (`repro.core`).
+
+The BuffetFS thesis is that correctness-critical checks can be evaluated
+locally instead of paid for at runtime — this package applies the same
+idea to the codebase's own invariants.  `buffetlint` is an AST-based
+analyzer with three passes (lock discipline, wire contract, counter
+hygiene) run by CI via ``tools/buffetlint --check``; `lockrec` is the
+runtime lock-order recorder one test uses to cross-validate the static
+acquisition order against orders actually observed under load.
+"""
+from .buffetlint import LOCK_REGISTRY, Finding, lint_paths, main
+from .lockrec import LockOrderRecorder
+
+__all__ = ["LOCK_REGISTRY", "Finding", "lint_paths", "main",
+           "LockOrderRecorder"]

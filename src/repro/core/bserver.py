@@ -552,6 +552,7 @@ class BServer:
             "lease_expired_drops": self.lease_expired_drops,
             "promote_waits": self.promote_waits,
             "promoted_records": self.promoted_records,
+            "heartbeats_sent": self.heartbeats_sent,
         }
         if self._repl is not None:
             out.update(self._repl.stats())
@@ -1207,6 +1208,11 @@ class BServer:
                 or not all(isinstance(g, int) and g >= 0 for g in gids)):
             return error(errno.EINVAL, "uid/gids must be non-negative ints")
         with self._groups_mutex:
+            # buffetlint: ignore[LOCK001] the table mutex must span the
+            # invalidate fan-out AND the apply: released between them, a
+            # concurrent LOOKUP_GROUPS could snapshot the old table after
+            # its holder acked the withdrawal — breaking revoke-before-ack
+            # for the one cluster-global structure this mutex guards
             self._invalidate_group_watchers()
             with self._lock:
                 if gids:

@@ -1,0 +1,547 @@
+"""buffetlint analyzer tests: per-rule fixture snippets (positive,
+negative, suppression), baseline allow-list semantics, CLI exit codes on
+seeded violations, and the meta-test pinning the live tree clean against
+the committed baseline.
+"""
+
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.core.analysis.buffetlint import Finding, lint_paths, main
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_lint(tmp_path, files, bench=None):
+    root = tmp_path / "fixture"
+    root.mkdir(exist_ok=True)
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    bench_paths = []
+    if bench:
+        broot = tmp_path / "bench"
+        broot.mkdir(exist_ok=True)
+        for rel, src in bench.items():
+            (broot / rel).write_text(src)
+        bench_paths = [broot]
+    return lint_paths([root], bench_paths)
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# LOCK001: blocking RPC under a server-scope lock
+# ---------------------------------------------------------------------------
+
+
+def test_lock001_rpc_under_server_lock(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def bad(self, addr, msg):
+        with self._lock:
+            return self.transport.request(addr, msg)
+"""})
+    assert rules_of(fs) == ["LOCK001"]
+    assert fs[0].symbol == "BServer.bad"
+    assert "server_lock" in fs[0].message
+
+
+def test_lock001_snapshot_then_release_is_clean(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def good(self, addr, msg):
+        with self._lock:
+            watchers = dict(self._watchers)
+        for w in watchers:
+            self.transport.request(addr, msg)
+"""})
+    assert fs == []
+
+
+def test_lock001_transitive_through_helper(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def outer(self):
+        with self._lock:
+            self._helper()
+
+    def _helper(self):
+        self.transport.request(self.addr, self.msg)
+"""})
+    assert rules_of(fs) == ["LOCK001"]
+    assert "_helper" in fs[0].message
+
+
+def test_lock001_per_file_lock_fanout_is_allowed(tmp_path):
+    # truncate/fsync/scrub-clip fan out under the per-file lock BY
+    # design: per-entity scope, not server scope
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def fanout(self, fid, addr, msg):
+        with self._file_lock(fid):
+            self.transport.request(addr, msg)
+"""})
+    assert fs == []
+
+
+def test_lock001_known_fanout_helper_blocks(tmp_path):
+    # cross-module helpers are recognized by name even when their body
+    # is not in the scanned tree
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def bad(self, fid):
+        with self._groups_mutex:
+            self.server._repl_send(1, None)
+"""})
+    assert rules_of(fs) == ["LOCK001"]
+    assert "groups_mutex" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# LOCK002: acquisition order inversions
+# ---------------------------------------------------------------------------
+
+
+def test_lock002_direct_inversion(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def bad(self, home, fid, idx):
+        with self._chunk_lock(home, fid, idx):
+            with self._file_lock(fid):
+                pass
+"""})
+    assert rules_of(fs) == ["LOCK002"]
+    assert "file_lock" in fs[0].message and "chunk_lock" in fs[0].message
+
+
+def test_lock002_declared_order_is_clean(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def good(self, parent, fid, home, idx):
+        with self._dir_mutex(parent):
+            with self._file_lock(fid):
+                with self._chunk_lock(home, fid, idx):
+                    with self._lock:
+                        pass
+"""})
+    assert fs == []
+
+
+def test_lock002_reentrant_same_class_is_clean(tmp_path):
+    # the server lock is an RLock; same-class nesting is legal
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def reenter(self):
+        with self._lock:
+            with self._lock:
+                pass
+"""})
+    assert fs == []
+
+
+def test_lock002_transitive_through_call(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def outer(self):
+        with self._lock:
+            self.inner()
+
+    def inner(self):
+        with self._dir_mutex(1):
+            pass
+"""})
+    assert rules_of(fs) == ["LOCK002"]
+    assert "via `BServer.inner`" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_with_reason_silences(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def deliberate(self, addr, msg):
+        with self._lock:
+            # buffetlint: ignore[LOCK001] fan-out must hold the lock here
+            # because this fixture says so
+            return self.transport.request(addr, msg)
+"""})
+    assert fs == []
+
+
+def test_suppression_without_reason_is_meta_finding(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def deliberate(self, addr, msg):
+        with self._lock:
+            # buffetlint: ignore[LOCK001]
+            return self.transport.request(addr, msg)
+"""})
+    assert rules_of(fs) == ["META001"]
+
+
+def test_suppression_for_other_rule_does_not_silence(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def deliberate(self, addr, msg):
+        with self._lock:
+            # buffetlint: ignore[WIRE006] wrong rule id
+            return self.transport.request(addr, msg)
+"""})
+    assert rules_of(fs) == ["LOCK001"]
+
+
+# ---------------------------------------------------------------------------
+# Wire contract
+# ---------------------------------------------------------------------------
+
+FIXTURE_WIRE = """
+from enum import IntEnum
+
+class MsgType(IntEnum):
+    ALPHA = 1
+    BETA = 2
+    GAMMA = 3
+
+_SLOT_DEFS = (
+    ("offset", "Q"),
+    ("length", "Q"),
+)
+"""
+
+
+def test_wire005_duplicate_verb_number(tmp_path):
+    fs = run_lint(tmp_path, {"wire.py": """
+from enum import IntEnum
+
+class MsgType(IntEnum):
+    ALPHA = 1
+    BETA = 1
+
+_SLOT_DEFS = (("offset", "Q"),)
+"""})
+    assert "WIRE005" in rules_of(fs)
+
+
+def test_wire001_002_handler_coverage(tmp_path):
+    fs = run_lint(tmp_path, {
+        "wire.py": FIXTURE_WIRE,
+        "bserver.py": """
+class BServer:
+    @SERVER_OPS.register(MsgType.ALPHA)
+    def _op_alpha(self, h, p):
+        return ok()
+
+    @SERVER_OPS.register(MsgType.ALPHA)
+    def _op_alpha_again(self, h, p):
+        return ok()
+
+    @SERVER_OPS.register(MsgType.BETA)
+    def _op_beta(self, h, p):
+        return ok()
+"""})
+    rules = rules_of(fs)
+    assert "WIRE002" in rules           # ALPHA registered twice
+    assert "WIRE001" in rules           # GAMMA unhandled
+    gamma = next(f for f in fs if f.rule == "WIRE001")
+    assert gamma.symbol == "GAMMA"
+
+
+def test_wire003_missing_breaks_lease(tmp_path):
+    fs = run_lint(tmp_path, {
+        "wire.py": FIXTURE_WIRE,
+        "bserver.py": """
+class BServer:
+    @SERVER_OPS.register(MsgType.ALPHA, mutating=True)
+    def _op_alpha(self, h, p):
+        self._revoke_leases(h["file_id"])
+        return ok()
+
+    @SERVER_OPS.register(MsgType.BETA, mutating=True, breaks_lease=True)
+    def _op_beta(self, h, p):
+        self._revoke_leases(h["file_id"])
+        return ok()
+
+    @SERVER_OPS.register(MsgType.GAMMA, mutating=True, breaks_lease=True)
+    def _op_gamma(self, h, p):
+        return ok()
+"""})
+    out = [(f.rule, f.symbol, f.detail) for f in fs]
+    assert ("WIRE003", "ALPHA", "breaks_lease-missing") in out
+    assert ("WIRE003", "GAMMA", "breaks_lease-stale") in out
+    assert not any(sym == "BETA" for _, sym, _ in out)
+
+
+def test_wire003_journal_requires_mutating(tmp_path):
+    fs = run_lint(tmp_path, {
+        "wire.py": FIXTURE_WIRE,
+        "bserver.py": """
+class BServer:
+    @SERVER_OPS.register(MsgType.ALPHA)
+    def _op_alpha(self, h, p):
+        self._journal({"op": "x"})
+        return ok()
+
+    @SERVER_OPS.register(MsgType.BETA, mutating=True)
+    def _op_beta(self, h, p):
+        self._journal({"op": "x"})
+        return ok()
+
+    @SERVER_OPS.register(MsgType.GAMMA)
+    def _op_gamma(self, h, p):
+        return ok()
+"""})
+    bad = [f for f in fs if f.rule == "WIRE003"]
+    assert [f.symbol for f in bad] == ["ALPHA"]
+    assert bad[0].detail == "mutating-missing"
+
+
+def test_wire003_closure_reachability(tmp_path):
+    # flags must see through the _two_phase(check, apply) scaffold:
+    # the journal lives in a closure passed by name
+    fs = run_lint(tmp_path, {
+        "wire.py": FIXTURE_WIRE,
+        "bserver.py": """
+class BServer:
+    @SERVER_OPS.register(MsgType.ALPHA)
+    def _op_alpha(self, h, p):
+        def apply():
+            self._journal({"op": "x"})
+        return self._two_phase(h["parent"], [h["name"]], apply)
+"""})
+    assert ("WIRE003", "ALPHA") in [(f.rule, f.symbol) for f in fs]
+
+
+def test_wire004_barrier_without_durability(tmp_path):
+    fs = run_lint(tmp_path, {
+        "wire.py": FIXTURE_WIRE,
+        "bserver.py": """
+import os
+
+class BServer:
+    @SERVER_OPS.register(MsgType.ALPHA, barrier=True)
+    def _op_alpha(self, h, p):
+        return ok()
+
+    @SERVER_OPS.register(MsgType.BETA, barrier=True)
+    def _op_beta(self, h, p):
+        self._persist_now()
+        return ok()
+
+    @SERVER_OPS.register(MsgType.GAMMA, barrier=True)
+    def _op_gamma(self, h, p):
+        with open("f", "rb") as f:
+            os.fsync(f.fileno())
+        return ok()
+"""})
+    bad = [f for f in fs if f.rule == "WIRE004"]
+    assert [f.symbol for f in bad] == ["ALPHA"]
+
+
+def test_wire006_unregistered_header_key(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def encode(self, t):
+        h = {"offset": 1, "shiny_new_field": 2}
+        return Message(t, h)
+
+    def encode2(self):
+        return ok({"another_rogue": 1})
+
+    def patch(self, resp):
+        resp.header["third_rogue"] = 1
+"""})
+    keys = sorted(f.detail for f in fs if f.rule == "WIRE006")
+    assert keys == ["another_rogue", "shiny_new_field", "third_rogue"]
+
+
+def test_wire006_slots_and_ext_allowed_are_clean(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def encode(self, t):
+        return Message(t, {"offset": 1, "epoch": 2, "msg": "cold"})
+"""})
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# Counter hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_cnt001_surfaced_never_set(tmp_path):
+    fs = run_lint(tmp_path, {
+        "bserver.py": """
+class BServer:
+    def __init__(self):
+        self.ghost_counter = 0
+""",
+        "blib.py": """
+class BLib:
+    def io_stats(self):
+        return {"ghost": self.agent.ghost_counter}
+"""})
+    assert rules_of(fs) == ["CNT001"]
+    assert "ghost_counter" in fs[0].detail
+
+
+def test_cnt002_incremented_never_surfaced(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def __init__(self):
+        self.orphan_counter = 0
+
+    def tick(self):
+        self.orphan_counter += 1
+"""})
+    assert rules_of(fs) == ["CNT002"]
+    assert "orphan_counter" in fs[0].detail
+
+
+def test_cnt002_direct_gate_read_counts_as_surfaced(tmp_path):
+    fs = run_lint(tmp_path, {"bserver.py": """
+class BServer:
+    def __init__(self):
+        self.probed = 0
+
+    def tick(self):
+        self.probed += 1
+
+def gate(srv):
+    return srv.probed
+"""})
+    assert fs == []
+
+
+def test_cnt003_benchmark_names_missing_counter(tmp_path):
+    fs = run_lint(
+        tmp_path,
+        {"bserver.py": """
+class BServer:
+    def __init__(self):
+        self.real_counter = 0
+"""},
+        bench={"fig99.py": """
+def check(cluster):
+    a = _sum_srv(cluster, "real_counter")
+    b = _sum_srv(cluster, "imaginary_counter")
+    return a + b
+"""})
+    assert rules_of(fs) == ["CNT003"]
+    assert fs[0].detail == "imaginary_counter"
+
+
+# ---------------------------------------------------------------------------
+# Baseline allow-list + CLI semantics
+# ---------------------------------------------------------------------------
+
+SEEDED = """
+class BServer:
+    def bad(self, addr, msg):
+        with self._lock:
+            return self.transport.request(addr, msg)
+"""
+
+
+def _fixture_root(tmp_path):
+    root = tmp_path / "tree"
+    root.mkdir()
+    (root / "bserver.py").write_text(SEEDED)
+    (tmp_path / "nobench").mkdir(exist_ok=True)
+    return root
+
+
+def test_check_fails_on_new_finding_then_passes_baselined(tmp_path, capsys):
+    root = _fixture_root(tmp_path)
+    bl = tmp_path / "baseline.json"
+    args = [str(root), "--baseline", str(bl),
+            "--benchmarks", str(tmp_path / "nobench")]
+    assert main(["--check"] + args) == 1
+    out = capsys.readouterr().out
+    assert "LOCK001" in out and "bserver.py:" in out
+
+    # --update-baseline grandfathers it; --check then passes
+    assert main(["--update-baseline"] + args) == 0
+    blob = json.loads(bl.read_text())
+    assert len(blob["allow"]) == 1
+    assert blob["allow"][0]["rule"] == "LOCK001"
+    assert main(["--check"] + args) == 0
+
+
+def test_baseline_fingerprint_is_line_number_free(tmp_path):
+    root = _fixture_root(tmp_path)
+    bl = tmp_path / "baseline.json"
+    args = [str(root), "--baseline", str(bl),
+            "--benchmarks", str(tmp_path / "nobench")]
+    assert main(["--update-baseline"] + args) == 0
+    # shift the finding down: unrelated edits must not break the baseline
+    (root / "bserver.py").write_text("# a comment\n# another\n" + SEEDED)
+    assert main(["--check"] + args) == 0
+    # but a DIFFERENT violation in the same file is still new
+    (root / "bserver.py").write_text(SEEDED + """
+    def bad2(self, addr, msg):
+        with self._groups_mutex:
+            return self.transport.request(addr, msg)
+""")
+    assert main(["--check"] + args) == 1
+
+
+def test_cli_subprocess_seeded_violation_exits_nonzero(tmp_path):
+    """Acceptance: tools/buffetlint --check fails with file:line output
+    when a seeded violation is introduced in a fixture tree."""
+    root = _fixture_root(tmp_path)
+    (root / "counters.py").write_text("""
+class BServer:
+    def __init__(self):
+        self.never_read = 0
+
+    def tick(self):
+        self.never_read += 1
+""")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "buffetlint"), "--check",
+         str(root), "--baseline", str(tmp_path / "absent.json"),
+         "--benchmarks", str(tmp_path / "nobench")],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "LOCK001" in proc.stdout and "CNT002" in proc.stdout
+    assert re.search(r"bserver\.py:\d+: LOCK001", proc.stdout)  # file:line
+
+
+def test_finding_fingerprint_shape():
+    f = Finding("LOCK001", "bserver.py", 12, "BServer.bad", "m", "h",
+                detail="request@server_lock")
+    assert f.fingerprint == "LOCK001:bserver.py:BServer.bad:request@server_lock"
+    assert "bserver.py:12" in f.render()
+
+
+# ---------------------------------------------------------------------------
+# Meta: the live tree is clean against the committed baseline
+# ---------------------------------------------------------------------------
+
+
+def test_live_tree_clean_against_committed_baseline():
+    code = main([
+        str(REPO / "src" / "repro" / "core"),
+        "--check",
+        "--baseline",
+        str(REPO / "benchmarks" / "results" / "buffetlint_baseline.json"),
+        "--benchmarks", str(REPO / "benchmarks"),
+    ])
+    assert code == 0, "live tree has new buffetlint findings"
+
+
+def test_live_tree_suppressions_all_carry_reasons():
+    findings = lint_paths([REPO / "src" / "repro" / "core"],
+                          [REPO / "benchmarks"])
+    metas = [f for f in findings if f.rule == "META001"]
+    assert metas == []

@@ -1,0 +1,75 @@
+"""Runtime cross-validation of buffetlint's declared lock order.
+
+Instruments every lock class on every server of a live cluster with the
+LockOrderRecorder, drives the same namespace / striping / permissions
+workloads the functional suites use, and asserts that the observed
+(held -> acquired) nesting pairs all respect the statically declared
+order (dir_mutex/groups_mutex -> file_lock -> chunk_lock -> server_lock).
+If a future change nests locks the other way, this fails at runtime even
+if buffetlint's conservative call graph missed it — and if the registry's
+ranks drift from reality, the expected-pair assertions catch that too.
+"""
+
+import pytest
+
+from repro.core import BAgent, BLib, BuffetCluster
+from repro.core.analysis import LockOrderRecorder
+from repro.core.analysis.buffetlint import LOCK_RANK
+
+SS = 64 * 1024
+
+
+@pytest.fixture()
+def rig(tmp_path):
+    c = BuffetCluster(root_dir=str(tmp_path), n_servers=4,
+                      stripe_count=4, stripe_size=SS)
+    rec = LockOrderRecorder()
+    for srv in c.servers.values():
+        rec.instrument_server(srv)
+    yield c, rec
+    c.shutdown()
+
+
+def _workload(cluster):
+    """Namespace churn + striped I/O + permissions — the lock-heavy
+    paths: dir mutexes, per-file serialization, chunk fan-out on the
+    stripe hosts, the group-table mutex, and the scrubber."""
+    lib = BLib(BAgent(cluster))
+    lib.makedirs("/a/b")
+    data = bytes(i % 251 for i in range(3 * SS + 17))  # crosses stripes
+    lib.write_file("/a/b/striped", data)
+    assert lib.read_file("/a/b/striped") == data
+    lib.write_file("/a/b/striped", data[:SS])          # O_TRUNC clip path
+    with lib.open("/a/b/synced", "wb") as f:
+        f.write(b"durable")
+        f.fsync()
+    lib.setacl("/a/b/striped", [["u", 7, 4, 0]])
+    lib.setgroups(7, [500])
+    lib.rename("/a/b/striped", "renamed")
+    lib.unlink("/a/b/renamed")
+    lib.scrub()
+    lib.agent.drain()
+    lib.agent.shutdown()
+
+
+def test_observed_nestings_respect_declared_order(rig):
+    cluster, rec = rig
+    _workload(cluster)
+
+    assert rec.pairs, "instrumentation recorded no lock nestings"
+    # the nestings the code relies on every day must actually appear —
+    # a silent recorder would make the violation check vacuous
+    for expected in [("dir_mutex", "server_lock"),
+                     ("file_lock", "server_lock"),
+                     ("groups_mutex", "server_lock")]:
+        assert expected in rec.pairs, f"workload never nested {expected}"
+
+    assert rec.violations() == [], (
+        "runtime lock order contradicts the LOCK_REGISTRY declaration")
+
+
+def test_every_observed_pair_has_a_registered_rank(rig):
+    cluster, rec = rig
+    _workload(cluster)
+    for held, acquired in rec.pairs:
+        assert held in LOCK_RANK and acquired in LOCK_RANK
